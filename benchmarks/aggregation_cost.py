@@ -1,0 +1,69 @@
+"""Aggregation-protocol communication cost: MA vs EC variants, per arch.
+
+The paper's Section 4.3 argues EC's extra cost over MA is only the
+relabeling pass.  On a TPU mesh the picture sharpens into bytes-on-wire
+per aggregation round (per ensemble-axis link):
+
+  MA              |params| bytes all-reduced (x2 for ring all-reduce)
+  EC naive        K x |params| broadcast (the paper's GPU realization)
+  EC ring dense   K x relabel_tokens x V x 4  (output distributions)
+  EC ring top-M   K x relabel_tokens x (M*8+4) (this framework's default)
+
+Numbers are analytic from the arch configs (verified against the dry-run
+HLO collective sums for gemma3-1b; see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.common.types import SHAPES
+from repro.configs import registry
+from repro.core.compression import bytes_per_token
+
+
+def param_bytes(arch: str) -> int:
+    from repro.models import transformer as tf
+    cfg = registry.get_config(arch)
+    params = jax.eval_shape(lambda k: tf.init(k, cfg),
+                            jax.random.PRNGKey(0))
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree.leaves(params))
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--members", type=int, default=16)
+    ap.add_argument("--top-m", type=int, default=64)
+    ap.add_argument("--relabel-fraction", type=float, default=0.7)
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args(argv)
+
+    K = args.members
+    shape = SHAPES["train_4k"]
+    per_member_tokens = shape.global_batch // K * shape.seq_len
+    relabel_tokens = int(per_member_tokens * args.relabel_fraction)
+
+    archs = ("gemma3-1b", "llama3-405b") if args.fast else registry.ARCH_IDS
+    print(f"# aggregation bytes per round, K={K}, "
+          f"relabel {relabel_tokens:,} tokens/member, top-M={args.top_m}")
+    print(f"{'arch':20s} {'MA (x2 AR)':>12s} {'EC naive':>12s} "
+          f"{'EC dense':>12s} {'EC top-M':>12s} {'vs naive':>9s}")
+    for arch in archs:
+        cfg = registry.get_config(arch)
+        pb = param_bytes(arch)
+        ma = 2 * pb
+        naive = K * pb
+        dense = K * relabel_tokens * cfg.vocab_size * 4
+        topm = K * relabel_tokens * (bytes_per_token(args.top_m) + 4)
+        print(f"{arch:20s} {ma/2**30:10.2f}Gi {naive/2**30:10.2f}Gi "
+              f"{dense/2**30:10.2f}Gi {topm/2**30:10.2f}Gi "
+              f"{naive/topm:8.0f}x")
+    print("\nEC's local phase moves ZERO bytes between aggregations — "
+          "sync-SGD moves 2x|params| per STEP; with tau=40 that is "
+          "~40x MA's round traffic.")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Shared harness for the paper-table benchmarks."""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.common.types import ECConfig, ModelConfig
+from repro.data import image_member_datasets
+from repro.optim import sgd_momentum
+from repro.runtime.trainer import Trainer
+
+
+def cnn_cfg() -> ModelConfig:
+    return ModelConfig(name="nin-bench", family="cnn", n_layers=9,
+                       d_model=96, vocab_size=20)
+
+
+def make_trainer(aggr: str, K: int, tau: int, key, train, test,
+                 label_mode: str = "dense", lr: float = 0.05,
+                 seed: int = 0) -> Trainer:
+    cfg = cnn_cfg()
+    ec = ECConfig(tau=tau, lam=0.5, p_steps=max(tau // 2, 1),
+                  relabel_fraction=0.7, label_mode=label_mode,
+                  aggregator=aggr)
+    return Trainer(cfg, ec, sgd_momentum(lr, momentum=0.9), K, key, train,
+                   test, batch_size=32, seed=seed)
+
+
+def make_data(key, K: int, per_member: int = 512, n_classes: int = 20,
+              img: int = 16):
+    return image_member_datasets(key, K, per_member, n_classes=n_classes,
+                                 img=img, noise=0.6)
+
+
+def std_parser(desc: str) -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=desc)
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--tau", type=int, default=10)
+    ap.add_argument("--members", type=int, default=4)
+    ap.add_argument("--fast", action="store_true",
+                    help="CI-sized run (fewer rounds/steps)")
+    ap.add_argument("--seed", type=int, default=0)
+    return ap
+
+
+class Timer:
+    def __init__(self):
+        self.t0 = time.time()
+
+    def __call__(self) -> float:
+        return time.time() - self.t0

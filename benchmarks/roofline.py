@@ -1,0 +1,55 @@
+"""Render the §Roofline table from dry-run JSON results.
+
+  python -m benchmarks.roofline --in results/dryrun_single.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def fmt_row(r) -> str:
+    if r["status"] == "skip":
+        return (f"| {r['arch']} | {r['shape']} | — | — | — | — | skip |"
+                f" {r['reason']} |")
+    if r["status"] == "fail":
+        return (f"| {r['arch']} | {r['shape']} | — | — | — | — | FAIL |"
+                f" {r['error'][:60]} |")
+    tc, tm, tl = r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]
+    return ("| {arch} | {shape} | {gib:.1f}{fit} | {tc:.3g} | {tm:.3g} | "
+            "{tl:.3g} | {dom} | {ratio:.2f} |").format(
+        arch=r["arch"], shape=r["shape"],
+        gib=r["bytes_per_device"] / 2 ** 30,
+        fit="" if r["fits_hbm"] else "!",
+        tc=tc, tm=tm, tl=tl, dom=r["dominant"],
+        ratio=r.get("useful_flops_ratio", 0.0))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--in", dest="inp", required=False,
+                    default="results/dryrun_single.json")
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args(argv)
+    try:
+        recs = json.load(open(args.inp))
+    except FileNotFoundError:
+        print(f"(no dry-run results at {args.inp}; run "
+              f"python -m repro.launch.dryrun --all --out {args.inp})")
+        return 0
+    print("| arch | shape | GiB/dev | t_comp(s) | t_mem(s) | t_coll(s) "
+          "| dominant | 6ND/HLO |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        print(fmt_row(r))
+    ok = [r for r in recs if r["status"] == "ok"]
+    if ok:
+        fits = sum(r["fits_hbm"] for r in ok)
+        print(f"\n{len(ok)} compiled, {fits} fit 16 GiB HBM; "
+              f"{sum(r['status'] == 'skip' for r in recs)} documented skips;"
+              f" {sum(r['status'] == 'fail' for r in recs)} failures")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

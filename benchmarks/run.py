@@ -1,0 +1,38 @@
+"""Run the benchmark suite (fast mode): one per paper table/figure plus
+the framework-level cost/kernel/roofline reports.
+
+  PYTHONPATH=src python -m benchmarks.run          # fast CI subset
+  PYTHONPATH=src python -m benchmarks.run --full   # paper-scale settings
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main():
+    full = "--full" in sys.argv
+    flag = [] if full else ["--fast"]
+    from benchmarks import (aggregation_cost, fig12, kernel_bench,
+                            roofline, table1)
+    suite = [
+        ("Table 1 (EC vs MA vs S-DNN)", table1.main, flag),
+        ("Fig 1/2 (global-vs-local gaps)", fig12.main, flag),
+        ("Aggregation communication cost", aggregation_cost.main, flag),
+        ("Kernel structural roofline", kernel_bench.main, flag),
+        ("Dry-run roofline table", roofline.main, flag),
+    ]
+    failures = 0
+    for name, fn, argv in suite:
+        print(f"\n=== {name} ===")
+        try:
+            fn(argv)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+    print(f"\n== benchmarks done ({failures} failures) ==")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

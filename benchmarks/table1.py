@@ -1,0 +1,62 @@
+"""Paper Table 1: final test error of EC-DNN vs MA-DNN (vs S-DNN).
+
+Trains EC / MA / sequential (K=1) under identical budgets on the synthetic
+CIFAR-100 stand-in and reports EC_L, EC_G, MA_L, MA_G, S-DNN test errors.
+The claim validated is the ORDERING (EC_G < EC_L <= S and EC_* < MA_*),
+not the absolute numbers (synthetic data; see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import Timer, make_data, make_trainer, std_parser
+
+
+def run(rounds: int, tau: int, K: int, seed: int = 0) -> dict:
+    key = jax.random.PRNGKey(seed)
+    train, test = make_data(key, K)
+    out = {}
+    for aggr in ("ec", "ma"):
+        tr = make_trainer(aggr, K, tau, key, train, test, seed=seed)
+        for _ in range(rounds):
+            tr.run_round()
+        ev = tr.evaluate(record=False)
+        out[f"{aggr.upper()}-DNN_L"] = ev["local_err"]
+        out[f"{aggr.upper()}-DNN_G"] = ev["global_err"]
+    # S-DNN: one worker, same total budget (rounds*tau steps, all data)
+    flat_train = jax.tree.map(
+        lambda a: a.reshape((1, -1) + a.shape[2:]), train)
+    tr = make_trainer("ec", 1, tau, key, flat_train, test, seed=seed)
+    tr.ec = tr.ec.__class__(**{**tr.ec.__dict__, "aggregator": "ma"})
+    for _ in range(rounds):
+        tr.run_round()
+    out["S-DNN"] = tr.evaluate(record=False)["local_err"]
+    return out
+
+
+def main(argv=None):
+    ap = std_parser(__doc__)
+    args = ap.parse_args(argv)
+    rounds = 3 if args.fast else args.rounds
+    tau = 6 if args.fast else args.tau
+    t = Timer()
+    print(f"# Table 1 (synthetic stand-in) K={args.members} tau={tau} "
+          f"rounds={rounds}")
+    res = run(rounds, tau, args.members, args.seed)
+    for k, v in res.items():
+        print(f"  {k:10s} test error = {v:.4f}")
+    if args.fast:
+        print(f"  (fast mode: {rounds * tau} steps is mechanics-checking "
+              f"only; ordering claims need --full / EXPERIMENTS.md "
+              f"§Faithful)  ({t():.1f}s)")
+    else:
+        ec_beats_ma = (res["EC-DNN_L"] <= res["MA-DNN_L"] + 0.02
+                       and res["EC-DNN_G"] <= res["MA-DNN_G"] + 0.02)
+        print(f"  ordering EC<=MA: {'OK' if ec_beats_ma else 'VIOLATED'} "
+              f"({t():.1f}s)")
+    return res
+
+
+if __name__ == "__main__":
+    main()

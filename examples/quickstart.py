@@ -1,0 +1,56 @@
+"""Quickstart: EC-DNN in ~40 lines.
+
+Trains a 4-member ensemble on a synthetic image task, aggregates by
+ensemble-compression each round, and prints the paper's Section-3
+guarantee live: the ensemble's nll is never worse than the mean member
+nll, while the parameter-average (MA) of the same members has no such
+bound.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.common.types import ECConfig, ModelConfig
+from repro.core import aggregation as agg
+from repro.data import image_member_datasets
+from repro.optim import sgd_momentum
+from repro.runtime.trainer import Trainer
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    K = 4
+    cfg = ModelConfig(name="quickstart", family="cnn", n_layers=9,
+                      d_model=96, vocab_size=10)
+    train, test = image_member_datasets(key, K, per_member=256,
+                                        n_classes=10, img=16, noise=0.5)
+    ec = ECConfig(tau=8, lam=0.5, p_steps=4, relabel_fraction=0.7,
+                  label_mode="dense", aggregator="ec")
+    trainer = Trainer(cfg, ec, sgd_momentum(0.05, momentum=0.9), K, key,
+                      train, test, batch_size=32)
+
+    print(f"EC-DNN: K={K} members, tau={ec.tau}, lambda0={ec.lam}, "
+          f"p={ec.p_steps}")
+    for r in range(5):
+        loss = trainer.run_round()
+        ev = trainer.evaluate()
+        gap = ev["local_loss"] - ev["global_loss"]
+        print(f"round {r}: train={loss:.3f}  member nll="
+              f"{ev['local_loss']:.3f}  ensemble nll="
+              f"{ev['global_loss']:.3f}  Jensen gap={gap:+.4f} (>= 0 "
+              f"guaranteed)")
+
+    # contrast: parameter-averaging the same members (MA) has no bound
+    ma_params = agg.ma_aggregate(trainer.state["params"])
+    one = jax.tree.map(lambda x: x[0], ma_params)
+    nll, err = trainer._single_eval(one, jax.tree.map(lambda a: a[:256],
+                                                      test))
+    print(f"\nMA of the same members: nll={float(nll):.3f} "
+          f"(vs ensemble {ev['global_loss']:.3f}) — no guarantee, and "
+          f"usually worse.")
+    best, k = trainer.best_member()
+    print(f"EC-DNN_L final model: member {k} (lowest training loss)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""End-to-end LM training driver: EC-DNN on a transformer with top-M
+pseudo-label compression — the framework's production path at CPU scale.
+
+Uses the gemma3-1b REDUCED config (same family: 5:1 SWA pattern, GQA,
+geglu, tied embeddings) with 4 members, the ring/allgather relabel, topk
+labels, AdamW + cosine, checkpointing and resume.  The identical command
+with --arch gemma3-1b and the production mesh is what launch/train.py
+runs on hardware; the dry-run (launch/dryrun.py) certifies that config
+compiles at 512 chips.
+
+  PYTHONPATH=src python examples/train_ec_dnn.py --rounds 3
+"""
+import argparse
+import tempfile
+
+import jax
+
+from repro.common.types import ECConfig
+from repro.configs import registry
+from repro.data import lm_member_datasets
+from repro.optim import adamw, linear_warmup_cosine
+from repro.runtime.trainer import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--members", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--tau", type=int, default=12)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--top-m", type=int, default=8)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = registry.get_config(args.arch, reduced=True)
+    key = jax.random.PRNGKey(0)
+    train, test = lm_member_datasets(key, args.members, per_member=128,
+                                     seq_len=args.seq_len,
+                                     vocab=cfg.vocab_size)
+    ec = ECConfig(tau=args.tau, lam=0.5, p_steps=args.tau // 2,
+                  relabel_fraction=0.5, label_mode="topk",
+                  top_m=args.top_m, aggregator="ec")
+    opt = adamw(linear_warmup_cosine(3e-3, warmup=8,
+                                     total_steps=args.rounds * args.tau))
+    ckpt = args.ckpt or tempfile.mkdtemp(prefix="ec_ckpt_")
+    tr = Trainer(cfg, ec, opt, args.members, key, train, test,
+                 batch_size=args.batch, ckpt_dir=ckpt)
+    if tr.resume():
+        print(f"resumed from round {tr.round}")
+
+    print(f"EC-DNN LM: {args.arch}(reduced) K={args.members} "
+          f"top-M={args.top_m} tau={args.tau}")
+    for r in range(tr.round, args.rounds):
+        loss = tr.run_round()
+        ev = tr.evaluate()
+        print(f"round {r}: train ce={loss:.4f} | member nll="
+              f"{ev['local_loss']:.4f} ensemble nll={ev['global_loss']:.4f}"
+              f" (gap {ev['local_loss']-ev['global_loss']:+.4f})")
+    tr.save()
+    tr.ckpt.close()
+    _, k = tr.best_member()
+    print(f"EC-DNN_L: member {k}; checkpoints in {ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.checkpoint.store import (CheckpointManager, restore_checkpoint,
+                                    save_checkpoint, latest_step,
+                                    reshard_members)
+
+__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint",
+           "latest_step", "reshard_members"]

@@ -1,0 +1,225 @@
+"""Fault-tolerant checkpointing: atomic, async, keep-N, elastic reshard.
+
+Layout (one directory per step):
+    <root>/step_000123/
+        index.json          # tree structure + leaf metadata + "committed"
+        shard_000.npz       # flattened leaves (chunked every ~512 MB)
+    <root>/step_000123.tmp/ # staging dir, atomically renamed on commit
+
+Crash-safety contract: a checkpoint is valid iff its directory has no
+".tmp" suffix AND index.json parses with committed=true.  `latest_step`
+only returns valid checkpoints, so a process killed mid-save restarts from
+the previous round — tests/test_checkpoint.py injects exactly that failure.
+
+Async mode hands the host copy of the pytree to a writer thread so the
+training loop only blocks for the device->host transfer, not the fsync.
+
+Elastic: `reshard_members` maps a leading-K member-stacked state onto K'
+members (truncate, or cycle-and-perturb to grow) — EC-DNN's ensemble is
+naturally elastic since members are independent between aggregations.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_CHUNK_BYTES = 512 * 1024 * 1024
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def _key_str(i: int) -> str:
+    return f"leaf_{i:05d}"
+
+
+def save_checkpoint(root: str, step: int, tree: Any,
+                    fail_before_commit: bool = False) -> str:
+    """Blocking atomic save. `fail_before_commit` is a test hook that
+    simulates a crash after data is written but before the commit rename."""
+    final = os.path.join(root, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    host = [np.asarray(jax.device_get(leaf)) for leaf in leaves]
+
+    shards, cur, cur_bytes = [], {}, 0
+    for i, arr in enumerate(host):
+        cur[_key_str(i)] = arr
+        cur_bytes += arr.nbytes
+        if cur_bytes >= _CHUNK_BYTES:
+            shards.append(cur)
+            cur, cur_bytes = {}, 0
+    if cur:
+        shards.append(cur)
+    for s, shard in enumerate(shards):
+        np.savez(os.path.join(tmp, f"shard_{s:03d}.npz"), **shard)
+
+    index = {
+        "step": step,
+        "treedef": jax.tree_util.tree_structure(tree).__repr__(),
+        "n_leaves": len(host),
+        "shards": len(shards),
+        "dtypes": [str(a.dtype) for a in host],
+        "shapes": [list(a.shape) for a in host],
+        "committed": True,
+    }
+    with open(os.path.join(tmp, "index.json"), "w") as f:
+        json.dump(index, f)
+    if fail_before_commit:
+        return tmp  # simulate crash: stage dir left behind, never renamed
+    if os.path.exists(final):
+        shutil.rmtree(final, ignore_errors=True)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(root: str) -> Optional[int]:
+    if not os.path.isdir(root):
+        return None
+    steps = []
+    for name in os.listdir(root):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            idx = os.path.join(root, name, "index.json")
+            try:
+                with open(idx) as f:
+                    if json.load(f).get("committed"):
+                        steps.append(int(name.split("_")[1]))
+            except (OSError, ValueError, json.JSONDecodeError):
+                continue
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(root: str, step: int, template: Any) -> Any:
+    """Restore into the structure of `template` (shapes must match)."""
+    path = os.path.join(root, f"step_{step:08d}")
+    with open(os.path.join(path, "index.json")) as f:
+        index = json.load(f)
+    arrays: dict = {}
+    for s in range(index["shards"]):
+        with np.load(os.path.join(path, f"shard_{s:03d}.npz")) as z:
+            arrays.update({k: z[k] for k in z.files})
+    leaves, treedef = _flatten(template)
+    out = []
+    for i, ref in enumerate(leaves):
+        arr = arrays[_key_str(i)]
+        out.append(jnp.asarray(arr, dtype=ref.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def gc_keep_last(root: str, keep: int) -> None:
+    if not os.path.isdir(root):
+        return
+    steps = sorted(
+        int(n.split("_")[1]) for n in os.listdir(root)
+        if n.startswith("step_") and not n.endswith(".tmp"))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(root, f"step_{s:08d}"),
+                      ignore_errors=True)
+    # stale staging dirs from crashes are garbage
+    for n in os.listdir(root):
+        if n.endswith(".tmp"):
+            shutil.rmtree(os.path.join(root, n), ignore_errors=True)
+
+
+class CheckpointManager:
+    """Async keep-N manager: save() returns immediately; a writer thread
+    drains the queue.  wait() barriers (used before exit / in tests)."""
+
+    def __init__(self, root: str, keep: int = 3, async_save: bool = True):
+        self.root = root
+        self.keep = keep
+        self.async_save = async_save
+        os.makedirs(root, exist_ok=True)
+        self._q: "queue.Queue" = queue.Queue()
+        self._err: list = []
+        if async_save:
+            self._worker = threading.Thread(target=self._drain, daemon=True)
+            self._worker.start()
+
+    def _drain(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                self._q.task_done()
+                return
+            step, host_tree = item
+            try:
+                save_checkpoint(self.root, step, host_tree)
+                gc_keep_last(self.root, self.keep)
+            except Exception as e:  # pragma: no cover
+                self._err.append(e)
+            self._q.task_done()
+
+    def save(self, step: int, tree: Any) -> None:
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        if self.async_save:
+            self._q.put((step, host))
+        else:
+            save_checkpoint(self.root, step, host)
+            gc_keep_last(self.root, self.keep)
+
+    def wait(self) -> None:
+        if self.async_save:
+            self._q.join()
+        if self._err:
+            raise self._err[0]
+
+    def close(self) -> None:
+        if self.async_save:
+            self._q.put(None)
+            self._q.join()
+
+    def latest(self) -> Optional[int]:
+        self.wait()
+        return latest_step(self.root)
+
+    def restore(self, template: Any, step: Optional[int] = None) -> Any:
+        s = step if step is not None else self.latest()
+        if s is None:
+            raise FileNotFoundError(f"no checkpoint under {self.root}")
+        return restore_checkpoint(self.root, s, template)
+
+
+def reshard_members(state: Any, k_new: int, perturb: float = 0.0,
+                    key=None) -> Any:
+    """Elastic K -> K' on a leading-member-axis pytree.
+
+    Shrink: keep the first K' members.  Grow: cycle existing members and
+    (optionally) perturb the copies so they diverge — an EC-specific luxury:
+    any member set is a valid ensemble, no optimizer state surgery needed.
+    """
+    def one(x):
+        k_old = x.shape[0]
+        if k_new <= k_old:
+            return x[:k_new]
+        reps = -(-k_new // k_old)
+        out = jnp.concatenate([x] * reps, axis=0)[:k_new]
+        return out
+
+    out = jax.tree.map(one, state)
+    if perturb > 0.0 and key is not None:
+        leaves, treedef = jax.tree_util.tree_flatten(out)
+        keys = jax.random.split(key, len(leaves))
+        k_old = jax.tree.leaves(state)[0].shape[0]
+        noised = []
+        for kk, leaf in zip(keys, leaves):
+            if jnp.issubdtype(leaf.dtype, jnp.floating) and k_new > k_old:
+                noise = perturb * jax.random.normal(
+                    kk, leaf.shape, jnp.float32).astype(leaf.dtype)
+                mask = (jnp.arange(k_new) >= k_old).reshape(
+                    (k_new,) + (1,) * (leaf.ndim - 1))
+                leaf = leaf + noise * mask
+            noised.append(leaf)
+        out = jax.tree_util.tree_unflatten(treedef, noised)
+    return out

@@ -1,0 +1,94 @@
+"""Architecture registry: --arch <id> -> (ModelConfig, policy helpers).
+
+Also owns the default parallelism policy (DESIGN §5):
+  - "small" archs (fit one TP group): EC ensemble axis = "data"
+    (K = |data|), params replicated per member + TP over "model".
+  - "big" archs: FSDP over "data" inside each member, ensemble axis =
+    "pod" (K = |pod| multi-pod; K = 1 single-pod).
+  - serving (prefill/decode cells): one model, batch over ("pod","data"),
+    TP over "model", FSDP over "data" for big archs.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Tuple
+
+from repro.common.types import ModelConfig, ParallelConfig, ShapeConfig
+
+_MODULES = {
+    "llama3-405b": "repro.configs.llama3_405b",
+    "gemma3-1b": "repro.configs.gemma3_1b",
+    "starcoder2-7b": "repro.configs.starcoder2_7b",
+    "deepseek-7b": "repro.configs.deepseek_7b",
+    "jamba-v0.1-52b": "repro.configs.jamba_52b",
+    "rwkv6-7b": "repro.configs.rwkv6_7b",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "qwen2-vl-2b": "repro.configs.qwen2_vl_2b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "paper_nin": "repro.configs.paper_nin",
+}
+
+ARCH_IDS = tuple(k for k in _MODULES if k != "paper_nin")
+
+
+def get_module(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch])
+
+
+def get_config(arch: str, reduced: bool = False) -> ModelConfig:
+    m = get_module(arch)
+    return m.reduced() if reduced else m.CONFIG
+
+
+def size_class(arch: str) -> str:
+    return get_module(arch).SIZE_CLASS
+
+
+def skip_reason(arch: str, shape_name: str) -> str | None:
+    return get_module(arch).SKIP_SHAPES.get(shape_name)
+
+
+def parallel_policy(arch: str, shape: ShapeConfig,
+                    multi_pod: bool) -> ParallelConfig:
+    big = size_class(arch) == "big"
+    if shape.kind == "train":
+        # EC training layout
+        if big:
+            # members don't fit one TP group: FSDP over "data" inside the
+            # member, ensemble across pods (K=1 single-pod: the relabel
+            # step still lowers, EC degenerates to self-distillation).
+            return ParallelConfig(
+                ensemble_axis="pod" if multi_pod else "",
+                ensemble_size=2 if multi_pod else 1,
+                fsdp_axis="data", model_axis="model",
+                batch_axes=("data",),  # FSDP = DP over the param-shard axis
+                seq_axis="model",      # SP: layer-boundary residuals
+                remat=True)
+        # member = one TP group; K = |data| members; member batch gets DP
+        # over "pod" when present (constrain() drops it single-pod).
+        return ParallelConfig(ensemble_axis="data", ensemble_size=0,
+                              fsdp_axis="", model_axis="model",
+                              batch_axes=("pod",), remat=True)
+    # serving: single model
+    return ParallelConfig(ensemble_axis="", ensemble_size=1,
+                          fsdp_axis="data" if big else "",
+                          model_axis="model",
+                          batch_axes=("pod", "data"), remat=False)
+
+
+def all_cells() -> Tuple[Tuple[str, str], ...]:
+    """All (arch, shape) dry-run cells, including documented skips."""
+    from repro.common.types import SHAPES
+    cells = []
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            cells.append((arch, shape))
+    return tuple(cells)
+
+
+def runnable_cells() -> Tuple[Tuple[str, str], ...]:
+    return tuple((a, s) for a, s in all_cells()
+                 if skip_reason(a, s) is None)

@@ -1,0 +1,150 @@
+"""Top-M sparse pseudo-label accumulators.
+
+The paper relabels CIFAR (100 classes) with dense ensemble outputs.  At LM
+scale a dense per-token distribution is V floats (gemma3: 262k -> 1 MB/token
+fp32), which would make the aggregation step weight-broadcast-expensive —
+exactly what EC-DNN set out to avoid.  So the ring protocol carries a
+*top-M merge-and-prune accumulator*: per token, the M largest (prob, index)
+pairs seen so far plus a scalar `rest` holding the pruned mass.
+
+Merge is associative up to pruning; the pruned mass is tracked exactly, so
+the accumulated distribution always sums to the true total and the L1 error
+vs the dense oracle is bounded by the pruned mass (property-tested in
+tests/test_aggregation.py).
+
+Layout: vals (..., M) f32 descending, idx (..., M) i32, rest (..., ) f32.
+Padding entries have idx = -1, val = 0.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TopM(NamedTuple):
+    vals: jax.Array   # (..., M) f32, descending
+    idx: jax.Array    # (..., M) i32, -1 = empty
+    rest: jax.Array   # (...,)  pruned probability mass
+
+
+def from_dense(probs: jax.Array, m: int) -> TopM:
+    """probs (..., V) -> TopM keeping the M heaviest classes."""
+    vals, idx = jax.lax.top_k(probs, m)
+    rest = probs.sum(-1) - vals.sum(-1)
+    return TopM(vals.astype(jnp.float32), idx.astype(jnp.int32),
+                rest.astype(jnp.float32))
+
+
+def from_dense_sharded(probs: jax.Array, m: int, n_shards: int,
+                       shard_axis: str = "model") -> TopM:
+    """Distributed top-M: local top-M per vocab shard, then a tiny merge.
+
+    lax.top_k over a vocab dimension that is model-sharded makes GSPMD
+    all-gather the full (..., V) tensor first (for gemma3's 262k vocab
+    that is ~1 GB/token-batch of ICI traffic).  Reshaping to
+    (..., n_shards, V/n) with the shard dim constrained onto the same mesh
+    axis makes each shard's top-M local; only (..., n_shards*M) candidates
+    (a ~2000x smaller tensor) cross the network for the final global
+    top-M.  Exact same result as from_dense (the global top-M is always a
+    subset of the per-shard top-Ms).
+    """
+    from repro.common.sharding import constrain
+    V = probs.shape[-1]
+    if V % n_shards or (V // n_shards) < m:
+        return from_dense(probs, m)
+    vs = V // n_shards
+    p = probs.reshape(probs.shape[:-1] + (n_shards, vs))
+    p = constrain(p, *([None] * (probs.ndim - 1)), shard_axis, None)
+    lv, li = jax.lax.top_k(p, m)                      # local, no gather
+    li = li + jnp.arange(n_shards, dtype=jnp.int32)[:, None] * vs
+    cand_v = lv.reshape(probs.shape[:-1] + (n_shards * m,))
+    cand_i = li.reshape(probs.shape[:-1] + (n_shards * m,))
+    gv, gpos = jax.lax.top_k(cand_v, m)
+    gi = jnp.take_along_axis(cand_i, gpos, axis=-1)
+    rest = probs.sum(-1) - gv.sum(-1)
+    return TopM(gv.astype(jnp.float32), gi.astype(jnp.int32),
+                rest.astype(jnp.float32))
+
+
+def zeros(batch_shape, m: int) -> TopM:
+    return TopM(jnp.zeros(batch_shape + (m,), jnp.float32),
+                jnp.full(batch_shape + (m,), -1, jnp.int32),
+                jnp.zeros(batch_shape, jnp.float32))
+
+
+def merge(a: TopM, b: TopM) -> TopM:
+    """Union the 2M candidates, keep the M heaviest, demote the rest.
+
+    Duplicate indices are combined first (segment-sum over the union) so a
+    class present in both inputs is counted once with summed mass.
+    """
+    m = a.vals.shape[-1]
+    vals = jnp.concatenate([a.vals, b.vals], -1)          # (..., 2M)
+    idx = jnp.concatenate([a.idx, b.idx], -1)
+
+    # combine duplicates: sort by idx, segment-sum runs of equal idx
+    order = jnp.argsort(idx, axis=-1)
+    idx_s = jnp.take_along_axis(idx, order, -1)
+    vals_s = jnp.take_along_axis(vals, order, -1)
+    first = jnp.concatenate(
+        [jnp.ones_like(idx_s[..., :1], bool),
+         idx_s[..., 1:] != idx_s[..., :-1]], -1)
+    # run sums via cumsum differences: value of a run = csum at its end
+    # minus csum at the previous run's end (csum nondecreasing: vals >= 0)
+    csum = jnp.cumsum(vals_s, -1)
+    run_end = jnp.concatenate([first[..., 1:],
+                               jnp.ones_like(first[..., :1])], -1)
+    prev_end = jnp.concatenate(
+        [jnp.zeros_like(csum[..., :1]),
+         jnp.where(run_end, csum, 0.0)[..., :-1]], -1)
+    prev_end = jax.lax.associative_scan(jnp.maximum, prev_end, axis=-1)
+    cand_vals = jnp.where(run_end, csum - prev_end, 0.0)
+    cand_idx = jnp.where(run_end, idx_s, -1)
+    cand_vals = jnp.where(cand_idx < 0, 0.0, cand_vals)
+
+    keep_vals, pos = jax.lax.top_k(cand_vals, m)
+    keep_idx = jnp.take_along_axis(cand_idx, pos, -1)
+    dropped = cand_vals.sum(-1) - keep_vals.sum(-1)
+    return TopM(keep_vals, jnp.where(keep_vals > 0, keep_idx, -1),
+                a.rest + b.rest + dropped)
+
+
+def scale(t: TopM, s) -> TopM:
+    return TopM(t.vals * s, t.idx, t.rest * s)
+
+
+def to_dense(t: TopM, vocab: int, spread_rest: bool = False) -> jax.Array:
+    """Expand to (..., V). spread_rest distributes pruned mass uniformly."""
+    flat_idx = jnp.where(t.idx < 0, vocab, t.idx)  # park empties off-range
+    dense = jnp.zeros(t.vals.shape[:-1] + (vocab + 1,), jnp.float32)
+    dense = _scatter_add_lastdim(dense, flat_idx, t.vals)[..., :vocab]
+    if spread_rest:
+        dense = dense + t.rest[..., None] / vocab
+    return dense
+
+
+def _scatter_add_lastdim(dense, idx, vals):
+    flat_dense = dense.reshape(-1, dense.shape[-1])
+    flat_idx = idx.reshape(-1, idx.shape[-1])
+    flat_vals = vals.reshape(-1, vals.shape[-1])
+    rows = jnp.arange(flat_dense.shape[0])[:, None]
+    flat_dense = flat_dense.at[rows, flat_idx].add(flat_vals)
+    return flat_dense.reshape(dense.shape)
+
+
+def normalize(t: TopM) -> TopM:
+    total = t.vals.sum(-1) + t.rest
+    inv = 1.0 / jnp.maximum(total, 1e-30)
+    return TopM(t.vals * inv[..., None], t.idx, t.rest * inv)
+
+
+def l1_error_bound(t: TopM) -> jax.Array:
+    """Guaranteed bound on ||topm - dense_oracle||_1: 2x pruned mass."""
+    return 2.0 * t.rest
+
+
+def bytes_per_token(m: int) -> int:
+    """Wire size of one token's accumulator entry (f32 val + i32 idx)."""
+    return m * 8 + 4

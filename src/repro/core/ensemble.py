@@ -1,0 +1,94 @@
+"""Model aggregation G(w_1..w_K): ensemble (Eqn 6) vs model-average (Eqn 3).
+
+The paper's central observation, in code:
+  - `ensemble_probs` averages member OUTPUTS.  Every standard loss is convex
+    in the output distribution, so by Jensen
+        L(G_E(x), y) <= (1/K) sum_k L(f(w_k; x), y)
+    — `jensen_gap` returns the (always >= 0) slack, and
+    tests/test_guarantee.py property-checks it.
+  - `ma_average` averages member PARAMETERS.  No such bound exists for
+    non-convex f; benchmarks/fig12.py reproduces the paper's Figure 1
+    failure mode (MA global worse than the mean local model).
+
+All functions take a leading member axis K and are pure jnp — they run
+unchanged inside pjit (K = stacked dim) or inside a shard_map body
+(K = local members per shard).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def member_log_probs(logits: jax.Array) -> jax.Array:
+    return jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+
+
+def ensemble_probs(member_logits: jax.Array,
+                   weights: Optional[jax.Array] = None,
+                   average_probs: bool = True) -> jax.Array:
+    """(K, ..., V) member logits -> (..., V) ensemble distribution.
+
+    average_probs=True is the paper's Eqn 6 (mean of softmax outputs);
+    False averages logits first (geometric-mean ensemble) — supported as a
+    beyond-paper variant, NOT the default.
+    `weights` (K,) reweights members (straggler-drop renormalization);
+    they are normalized to sum 1.
+    """
+    K = member_logits.shape[0]
+    w = jnp.ones((K,), jnp.float32) if weights is None else weights
+    w = w / jnp.maximum(w.sum(), 1e-9)
+    wb = w.reshape((K,) + (1,) * (member_logits.ndim - 1))
+    if average_probs:
+        p = jax.nn.softmax(member_logits.astype(jnp.float32), axis=-1)
+        return (p * wb).sum(axis=0)
+    lg = (member_logits.astype(jnp.float32) * wb).sum(axis=0)
+    return jax.nn.softmax(lg, axis=-1)
+
+
+def ensemble_nll(member_logits: jax.Array, labels: jax.Array,
+                 weights: Optional[jax.Array] = None) -> jax.Array:
+    """Cross-entropy of the ensemble distribution against int labels."""
+    p = ensemble_probs(member_logits, weights)
+    gold = jnp.take_along_axis(p, labels[..., None], axis=-1)[..., 0]
+    return -jnp.log(jnp.maximum(gold, 1e-30)).mean()
+
+
+def mean_member_nll(member_logits: jax.Array, labels: jax.Array) -> jax.Array:
+    lp = member_log_probs(member_logits)
+    gold = jnp.take_along_axis(
+        lp, jnp.broadcast_to(labels, member_logits.shape[:-1])[..., None],
+        axis=-1)[..., 0]
+    return -gold.mean(axis=tuple(range(1, gold.ndim))).mean()
+
+
+def jensen_gap(member_logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """mean_k L(f_k) - L(ensemble)  — provably >= 0 (paper Eqns 4-5)."""
+    return mean_member_nll(member_logits, labels) \
+        - ensemble_nll(member_logits, labels)
+
+
+# ---------------------------------------------------------------------------
+# MA baseline
+# ---------------------------------------------------------------------------
+
+def ma_average(stacked_params, weights: Optional[jax.Array] = None):
+    """Parameter mean over the leading member axis, re-broadcast to K.
+
+    Under pjit with the member axis sharded, the mean lowers to one
+    all-reduce over the ensemble axis — the classic MA-DNN aggregation —
+    and the broadcast back is free (result is replicated).
+    """
+    def avg(w):
+        K = w.shape[0]
+        if weights is None:
+            m = w.mean(axis=0, keepdims=True)
+        else:
+            ww = weights / jnp.maximum(weights.sum(), 1e-9)
+            m = (w * ww.reshape((K,) + (1,) * (w.ndim - 1))).sum(
+                axis=0, keepdims=True)
+        return jnp.broadcast_to(m, w.shape).astype(w.dtype)
+
+    return jax.tree.map(avg, stacked_params)

@@ -1,0 +1,5 @@
+from repro.data.synthetic import (lm_member_datasets, image_member_datasets,
+                                  sample_batch, sample_relabel_subset)
+
+__all__ = ["lm_member_datasets", "image_member_datasets", "sample_batch",
+           "sample_relabel_subset"]

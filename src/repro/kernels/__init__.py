@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for EC-DNN's compute hot-spots.
+
+  flash_attention  tiled online-softmax attention (causal/SWA/GQA)
+  distill_loss     fused dual-CE of paper Eqn 9 (+ custom VJP)
+  wkv6             RWKV6 chunked recurrence (data-dependent decay)
+  ssm_scan         Mamba selective scan, chunk-sequential
+
+Each kernel has a pure-jnp oracle in ref.py; ops.py is the dispatch layer
+model code imports.  Kernels are validated with interpret=True on CPU and
+target TPU (pl.pallas_call + BlockSpec VMEM tiling) for deployment.
+"""

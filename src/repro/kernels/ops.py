@@ -1,0 +1,68 @@
+"""Dispatch layer: Pallas kernels on TPU, pure-jnp refs elsewhere.
+
+Model code calls these entry points; the choice of implementation is a
+deployment concern:
+  - on TPU (or REPRO_USE_PALLAS=1): compiled Pallas kernels
+    (REPRO_USE_PALLAS=1 on CPU runs them in interpret mode — slow,
+    used by the kernel test suite);
+  - otherwise: the jnp reference path (kernels/ref.py or the chunked jnp
+    forms in models/), which is what the CPU dry-run lowers.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+
+def _platform() -> str:
+    return jax.devices()[0].platform
+
+
+def pallas_enabled() -> bool:
+    if os.environ.get("REPRO_USE_PALLAS", "") == "1":
+        return True
+    return _platform() == "tpu"
+
+
+def _interpret() -> bool:
+    return _platform() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    scale=None):
+    if pallas_enabled():
+        from repro.kernels import flash_attention as fa
+        return fa.flash_attention(q, k, v, causal=causal, window=window,
+                                  scale=scale, interpret=_interpret())
+    from repro.kernels import ref
+    return ref.attention(q, k, v, causal=causal, window=window, scale=scale)
+
+
+def fused_distill_loss(logits, labels, pseudo, lam):
+    if pallas_enabled():
+        from repro.kernels import distill_loss as dl
+        return dl.fused_distill_loss(logits, labels, pseudo,
+                                     jnp.asarray(lam, jnp.float32),
+                                     interpret=_interpret())
+    from repro.kernels import ref
+    return ref.distill_loss(logits, labels, pseudo, lam)
+
+
+def wkv6(r, k, v, log_w, u, s0):
+    if pallas_enabled():
+        from repro.kernels import wkv6 as w6
+        return w6.wkv6(r, k, v, log_w, u, s0, interpret=_interpret())
+    from repro.kernels import ref
+    return ref.wkv6(r, k, v, log_w, u, s0)
+
+
+def ssm_scan(a, b, h0):
+    if pallas_enabled():
+        from repro.kernels import ssm_scan as ss
+        return ss.ssm_scan(a, b, h0, interpret=_interpret())
+    from repro.kernels import ref
+    return ref.ssm_scan(a, b, h0)

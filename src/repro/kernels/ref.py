@@ -1,0 +1,96 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are written for clarity and numerical fidelity, not speed: dense
+attention materializes the score matrix, the recurrences run step-by-step
+lax.scan.  tests/test_kernels.py sweeps shapes/dtypes of each kernel
+against these.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attention(q, k, v, causal: bool = True, window: int = 0,
+              scale: float | None = None) -> jax.Array:
+    """q:(B,T,H,dh) k/v:(B,S,Hkv,dh). GQA by head grouping."""
+    B, T, H, dh = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    scale = scale if scale is not None else dh ** -0.5
+    qf = q.astype(jnp.float32).reshape(B, T, Hkv, g, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32)) * scale
+    qp = jnp.arange(T)[:, None]
+    kp = jnp.arange(S)[None, :]
+    ok = jnp.ones((T, S), bool)
+    if causal:
+        ok &= kp <= qp
+    if window > 0:
+        ok &= kp > qp - window
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, T, H, v.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused distill loss (Eqn 9) — per-row components
+# ---------------------------------------------------------------------------
+
+def distill_loss_parts(logits, labels, pseudo
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """-> (lse, gold, dot) per row; loss_i = (1+lam)*lse - gold - lam*dot."""
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    dot = (pseudo.astype(jnp.float32) * lg).sum(-1)
+    return lse, gold, dot
+
+
+def distill_loss(logits, labels, pseudo, lam) -> jax.Array:
+    lse, gold, dot = distill_loss_parts(logits, labels, pseudo)
+    return ((1.0 + lam) * lse - gold - lam * dot).mean()
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 wkv recurrence
+# ---------------------------------------------------------------------------
+
+def wkv6(r, k, v, log_w, u, s0) -> Tuple[jax.Array, jax.Array]:
+    """Sequential oracle.  r/k/v/log_w: (B,T,H,dh) f32, u: (H,dh),
+    s0: (B,H,dh,dh).  y_t = r_t (S_{t-1} + u kᵀv); S_t = W S_{t-1} + kᵀv."""
+    def step(S, xs):
+        rt, kt, vt, lw = xs  # (B,H,dh)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, S + u[..., None] * kv)
+        S = S * jnp.exp(lw)[..., None] + kv
+        return S, y
+
+    xs = jax.tree.map(lambda x: jnp.moveaxis(x, 1, 0), (r, k, v, log_w))
+    s_final, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), s_final
+
+
+# ---------------------------------------------------------------------------
+# mamba selective scan
+# ---------------------------------------------------------------------------
+
+def ssm_scan(a, b, h0) -> Tuple[jax.Array, jax.Array]:
+    """h_t = a_t * h_{t-1} + b_t, sequential.  a/b: (B,T,D,N), h0: (B,D,N).
+    Returns (hs (B,T,D,N), h_T)."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    xs = (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0))
+    h_final, hs = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(hs, 0, 1), h_final

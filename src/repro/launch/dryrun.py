@@ -1,0 +1,202 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh and extract the roofline terms.
+
+MUST be the process entry point (python -m repro.launch.dryrun ...): the
+XLA_FLAGS line above runs before any other import — including repro.* —
+because jax locks the device count at first backend init.
+
+Per cell this prints/records:
+  - compiled.memory_analysis()  (bytes/device: proves the cell fits HBM)
+  - compiled.cost_analysis()    (XLA's raw per-device numbers)
+  - hlo_analysis.analyze()      (trip-count-corrected FLOPs, HBM traffic,
+                                 collective bytes by opcode)
+  - the three roofline terms + MODEL_FLOPS/HLO ratio (EXPERIMENTS §Roofline)
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-405b --shape train_4k
+  python -m repro.launch.dryrun --all --multi-pod --out results.json
+  python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k \
+      --variant relabel        # lower the ring-relabel aggregation step
+"""
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+
+
+def flops_model(arch: str, shape_name: str) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE), D = tokens
+    processed per step; decode steps process one token per sequence."""
+    import jax
+    import jax.numpy as jnp
+    from repro.common.types import SHAPES
+    from repro.configs import registry
+    from repro.models import transformer as tf
+
+    cfg = registry.get_config(arch)
+    shape = SHAPES[shape_name]
+    params = jax.eval_shape(lambda k: tf.init(k, cfg), jax.random.PRNGKey(0))
+
+    total = active = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        name = ""
+        for e in reversed(path):
+            if isinstance(e, jax.tree_util.DictKey):
+                name = str(e.key)
+                break
+        total += n
+        if name.startswith("experts"):
+            frac = (cfg.ffn.top_k / max(cfg.ffn.n_experts, 1))
+            active += n * frac
+        elif name == "embed" and not cfg.tie_embeddings:
+            pass  # lookup is a gather, not a matmul
+        else:
+            active += n
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 3.0 if shape.kind == "train" else 1.0  # fwd+bwd vs fwd
+    return 2.0 * active * tokens * mult
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             variant: str = "plain") -> dict:
+    import jax
+    from repro.common.types import SHAPES
+    from repro.configs import registry
+    from repro.launch import hlo_analysis
+    from repro.launch.mesh import (HBM_BW, HBM_BYTES, ICI_BW,
+                                   PEAK_FLOPS_BF16, make_production_mesh)
+    from repro.launch.specs import build_cell
+
+    skip = registry.skip_reason(arch, shape_name)
+    if skip:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skip", "reason": skip}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = 1
+    for s in mesh.shape.values():
+        chips *= s
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+           "variant": variant, "chips": chips}
+    try:
+        cell = build_cell(arch, shape_name, mesh, multi_pod,
+                          variant=variant)
+        # use_mesh (NOT `with mesh:`): only use_mesh installs the abstract
+        # mesh that with_sharding_constraint needs — under a bare Mesh
+        # context every internal constraint silently no-ops.
+        with jax.sharding.set_mesh(mesh):
+            lowered = jax.jit(
+                cell.fn, in_shardings=cell.in_shardings,
+                out_shardings=cell.out_shardings,
+                donate_argnums=cell.donate).lower(*cell.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        txt = compiled.as_text()
+        hc = hlo_analysis.analyze(txt, collect_top=6)
+
+        bytes_per_dev = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                         + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+        t_comp = hc.flops / PEAK_FLOPS_BF16
+        t_mem = hc.hbm_bytes / HBM_BW
+        t_coll = hc.total_collective_bytes / ICI_BW
+        model_fl = flops_model(arch, shape_name) / chips
+        dominant = max((t_comp, "compute"), (t_mem, "memory"),
+                       (t_coll, "collective"))[1]
+        rec.update({
+            "status": "ok",
+            "step": cell.step_name,
+            "meta": {k: (v if not hasattr(v, "__dict__") else str(v))
+                     for k, v in cell.meta.items()},
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "bytes_per_device": int(bytes_per_dev),
+            "fits_hbm": bool(bytes_per_dev < HBM_BYTES),
+            "xla_flops_per_dev": ca.get("flops", 0.0),
+            "xla_bytes_per_dev": ca.get("bytes accessed", 0.0),
+            "hlo_flops_per_dev": hc.flops,
+            "hlo_hbm_bytes_per_dev": hc.hbm_bytes,
+            "collective_bytes": {k: v for k, v in
+                                 hc.collective_bytes.items() if v},
+            "collective_count": {k: v for k, v in
+                                 hc.collective_count.items() if v},
+            "t_compute_s": t_comp,
+            "t_memory_s": t_mem,
+            "t_collective_s": t_coll,
+            "dominant": dominant,
+            "model_flops_per_dev": model_fl,
+            "useful_flops_ratio": (model_fl / hc.flops) if hc.flops else 0.0,
+            "roofline_fraction": (t_comp / max(t_comp, t_mem, t_coll)
+                                  if max(t_comp, t_mem, t_coll) > 0 else 0),
+            "top_flops": hc.top_flops,
+            "top_bytes": hc.top_bytes,
+            "top_coll": hc.top_coll,
+        })
+        print(f"[{arch} x {shape_name} x {'2x16x16' if multi_pod else '16x16'}"
+              f" {variant}] OK {rec['compile_s']}s compile | "
+              f"{bytes_per_dev/2**30:.2f} GiB/dev (fits={rec['fits_hbm']}) | "
+              f"flops/dev {hc.flops:.3e} (xla {rec['xla_flops_per_dev']:.3e})"
+              f" | t_comp {t_comp*1e3:.2f}ms t_mem {t_mem*1e3:.2f}ms "
+              f"t_coll {t_coll*1e3:.2f}ms -> {dominant}-bound")
+        print(f"    memory_analysis: {ma}")
+        print(f"    collectives: {rec['collective_count']}")
+    except Exception as e:  # noqa: BLE001
+        rec.update({"status": "fail", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+        print(f"[{arch} x {shape_name}] FAIL {type(e).__name__}: {e}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--variant", default="plain",
+                    choices=["plain", "distill", "relabel"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    from repro.configs import registry
+
+    cells = []
+    if args.all:
+        cells = [(a, s) for a, s in registry.all_cells()]
+    else:
+        shapes = [args.shape] if args.shape else \
+            ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+        archs = [args.arch] if args.arch else list(registry.ARCH_IDS)
+        cells = [(a, s) for a in archs for s in shapes]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    for arch, shape in cells:
+        for mp in meshes:
+            results.append(run_cell(arch, shape, mp, variant=args.variant))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_fail = sum(r["status"] == "fail" for r in results)
+    print(f"== {n_ok} ok / {n_skip} skip / {n_fail} fail ==")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

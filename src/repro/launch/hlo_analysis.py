@@ -1,0 +1,337 @@
+"""Post-SPMD HLO text analyzer: trip-count-corrected roofline terms.
+
+Why not just compiled.cost_analysis()?  Two measured facts (see
+EXPERIMENTS.md §Dry-run methodology):
+  1. XLA's HloCostAnalysis counts a while-loop body ONCE, but our models
+     scan over layers — a 126-layer llama3 train step would be
+     under-counted ~126x.
+  2. cost_analysis has no collective-bytes view at all.
+
+This parser works on `compiled.as_text()` (post-SPMD, so shapes are
+per-device):
+  - splits the module into computations,
+  - builds a per-computation symbol table (instruction -> shape/bytes),
+  - extracts while-loop trip counts from the condition computation's
+    `compare(iv, constant), direction=LT` pattern,
+  - propagates execution multipliers through the call graph
+    (ENTRY -> while bodies x trip, fusions/calls x 1),
+  - accumulates dot/convolution FLOPs everywhere, HBM traffic at fusion
+    boundaries only, and collective bytes by opcode.
+
+All numbers are PER-CHIP (the SPMD module is per-device).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(%[\w\.\-]+|ROOT\s+%[\w\.\-]+)\s*=\s*(.*)$")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """'f32[64,128]{1,0}' -> bytes; tuples sum their elements."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d] if m.group(2) else []
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    type_str: str
+    operands: List[str]
+    raw: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    symtab: Dict[str, Instr]
+
+
+def _parse_operands(rest: str) -> List[str]:
+    par = rest.find("(")
+    if par < 0:
+        return []
+    depth, end = 0, -1
+    for i in range(par, len(rest)):
+        if rest[i] == "(":
+            depth += 1
+        elif rest[i] == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    if end < 0:
+        return []
+    inner = rest[par + 1: end]
+    ops = []
+    depth = 0
+    cur = ""
+    for ch in inner:
+        if ch == "," and depth == 0:
+            ops.append(cur.strip())
+            cur = ""
+        else:
+            if ch in "([{":
+                depth += 1
+            elif ch in ")]}":
+                depth -= 1
+            cur += ch
+    if cur.strip():
+        ops.append(cur.strip())
+    return [o for o in ops if o.startswith("%")]
+
+
+_HEADER_RE = re.compile(
+    r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*\S.*\{\s*$")
+
+
+def parse_module(txt: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in txt.splitlines():
+        if not line.startswith(" "):  # computation headers are unindented
+            header = _HEADER_RE.match(line)
+            if header:
+                name = header.group(2)
+                cur = Computation(name, [], {})
+                comps[name] = cur
+                if header.group(1):
+                    comps["ENTRY"] = cur
+                continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name = m.group(1).replace("ROOT", "").strip()
+        rest = m.group(2)
+        # "TYPE opcode(operands), attrs" — tuple types may contain
+        # /*index=N*/ comments, so scan balanced parens instead of regexing
+        if rest.startswith("("):
+            depth, end = 0, -1
+            for idx, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = idx
+                        break
+            if end < 0:
+                continue
+            type_str, after = rest[: end + 1], rest[end + 1:]
+        else:
+            tm = re.match(r"(\w+\[[\d,]*\](?:{[^}]*})?)", rest)
+            if not tm:
+                continue
+            type_str, after = tm.group(1), rest[tm.end():]
+        om = re.match(r"\s+([\w\-]+)\(", after)
+        if not om:
+            continue
+        opcode = om.group(1)
+        operands = _parse_operands(after[om.end() - 1:])
+        instr = Instr(name, opcode, type_str, operands, rest)
+        cur.instrs.append(instr)
+        cur.symtab[name] = instr
+    return comps
+
+
+def _while_trip_count(cond: Computation,
+                      comps: Dict[str, Computation]) -> int:
+    """condition: compare(iv, const) LT, possibly behind a fused compare.
+
+    scan lowers the bound as the only (non-trivial) integer constant in
+    the condition computation / its fused callees, so we BFS those and
+    take the largest constant found.
+    """
+    best = 1
+    stack, seen = [cond], set()
+    while stack:
+        c = stack.pop()
+        if c.name in seen:
+            continue
+        seen.add(c.name)
+        for ins in c.instrs:
+            if ins.opcode == "constant":
+                cm = re.search(r"constant\((\d+)\)", ins.raw)
+                if cm:
+                    best = max(best, int(cm.group(1)))
+            elif ins.opcode == "fusion":
+                fm = re.search(r"calls=%?([\w\.\-]+)", ins.raw)
+                if fm and fm.group(1) in comps:
+                    stack.append(comps[fm.group(1)])
+    return best
+
+
+def _dot_flops(ins: Instr, symtab: Dict[str, Instr]) -> float:
+    out_dims = _shape_dims(ins.type_str)
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    cm = re.search(r"lhs_contracting_dims={([\d,]*)}", ins.raw)
+    lhs = symtab.get(ins.operands[0]) if ins.operands else None
+    if lhs is None:
+        return 0.0
+    lhs_dims = _shape_dims(lhs.type_str)
+    k = 1
+    if cm and cm.group(1):
+        for d in cm.group(1).split(","):
+            if int(d) < len(lhs_dims):
+                k *= lhs_dims[int(d)]
+    return 2.0 * out_n * k
+
+
+def _conv_flops(ins: Instr, symtab: Dict[str, Instr]) -> float:
+    out_dims = _shape_dims(ins.type_str)
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    rhs = symtab.get(ins.operands[1]) if len(ins.operands) > 1 else None
+    if rhs is None:
+        return 0.0
+    rhs_dims = _shape_dims(rhs.type_str)  # kernel: spatial..., in, out
+    k = 1
+    for d in rhs_dims[:-1]:
+        k *= d
+    return 2.0 * out_n * k
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in COLLECTIVES})
+    collective_count: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {c: 0 for c in COLLECTIVES})
+    # optional per-op top contributors: (desc, value)
+    top_flops: List[Tuple[str, float]] = dataclasses.field(
+        default_factory=list)
+    top_bytes: List[Tuple[str, float]] = dataclasses.field(
+        default_factory=list)
+    top_coll: List[Tuple[str, float]] = dataclasses.field(
+        default_factory=list)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def _meta(ins: Instr) -> str:
+    m = re.search(r'op_name="([^"]+)"', ins.raw)
+    op_name = m.group(1) if m else ""
+    return f"{ins.opcode} {ins.type_str[:48]} {op_name[-70:]}"
+
+
+def analyze(txt: str, collect_top: int = 0) -> HloCosts:
+    comps = parse_module(txt)
+    entry = comps.get("ENTRY")
+    if entry is None:  # single unnamed computation fallback
+        entry = next(iter(comps.values()))
+
+    # call graph: multiplier for each computation
+    mult: Dict[str, float] = {}
+    fused: Dict[str, bool] = {}
+
+    def visit(comp: Computation, m: float, in_fusion: bool):
+        key = comp.name
+        mult[key] = mult.get(key, 0.0) + m
+        fused[key] = in_fusion
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                bm = re.search(r"body=%?([\w\.\-]+)", ins.raw)
+                cm = re.search(r"condition=%?([\w\.\-]+)", ins.raw)
+                if bm and bm.group(1) in comps:
+                    trips = 1
+                    if cm and cm.group(1) in comps:
+                        trips = _while_trip_count(comps[cm.group(1)],
+                                                  comps)
+                    visit(comps[bm.group(1)], m * trips, in_fusion)
+            elif ins.opcode == "fusion":
+                fm = re.search(r"calls=%?([\w\.\-]+)", ins.raw)
+                if fm and fm.group(1) in comps:
+                    visit(comps[fm.group(1)], m, True)
+            elif ins.opcode in ("call", "async-start"):
+                cm = re.search(r"to_apply=%?([\w\.\-]+)", ins.raw)
+                if cm and cm.group(1) in comps:
+                    visit(comps[cm.group(1)], m, in_fusion)
+            elif ins.opcode == "conditional":
+                for br in re.finditer(r"(?:true_computation|"
+                                      r"false_computation|branch_\d+)="
+                                      r"%?([\w\.\-]+)", ins.raw):
+                    if br.group(1) in comps:
+                        visit(comps[br.group(1)], m, in_fusion)
+
+    visit(entry, 1.0, False)
+
+    costs = HloCosts()
+    tf_, tb_, tc_ = [], [], []
+    seen = set()
+    for cname, m in mult.items():
+        comp = comps[cname]
+        if id(comp) in seen:
+            continue
+        seen.add(id(comp))
+        is_fused = fused.get(cname, False)
+        for ins in comp.instrs:
+            if ins.opcode == "dot":
+                fl = m * _dot_flops(ins, comp.symtab)
+                costs.flops += fl
+                if collect_top:
+                    tf_.append((_meta(ins), fl))
+            elif ins.opcode == "convolution":
+                costs.flops += m * _conv_flops(ins, comp.symtab)
+            coll = next((c for c in COLLECTIVES
+                         if ins.opcode.startswith(c)), None)
+            if coll and not ins.opcode.endswith("-done"):
+                b = _shape_bytes(ins.type_str)
+                factor = 2.0 if coll == "all-reduce" else 1.0
+                costs.collective_bytes[coll] += m * b * factor
+                costs.collective_count[coll] += int(m)
+                if collect_top:
+                    tc_.append((_meta(ins), m * b * factor))
+            # HBM traffic at fusion boundaries only
+            if not is_fused and ins.opcode not in (
+                    "parameter", "constant", "tuple", "get-tuple-element",
+                    "bitcast", "while", "call", "conditional"):
+                out_b = _shape_bytes(ins.type_str)
+                in_b = sum(_shape_bytes(comp.symtab[o].type_str)
+                           for o in ins.operands if o in comp.symtab)
+                costs.hbm_bytes += m * (out_b + in_b)
+                if collect_top:
+                    tb_.append((_meta(ins), m * (out_b + in_b)))
+    if collect_top:
+        costs.top_flops = sorted(tf_, key=lambda x: -x[1])[:collect_top]
+        costs.top_bytes = sorted(tb_, key=lambda x: -x[1])[:collect_top]
+        costs.top_coll = sorted(tc_, key=lambda x: -x[1])[:collect_top]
+    return costs

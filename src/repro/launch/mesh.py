@@ -1,0 +1,30 @@
+"""Production mesh construction (DESIGN §5).
+
+A function, not a module constant: importing this module never touches jax
+device state, so tests see 1 CPU device unless dryrun.py set
+XLA_FLAGS=--xla_force_host_platform_device_count first.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh():
+    """1-device mesh with the production axis names (CPU tests)."""
+    return jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# TPU v5e constants for the roofline (EXPERIMENTS.md §Roofline)
+PEAK_FLOPS_BF16 = 197e12     # per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+HBM_BYTES = 16 * 1024 ** 3   # capacity per chip

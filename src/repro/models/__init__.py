@@ -1,0 +1,45 @@
+"""Model facade: family dispatch between the transformer zoo and the CNN.
+
+All models expose (init, loss_and_aux, predict_logits); the transformer
+family adds prefill/decode.  EC-DNN's core only depends on this facade —
+it treats any model as "params -> per-example categorical distribution".
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from repro.common.types import ModelConfig
+
+
+def init(key, cfg: ModelConfig) -> dict:
+    if cfg.family == "cnn":
+        from repro.models import cnn as _cnn
+        # d_model doubles as the NiN width knob (192 = the paper's size)
+        return _cnn.nin_init(key, n_classes=cfg.vocab_size,
+                             width_mult=cfg.d_model / 192.0)
+    from repro.models import transformer as _tf
+    return _tf.init(key, cfg)
+
+
+def loss_and_aux(params, cfg: ModelConfig, batch: dict,
+                 remat: bool = True) -> Tuple[jax.Array, jax.Array]:
+    if cfg.family == "cnn":
+        from repro.models import cnn as _cnn
+        loss, _ = _cnn.nin_loss(params, batch)
+        return loss, 0.0
+    from repro.models import transformer as _tf
+    return _tf.loss_and_aux(params, cfg, batch, remat=remat)
+
+
+def predict_logits(params, cfg: ModelConfig, batch: dict) -> jax.Array:
+    """Logits over classes/vocab — what EC-DNN ensembles (Eqn 6)."""
+    if cfg.family == "cnn":
+        from repro.models import cnn as _cnn
+        return _cnn.nin_apply(params, batch["images"])
+    from repro.models import transformer as _tf
+    logits, _ = _tf.apply(params, cfg, tokens=batch.get("tokens"),
+                          embeds=batch.get("embeds"),
+                          enc_embeds=batch.get("enc_embeds"), remat=False)
+    return logits

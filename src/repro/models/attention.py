@@ -1,0 +1,397 @@
+"""Attention mixers: GQA (with sliding window / M-RoPE variants) and MLA.
+
+Two compute paths, numerically identical:
+  - `_attend_dense`: materializes the (q_len, kv_len) score matrix. Used for
+    short sequences and as the oracle.
+  - `_attend_chunked`: lax.scan over KV chunks with an online-softmax
+    accumulator (flash-attention recurrence in pure jnp).  This is what makes
+    32k/500k shapes lower with O(seq·chunk) live memory instead of O(seq^2).
+    The Pallas kernel (kernels/flash_attention.py) implements the same
+    recurrence with explicit VMEM tiling for real TPUs; model code dispatches
+    through kernels/ops.py.
+
+Cache layout (decode): {"k": (B, S_max, n_kv, dh), "v": ..., "idx": ()} per
+layer.  Sliding-window layers allocate only `window` cache slots and write
+round-robin (idx % window) — this is what bounds gemma3's long_500k memory.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.sharding import REP, constrain, mesh_axis_size
+from repro.common.types import AttnConfig, ModelConfig
+from repro.models.layers import apply_rope, dense_init
+
+
+def _kv_spec(n_kv: int):
+    """KV heads shard over "model" only when they divide it; otherwise
+    they are explicitly REPLICATED (production GQA-TP: each TP rank holds
+    all KV heads, Q heads split).  Leaving it unconstrained lets w_k's
+    column sharding leak *into* head_dim through the reshape, which turns
+    the score contraction into partial-sums + a (B,T,S)-sized all-reduce
+    (measured on arctic prefill: 67 TB of ICI traffic)."""
+    return "model" if n_kv % mesh_axis_size("model") == 0 else REP
+
+NEG_INF = -2.0 ** 30  # large-negative that survives bf16 round-trips
+
+# chunk size for the online-softmax path; seqs <= this use the dense path
+ATTN_CHUNK = 1024
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig, a: AttnConfig, dtype) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    if a.kind == "mla":
+        # deepseek-v2 multi-head latent attention
+        qd = a.q_dim  # n_heads * (nope + rope)
+        p = {
+            "kv_down": dense_init(ks[0], (d, a.kv_lora_rank), dtype),
+            "k_rope": dense_init(ks[1], (d, a.qk_rope_dim), dtype),
+            # per-head up-projections from the shared latent
+            "kv_up": dense_init(
+                ks[2], (a.kv_lora_rank,
+                        a.n_heads * (a.qk_nope_dim + a.v_head_dim)), dtype),
+            "w_o": dense_init(ks[3], (a.n_heads * a.v_head_dim, d), dtype),
+        }
+        if a.q_lora_rank:
+            p["q_down"] = dense_init(ks[4], (d, a.q_lora_rank), dtype)
+            p["q_up"] = dense_init(ks[5], (a.q_lora_rank, qd), dtype)
+        else:
+            p["w_q"] = dense_init(ks[4], (d, qd), dtype)
+        return p
+    p = {
+        "w_q": dense_init(ks[0], (d, a.n_heads * a.head_dim), dtype),
+        "w_k": dense_init(ks[1], (d, a.n_kv_heads * a.head_dim), dtype),
+        "w_v": dense_init(ks[2], (d, a.n_kv_heads * a.head_dim), dtype),
+        "w_o": dense_init(ks[3], (a.n_heads * a.head_dim, d), dtype),
+    }
+    if a.qk_norm:
+        p["norm_q"] = jnp.ones((a.head_dim,), jnp.float32)
+        p["norm_k"] = jnp.ones((a.head_dim,), jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# core attention math (shared by dense / chunked / decode)
+# ---------------------------------------------------------------------------
+
+def _mask_bias(q_pos, k_pos, window: int, causal: bool) -> jax.Array:
+    """(q, k) additive mask. window>0 limits lookback (sliding window).
+
+    Negative k positions are the "empty / padded cache slot" sentinel and
+    are always masked out.
+    """
+    ok = k_pos[None, :] >= 0
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _attend_dense(q, k, v, bias, scale) -> jax.Array:
+    """q:(B,Tq,H,dh) k/v:(B,Tk,Hkv,dh|dv) bias:(Tq,Tk) -> (B,Tq,H,dv).
+
+    Same precision convention as the chunked path (operands in input
+    dtype, f32 MXU accumulation) so dense/chunked dispatch is a pure
+    performance choice, never a numerics change.
+    """
+    B, Tq, H, dh = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    cdt = q.dtype
+    qg = q.reshape(B, Tq, Hkv, g, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(cdt),
+                   preferred_element_type=jnp.float32) * scale
+    s = s + bias[None, None, None]
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(cdt), v.astype(cdt),
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Tq, H, v.shape[-1]).astype(v.dtype)
+
+
+def _attend_chunked(q, k, v, q_pos, k_pos, window, causal, scale,
+                    chunk: int = ATTN_CHUNK) -> jax.Array:
+    """Online-softmax over KV chunks; O(Tk/chunk) sequential steps.
+
+    KV chunks are taken with dynamic_slice per step (NOT by restacking
+    (nc, B, chunk, ...) scan inputs — at decode that restack materializes
+    a full transposed copy of the KV cache per step, and XLA hoists it
+    over the layer loop: 2x4.3 GiB/step measured on llama3-405b).
+    Memory high-water per step: the (B,Hkv,g,Tq,chunk) score tile.
+    """
+    B, Tq, H, dh = q.shape
+    Tk = k.shape[1]
+    Hkv = k.shape[2]
+    g = H // Hkv
+    dv = v.shape[-1]
+    n_chunks = -(-Tk // chunk)
+    pad = n_chunks * chunk - Tk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=-(10 ** 9))
+    # operands stay in the input dtype (bf16 in production) — the MXU
+    # accumulates in f32 via preferred_element_type, so softmax stats are
+    # exact while score/weight traffic (HBM + any collectives touching
+    # them) is halved vs materializing f32 operands.
+    cdt = q.dtype
+    qf = q.reshape(B, Tq, Hkv, g, dh)
+
+    @jax.checkpoint  # flash-style: recompute per-chunk scores in backward
+    def step(carry, i):
+        m, l, acc = carry
+        kb = jax.lax.dynamic_slice_in_dim(k, i * chunk, chunk, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, i * chunk, chunk, axis=1)
+        kp = jax.lax.dynamic_slice_in_dim(k_pos, i * chunk, chunk, axis=0)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kb.astype(cdt),
+                       preferred_element_type=jnp.float32) * scale
+        s = s + _mask_bias(q_pos, kp, window, causal)[None, None, None]
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(cdt), vb.astype(cdt),
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hkv, g, Tq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, g, Tq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, g, Tq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  jnp.arange(n_chunks))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    o = o.transpose(0, 3, 1, 2, 4).reshape(B, Tq, H, dv)
+    return o.astype(v.dtype)
+
+
+def attend(q, k, v, q_pos, k_pos, *, window: int, causal: bool,
+           scale: float, force_dense: Optional[bool] = None) -> jax.Array:
+    """Dispatch dense vs chunked on KV length."""
+    Tk = k.shape[1]
+    dense = Tk <= ATTN_CHUNK if force_dense is None else force_dense
+    if dense:
+        bias = _mask_bias(q_pos, k_pos, window, causal)
+        return _attend_dense(q, k, v, bias, scale)
+    return _attend_chunked(q, k, v, q_pos, k_pos, window, causal, scale)
+
+
+# ---------------------------------------------------------------------------
+# GQA apply (train/prefill + decode)
+# ---------------------------------------------------------------------------
+
+def _maybe_qknorm(params, q, k, eps):
+    if "norm_q" in params:
+        def rn(x, w):
+            v = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+            return (x.astype(jnp.float32) * jax.lax.rsqrt(v + eps) * w
+                    ).astype(x.dtype)
+        q, k = rn(q, params["norm_q"]), rn(k, params["norm_k"])
+    return q, k
+
+
+def gqa_apply(params: dict, x: jax.Array, a: AttnConfig, cfg: ModelConfig,
+              positions: jax.Array, window: int, theta: float,
+              causal: bool = True) -> jax.Array:
+    """x: (B, T, d) -> (B, T, d).  positions: (B, T) or (3, B, T) for M-RoPE."""
+    B, T, _ = x.shape
+    kv = _kv_spec(a.n_kv_heads)
+    qs = "model" if a.n_heads % mesh_axis_size("model") == 0 else kv
+    qf_ = x @ params["w_q"]
+    kf = x @ params["w_k"]
+    vf = x @ params["w_v"]
+    if kv == REP:
+        # replicate the FLAT projections before the head reshape: if the
+        # column sharding survives into the reshape, shards land inside
+        # head_dim and the score contraction becomes partial-sum +
+        # a (B,Hkv,g,Tq,chunk)-sized all-reduce (measured: 33 TB on
+        # arctic prefill).  Constraining only the head dim of the 4D view
+        # is NOT enough — head_dim stays UNCONSTRAINED and keeps the
+        # leaked shards (measured: the AR survived on gemma).  The
+        # all-gather here is (B,T,heads*dh) — tiny by comparison.
+        kf = constrain(kf, None, None, REP)
+        vf = constrain(vf, None, None, REP)
+    if qs == REP:
+        qf_ = constrain(qf_, None, None, REP)
+    q = qf_.reshape(B, T, a.n_heads, a.head_dim)
+    k = kf.reshape(B, T, a.n_kv_heads, a.head_dim)
+    v = vf.reshape(B, T, a.n_kv_heads, a.head_dim)
+    q = constrain(q, None, None, qs, None)
+    k = constrain(k, None, None, kv, None)
+    v = constrain(v, None, None, kv, None)
+    q, k = _maybe_qknorm(params, q, k, cfg.norm_eps)
+    pos1d = positions if a.mrope_sections is None else positions[0]
+    if a.use_rope:
+        q = apply_rope(q, positions, theta, a.mrope_sections)
+        k = apply_rope(k, positions, theta, a.mrope_sections)
+    scale = 1.0 / math.sqrt(a.head_dim)
+    o = attend(q, k, v, pos1d[0], pos1d[0], window=window, causal=causal,
+               scale=scale)
+    o = constrain(o, None, None, "model" if a.n_heads
+                  % mesh_axis_size("model") == 0 else kv, None)
+    return o.reshape(B, T, -1) @ params["w_o"]
+
+
+def gqa_cache_init(a: AttnConfig, batch: int, max_seq: int, window: int,
+                   dtype) -> dict:
+    slots = min(window, max_seq) if window > 0 else max_seq
+    shape = (batch, slots, a.n_kv_heads, a.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def gqa_decode(params: dict, x: jax.Array, cache: dict, idx: jax.Array,
+               a: AttnConfig, cfg: ModelConfig, window: int,
+               theta: float) -> Tuple[jax.Array, dict]:
+    """One-token decode. x: (B, 1, d); idx: () current position."""
+    B = x.shape[0]
+    kv = _kv_spec(a.n_kv_heads)
+    kf, vf = x @ params["w_k"], x @ params["w_v"]
+    if kv == REP:  # see gqa_apply: keep shards out of head_dim
+        kf = constrain(kf, None, None, REP)
+        vf = constrain(vf, None, None, REP)
+    q = (x @ params["w_q"]).reshape(B, 1, a.n_heads, a.head_dim)
+    k = kf.reshape(B, 1, a.n_kv_heads, a.head_dim)
+    v = vf.reshape(B, 1, a.n_kv_heads, a.head_dim)
+    q, k = _maybe_qknorm(params, q, k, cfg.norm_eps)
+    pos = jnp.full((B, 1), idx, jnp.int32)
+    if a.mrope_sections is not None:
+        pos3 = jnp.broadcast_to(pos, (3,) + pos.shape)
+        if a.use_rope:
+            q = apply_rope(q, pos3, theta, a.mrope_sections)
+            k = apply_rope(k, pos3, theta, a.mrope_sections)
+    elif a.use_rope:
+        q = apply_rope(q, pos, theta)
+        k = apply_rope(k, pos, theta)
+    slots = cache["k"].shape[1]
+    slot = idx % slots if window > 0 else idx
+    k = constrain(k, None, None, kv, None)
+    v = constrain(v, None, None, kv, None)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    # absolute positions of cache slots (round-robin for windows)
+    slot_ids = jnp.arange(slots)
+    if window > 0:
+        # slot s holds the most recent position p <= idx with p % slots == s
+        k_pos = idx - ((idx - slot_ids) % slots)
+        k_pos = jnp.where(k_pos > idx, -(10 ** 9), k_pos)
+    else:
+        k_pos = jnp.where(slot_ids <= idx, slot_ids, -(10 ** 9))
+    scale = 1.0 / math.sqrt(a.head_dim)
+    o = attend(q, ck, cv, pos[0], k_pos, window=window, causal=True,
+               scale=scale, force_dense=slots <= ATTN_CHUNK * 4)
+    o = o.reshape(B, 1, -1) @ params["w_o"]
+    return o, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v2): latent-compressed KV
+# ---------------------------------------------------------------------------
+
+def _mla_qkv(params, x, a: AttnConfig):
+    B, T, _ = x.shape
+    if "q_down" in params:
+        q = (x @ params["q_down"]) @ params["q_up"]
+    else:
+        q = x @ params["w_q"]
+    q = q.reshape(B, T, a.n_heads, a.qk_nope_dim + a.qk_rope_dim)
+    c_kv = x @ params["kv_down"]            # (B, T, r) latent
+    k_r = x @ params["k_rope"]              # (B, T, rope_dim) shared rope key
+    return q, c_kv, k_r
+
+
+def _mla_expand(params, c_kv, a: AttnConfig):
+    B, T, _ = c_kv.shape
+    kv = (c_kv @ params["kv_up"]).reshape(
+        B, T, a.n_heads, a.qk_nope_dim + a.v_head_dim)
+    k_c, v = kv[..., :a.qk_nope_dim], kv[..., a.qk_nope_dim:]
+    return k_c, v
+
+
+def mla_apply(params: dict, x: jax.Array, a: AttnConfig, cfg: ModelConfig,
+              positions: jax.Array, theta: float) -> jax.Array:
+    B, T, _ = x.shape
+    q, c_kv, k_r = _mla_qkv(params, x, a)
+    q_c, q_r = q[..., :a.qk_nope_dim], q[..., a.qk_nope_dim:]
+    q_r = apply_rope(q_r, positions, theta)
+    k_r = apply_rope(k_r[..., None, :], positions, theta)  # (B,T,1,rope)
+    k_c, v = _mla_expand(params, c_kv, a)
+    q_full = jnp.concatenate([q_c, q_r], -1)
+    k_full = jnp.concatenate(
+        [k_c, jnp.broadcast_to(k_r, k_c.shape[:-1] + (a.qk_rope_dim,))], -1)
+    q_full = constrain(q_full, None, None, "model", None)
+    k_full = constrain(k_full, None, None, "model", None)
+    scale = 1.0 / math.sqrt(a.qk_nope_dim + a.qk_rope_dim)
+    o = attend(q_full, k_full, v, positions[0], positions[0], window=0,
+               causal=True, scale=scale)
+    o = constrain(o, None, None, "model", None)
+    return o.reshape(B, T, -1) @ params["w_o"]
+
+
+def mla_cache_init(a: AttnConfig, batch: int, max_seq: int, dtype) -> dict:
+    # cache the *latent* (this is MLA's point: r + rope_dim per token,
+    # not n_heads*dh) — 512+64 vs 128*192 for deepseek-v2.
+    return {"c_kv": jnp.zeros((batch, max_seq, a.kv_lora_rank), dtype),
+            "k_r": jnp.zeros((batch, max_seq, a.qk_rope_dim), dtype)}
+
+
+def mla_decode(params: dict, x: jax.Array, cache: dict, idx: jax.Array,
+               a: AttnConfig, cfg: ModelConfig,
+               theta: float) -> Tuple[jax.Array, dict]:
+    B = x.shape[0]
+    q, c_kv, k_r = _mla_qkv(params, x, a)
+    pos = jnp.full((B, 1), idx, jnp.int32)
+    q_c, q_r = q[..., :a.qk_nope_dim], q[..., a.qk_nope_dim:]
+    q_r = apply_rope(q_r, pos, theta)
+    k_r = apply_rope(k_r[..., None, :], pos, theta)[..., 0, :]
+    cc = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv, idx, 1)
+    cr = jax.lax.dynamic_update_slice_in_dim(cache["k_r"], k_r, idx, 1)
+    S = cc.shape[1]
+    k_c, v = _mla_expand(params, cc, a)  # (B,S,H,*) expanded on the fly
+    k_pos = jnp.where(jnp.arange(S) <= idx, jnp.arange(S), -(10 ** 9))
+    q_full = jnp.concatenate([q_c, q_r], -1)
+    k_full = jnp.concatenate(
+        [k_c, jnp.broadcast_to(cr[..., None, :],
+                               k_c.shape[:-1] + (a.qk_rope_dim,))], -1)
+    scale = 1.0 / math.sqrt(a.qk_nope_dim + a.qk_rope_dim)
+    o = attend(q_full, k_full, v, pos[0], k_pos, window=0, causal=True,
+               scale=scale)
+    o = o.reshape(B, 1, -1) @ params["w_o"]
+    return o, {"c_kv": cc, "k_r": cr}
+
+
+# ---------------------------------------------------------------------------
+# cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attn_init(key, cfg: ModelConfig, a: AttnConfig, dtype) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "w_cross_q": dense_init(ks[0], (d, a.n_heads * a.head_dim), dtype),
+        "w_k": dense_init(ks[1], (d, a.n_kv_heads * a.head_dim), dtype),
+        "w_v": dense_init(ks[2], (d, a.n_kv_heads * a.head_dim), dtype),
+        "w_o": dense_init(ks[3], (a.n_heads * a.head_dim, d), dtype),
+    }
+
+
+def cross_attn_apply(params: dict, x: jax.Array, enc: jax.Array,
+                     a: AttnConfig) -> jax.Array:
+    B, T, _ = x.shape
+    S = enc.shape[1]
+    q = (x @ params["w_cross_q"]).reshape(B, T, a.n_heads, a.head_dim)
+    k = (enc @ params["w_k"]).reshape(B, S, a.n_kv_heads, a.head_dim)
+    v = (enc @ params["w_v"]).reshape(B, S, a.n_kv_heads, a.head_dim)
+    scale = 1.0 / math.sqrt(a.head_dim)
+    pos_q = jnp.arange(T)
+    pos_k = jnp.arange(S)
+    o = attend(q, k, v, pos_q, pos_k, window=0, causal=False, scale=scale)
+    return o.reshape(B, T, -1) @ params["w_o"]

@@ -1,0 +1,88 @@
+"""Network-in-Network (NiN) CNN — the paper's CIFAR-100 architecture [15].
+
+9 conv layers in three NiN blocks (5x5 conv followed by two 1x1 "mlpconv"
+layers), max/avg pooling between blocks, global average pooling into the
+class logits.  ReLU activations, used with momentum-SGD + l2 regularization
+to mirror the paper's Section 5.1 setup.
+
+This model is what examples/ec_vs_ma_faithful.py trains: it is the faithful
+EC-DNN reproduction target, while the transformer zoo exercises the
+framework at assigned-architecture scale.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+# (kind, out_channels, kernel, stride) — kind: conv | maxpool | avgpool
+NIN_SPEC = (
+    ("conv", 192, 5, 1), ("conv", 160, 1, 1), ("conv", 96, 1, 1),
+    ("maxpool", 0, 3, 2),
+    ("conv", 192, 5, 1), ("conv", 192, 1, 1), ("conv", 192, 1, 1),
+    ("avgpool", 0, 3, 2),
+    ("conv", 192, 3, 1), ("conv", 192, 1, 1),
+)
+
+
+def nin_init(key, n_classes: int = 100, in_ch: int = 3,
+             width_mult: float = 1.0) -> dict:
+    params = {}
+    ch = in_ch
+    ks = jax.random.split(key, len(NIN_SPEC) + 1)
+    for i, (kind, out, k, _s) in enumerate(NIN_SPEC):
+        if kind != "conv":
+            continue
+        out = max(8, int(out * width_mult))
+        params[f"conv_{i}_w"] = dense_init(
+            ks[i], (k, k, ch, out), jnp.float32,
+            scale=1.0 / (k * (ch ** 0.5)))
+        params[f"bias_{i}"] = jnp.zeros((out,), jnp.float32)
+        ch = out
+    # final 1x1 conv onto class logits
+    params["conv_out_w"] = dense_init(ks[-1], (1, 1, ch, n_classes),
+                                      jnp.float32, scale=1.0 / (ch ** 0.5))
+    params["bias_out"] = jnp.zeros((n_classes,), jnp.float32)
+    return params
+
+
+def _pool(x, k, s, kind):
+    init = -jnp.inf if kind == "maxpool" else 0.0
+    op = jax.lax.max if kind == "maxpool" else jax.lax.add
+    y = jax.lax.reduce_window(x, init, op, (1, k, k, 1), (1, s, s, 1),
+                              "SAME")
+    if kind == "avgpool":
+        y = y / (k * k)
+    return y
+
+
+def nin_apply(params: dict, images: jax.Array) -> jax.Array:
+    """images: (B, 32, 32, 3) -> logits (B, n_classes)."""
+    x = images
+    for i, (kind, _out, k, s) in enumerate(NIN_SPEC):
+        if kind == "conv":
+            x = jax.lax.conv_general_dilated(
+                x, params[f"conv_{i}_w"], (s, s), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            x = jax.nn.relu(x + params[f"bias_{i}"])
+        else:
+            x = _pool(x, k, s, kind)
+    x = jax.lax.conv_general_dilated(
+        x, params["conv_out_w"], (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + params["bias_out"]
+    return x.mean(axis=(1, 2))  # global average pool
+
+
+def nin_loss(params: dict, batch: dict, l2: float = 1e-4
+             ) -> Tuple[jax.Array, jax.Array]:
+    """-> (loss, logits). batch: {images (B,H,W,C), labels (B,) int}."""
+    logits = nin_apply(params, batch["images"])
+    nll = jnp.mean(
+        jax.nn.logsumexp(logits, -1)
+        - jnp.take_along_axis(logits, batch["labels"][:, None], 1)[:, 0])
+    reg = sum(jnp.sum(jnp.square(v)) for k, v in params.items()
+              if k.endswith("_w"))
+    return nll + l2 * reg, logits

@@ -1,0 +1,174 @@
+"""Primitive layers: norms, rotary embeddings, MLPs, embeddings.
+
+All layers are (init, apply) function pairs over plain dict pytrees.  Weight
+names are the contract with repro.common.sharding — do not rename leaves.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.sharding import constrain
+from repro.common.types import ModelConfig
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# bf16 gradient communication (distributed-optimization trick)
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def grad_bf16(x):
+    """Identity whose cotangent is rounded through bf16.
+
+    Placed at layer boundaries, it halves the payload of every
+    TP/SP backward all-reduce/reduce-scatter crossing it (the f32 loss
+    upcast otherwise propagates f32 cotangents through the whole
+    backward).  Opt-in via layout_ctx(bf16_grads=True) — EXPERIMENTS §Perf
+    records the before/after."""
+    return x
+
+
+def _gb_fwd(x):
+    return x, None
+
+
+def _gb_bwd(_, g):
+    return (g.astype(jnp.bfloat16).astype(g.dtype),)
+
+
+grad_bf16.defvjp(_gb_fwd, _gb_bwd)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int) -> dict:
+    return {"norm_scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["norm_scale"]).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (+ M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               sections: Optional[Tuple[int, ...]] = None) -> jax.Array:
+    """Rotate `x` (..., seq, heads, head_dim) by `positions`.
+
+    positions: (..., seq) for standard RoPE or (3, ..., seq) for M-RoPE with
+    `sections` giving the per-axis split of the half-dim (qwen2-vl).
+    """
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)  # (half,)
+    if sections is None:
+        angles = positions[..., None].astype(jnp.float32) * freqs  # (...,seq,half)
+    else:
+        # positions: (3, ..., seq); build per-frequency position index by
+        # section: freq j in section s uses positions[s].
+        sec_ids = jnp.repeat(
+            jnp.arange(len(sections)), jnp.array(sections),
+            total_repeat_length=half)  # (half,)
+        pos = jnp.take(positions, sec_ids, axis=0)  # (half, ..., seq)
+        pos = jnp.moveaxis(pos, 0, -1)  # (..., seq, half)
+        angles = pos.astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    cos = cos[..., None, :]  # broadcast over heads: (...,seq,1,half)
+    sin = sin[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32)
+                  * (-math.log(10000.0) / d))
+    pe = jnp.zeros((n, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# MLP (swiglu / geglu / gelu)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, mlp_type: str, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], (d_model, d_ff), dtype),
+         "w_down": dense_init(ks[1], (d_ff, d_model), dtype)}
+    if mlp_type in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff), dtype)
+    return p
+
+
+def mlp_apply(params: dict, x: jax.Array, mlp_type: str) -> jax.Array:
+    up = x @ params["w_up"]
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * up
+    elif mlp_type == "geglu":
+        h = jax.nn.gelu(x @ params["w_gate"], approximate=True) * up
+    else:  # plain gelu
+        h = jax.nn.gelu(up, approximate=True)
+    h = constrain(h, None, None, "model")
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding + LM head (vocab sharded over "model")
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d_model: int, dtype) -> dict:
+    # GPT-style 0.02 std keeps tied-head logits sane at init
+    return {"embed": dense_init(key, (vocab, d_model), dtype, scale=0.02)}
+
+
+def embed_lookup(params: dict, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def head_init(key, vocab: int, d_model: int, dtype) -> dict:
+    return {"head": dense_init(key, (vocab, d_model), dtype)}
+
+
+def lm_logits(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    table = params["head"] if "head" in params else params["embed"]
+    logits = jnp.einsum("...d,vd->...v", x, table)
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return constrain(logits, None, None, "model")

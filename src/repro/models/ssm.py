@@ -1,0 +1,372 @@
+"""State-space mixers: Mamba selective scan (jamba) and RWKV6 (finch).
+
+Both are implemented in a *chunked* form: an outer lax.scan over time chunks
+carrying the recurrent state, with a parallel (matmul-heavy) computation
+inside each chunk.  This is the TPU-native shape of these recurrences — the
+MXU sees (chunk x chunk) and (chunk x d_state) matmuls instead of a
+length-T sequential loop — and it is exactly the structure the Pallas
+kernels (kernels/ssm_scan.py, kernels/wkv6.py) tile into VMEM.  The
+sequential oracles live in kernels/ref.py.
+
+Decode paths carry O(1) state per layer:
+  mamba: conv tail (B, conv_w-1, d_inner) + ssm state (B, d_inner, d_state)
+  rwkv6: token-shift tail (B, d)          + wkv state  (B, H, dh, dh)
+This is why rwkv6-7b / jamba run the long_500k cell.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.sharding import constrain
+from repro.common.types import ModelConfig, SSMConfig
+from repro.models.layers import dense_init
+
+MAMBA_CHUNK = 128
+RWKV_CHUNK = 32  # pairwise-decay buffer is (B,L,L,H,dh): keep L modest
+
+
+# ===========================================================================
+# Mamba
+# ===========================================================================
+
+def mamba_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    d_inner = cfg.ssm.expand * cfg.d_model
+    dt_rank = cfg.ssm.dt_rank or max(1, cfg.d_model // 16)
+    return d_inner, dt_rank
+
+
+def mamba_init(key, cfg: ModelConfig, dtype) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, dt_rank = mamba_dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        # in_proj packs [x, z]
+        "mamba_in": dense_init(ks[0], (d, 2 * d_inner), dtype),
+        "mamba_conv": dense_init(ks[1], (s.conv_width, d_inner), dtype,
+                                 scale=1.0 / math.sqrt(s.conv_width)),
+        # x_proj packs [dt, B, C]
+        "mamba_dt_x": dense_init(ks[2], (d_inner, dt_rank + 2 * s.d_state),
+                                 dtype),
+        "mamba_dt_w": dense_init(ks[3], (dt_rank, d_inner), dtype),
+        "mamba_dt_b": jnp.full((d_inner,), -4.6, jnp.float32),  # softplus→~0.01
+        "mamba_A_log": jnp.log(jnp.tile(
+            jnp.arange(1, s.d_state + 1, dtype=jnp.float32), (d_inner, 1))),
+        "mamba_D": jnp.ones((d_inner,), jnp.float32),
+        "mamba_out": dense_init(ks[4], (d_inner, d), dtype),
+    }
+
+
+def _mamba_conv_full(x, w):
+    """Causal depthwise conv via shifted adds. x:(B,T,di) w:(W,di).
+
+    Accumulates in f32 (the decode path does too — keeps both bit-aligned
+    through the silu when params are bf16), returns x.dtype.
+    """
+    W = w.shape[0]
+    xf, wf = x.astype(jnp.float32), w.astype(jnp.float32)
+    out = xf * wf[-1]
+    for i in range(1, W):
+        shifted = jnp.pad(xf, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * wf[-1 - i]
+    return out
+
+
+def _mamba_inner(params, xz, cfg: ModelConfig, h0):
+    """Shared scan core. xz: conv'd x (B,T,di); returns (y, h_T).
+
+    The (B,T,di,N) transition/input tensors are never materialized for the
+    full sequence: dt/B/C/x are chunked into the scan xs and a_t/b_t are
+    formed per chunk inside the body (live set (B,CH,di,N), then reduced
+    against C before the next chunk).
+    """
+    s = cfg.ssm
+    d_inner, dt_rank = mamba_dims(cfg)
+    B, T, _ = xz.shape
+    proj = xz @ params["mamba_dt_x"]
+    dt_lo = proj[..., :dt_rank]
+    Bm = proj[..., dt_rank: dt_rank + s.d_state].astype(jnp.float32)
+    Cm = proj[..., dt_rank + s.d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_lo @ params["mamba_dt_w"]
+                         + params["mamba_dt_b"])          # (B,T,di)
+    dt = constrain(dt, "batch", None, "model")
+    A = -jnp.exp(params["mamba_A_log"])                    # (di, N)
+    xf = xz.astype(jnp.float32)
+    dtx = dt * xf                                          # (B,T,di)
+    dtx = constrain(dtx, "batch", None, "model")
+
+    nc = -(-T // MAMBA_CHUNK)
+    pad = nc * MAMBA_CHUNK - T
+
+    def chunks(t, fill=0.0):
+        if pad:
+            t = jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2),
+                        constant_values=fill)
+        t = t.reshape((B, nc, MAMBA_CHUNK) + t.shape[2:])
+        return jnp.moveaxis(t, 1, 0)                       # (nc, B, CH, ...)
+
+    xs = (chunks(dt), chunks(dtx), chunks(Bm), chunks(Cm))
+
+    @jax.checkpoint  # recompute a/b/hs per chunk in backward
+    def chunk_step(h, xs_c):
+        dtc, dtxc, Bc, Cc = xs_c
+        a = jnp.exp(dtc[..., None] * A)                    # (B,CH,di,N)
+        b = dtxc[..., None] * Bc[..., None, :]
+        # prepend carry as step 0: h_t = a_t h_{t-1} + b_t
+        aa = jnp.concatenate([jnp.ones_like(a[:, :1]), a], 1)
+        bb = jnp.concatenate([h[:, None], b], 1)
+
+        def combine(x, y):
+            return (x[0] * y[0], y[0] * x[1] + y[1])
+
+        _, hs = jax.lax.associative_scan(combine, (aa, bb), axis=1)
+        y_c = jnp.einsum("bldn,bln->bld", hs[:, 1:], Cc)
+        return hs[:, -1], y_c
+
+    h_T, ys = jax.lax.scan(chunk_step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, nc * MAMBA_CHUNK, d_inner)[:, :T]
+    y = y + xf * params["mamba_D"]
+    return y, h_T
+
+
+def mamba_apply(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x: (B,T,d) -> (B,T,d)."""
+    s = cfg.ssm
+    d_inner, _ = mamba_dims(cfg)
+    B, T, _ = x.shape
+    xz = x @ params["mamba_in"]
+    xs, z = xz[..., :d_inner], xz[..., d_inner:]
+    xs = constrain(xs, None, None, "model")
+    xs = jax.nn.silu(_mamba_conv_full(xs, params["mamba_conv"])
+                     ).astype(xs.dtype)
+    h0 = jnp.zeros((B, d_inner, s.d_state), jnp.float32)
+    y, _ = _mamba_inner(params, xs, cfg, h0)
+    y = (y.astype(z.dtype) * jax.nn.silu(z))
+    y = constrain(y, None, None, "model")
+    return y @ params["mamba_out"]
+
+
+def mamba_cache_init(cfg: ModelConfig, batch: int, dtype) -> dict:
+    s = cfg.ssm
+    d_inner, _ = mamba_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, d_inner), dtype),
+        "ssm": jnp.zeros((batch, d_inner, s.d_state), jnp.float32),
+    }
+
+
+def mamba_decode(params: dict, x: jax.Array, cache: dict,
+                 cfg: ModelConfig) -> Tuple[jax.Array, dict]:
+    """x: (B,1,d) one token."""
+    s = cfg.ssm
+    d_inner, _ = mamba_dims(cfg)
+    xz = x @ params["mamba_in"]
+    xs, z = xz[..., :d_inner], xz[..., d_inner:]
+    window = jnp.concatenate([cache["conv"].astype(xs.dtype), xs], 1)
+    conv_out = jnp.einsum("bwd,wd->bd", window.astype(jnp.float32),
+                          params["mamba_conv"].astype(jnp.float32))
+    xc = jax.nn.silu(conv_out)[:, None].astype(xs.dtype)
+    y, h = _mamba_inner(params, xc, cfg, cache["ssm"])
+    y = (y.astype(z.dtype) * jax.nn.silu(z)) @ params["mamba_out"]
+    return y, {"conv": window[:, 1:], "ssm": h}
+
+
+# ===========================================================================
+# RWKV6 (finch) — data-dependent per-channel decay
+# ===========================================================================
+
+def rwkv_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    dh = cfg.ssm.rwkv_head_dim
+    return cfg.d_model // dh, dh  # (n_heads, head_dim)
+
+
+def rwkv_init(key, cfg: ModelConfig, dtype) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    H, dh = rwkv_dims(cfg)
+    ks = jax.random.split(key, 12)
+    p = {
+        # token-shift base mix for (r,k,v,g,w) + data-dependent LoRA
+        "rwkv_mix_base": jnp.full((5, d), 0.5, jnp.float32),
+        "rwkv_mix_lora_a": dense_init(ks[0], (d, s.rwkv_lora_mix),
+                                      jnp.float32),
+        "rwkv_mix_lora_b": dense_init(ks[1], (s.rwkv_lora_mix, 5 * d),
+                                      jnp.float32, scale=0.01),
+        "rwkv_r": dense_init(ks[2], (d, d), dtype),
+        "rwkv_k": dense_init(ks[3], (d, d), dtype),
+        "rwkv_v": dense_init(ks[4], (d, d), dtype),
+        "rwkv_g": dense_init(ks[5], (d, d), dtype),
+        "rwkv_o": dense_init(ks[6], (d, d), dtype),
+        # decay: per-channel base + data-dependent LoRA (the v6 novelty)
+        "rwkv_decay_base": jnp.full((d,), -6.0, jnp.float32),
+        "rwkv_decay_lora_a": dense_init(ks[7], (d, s.rwkv_lora_decay),
+                                        jnp.float32),
+        "rwkv_decay_lora_b": dense_init(ks[8], (s.rwkv_lora_decay, d),
+                                        jnp.float32, scale=0.01),
+        "rwkv_first": dense_init(ks[9], (H, dh), jnp.float32, scale=0.5),
+        "rwkv_ln_scale": jnp.ones((d,), jnp.float32),
+    }
+    # channel-mix (rwkv FFN) params live in transformer.py via cmix leaves
+    return p
+
+
+def _rwkv_proj(params, x, x_prev, cfg: ModelConfig):
+    """Token-shift + projections. x:(B,T,d); x_prev:(B,T,d) shifted input."""
+    B, T, d = x.shape
+    xf = x.astype(jnp.float32)
+    # data-dependent mix: mix = base + lora(x)
+    lora = jnp.tanh(xf @ params["rwkv_mix_lora_a"]) @ params["rwkv_mix_lora_b"]
+    lora = constrain(lora, "batch", None, "model")
+    mix = params["rwkv_mix_base"][:, None, None] + lora.reshape(
+        B, T, 5, d).transpose(2, 0, 1, 3)  # (5,B,T,d)
+    mixed = xf[None] + (x_prev.astype(jnp.float32)[None] - xf[None]) * mix
+    mixed = constrain(mixed, None, "batch", None, "model")
+    xr, xk, xv, xg, xw = [m.astype(x.dtype) for m in mixed]
+    r = constrain(xr @ params["rwkv_r"], "batch", None, "model")
+    k = constrain(xk @ params["rwkv_k"], "batch", None, "model")
+    v = constrain(xv @ params["rwkv_v"], "batch", None, "model")
+    g = jax.nn.silu(constrain(xg @ params["rwkv_g"], "batch", None,
+                              "model"))
+    # decay in log space: log w = -exp(base + lora)  (strictly < 0)
+    dec = params["rwkv_decay_base"] + jnp.tanh(
+        xw.astype(jnp.float32) @ params["rwkv_decay_lora_a"]
+    ) @ params["rwkv_decay_lora_b"]
+    log_w = -jnp.exp(dec.clip(-20.0, 4.0))  # (B,T,d)
+    log_w = constrain(log_w, "batch", None, "model")
+    return r, k, v, g, log_w
+
+
+def _wkv_chunked(r, k, v, log_w, u, S0):
+    """Chunked wkv recurrence in log space.
+
+    r/k/v: (B,T,H,dh) f32; log_w: (B,T,H,dh) per-key-channel decay (<0);
+    u: (H,dh) bonus; S0: (B,H,dh,dh) [key, value] state.
+    y_t = r_t @ (S_{t-1} + u ∘ k_t^T v_t);  S_t = W_t ∘ S_{t-1} + k_t^T v_t
+    """
+    B, T, H, dh = r.shape
+    nc = -(-T // RWKV_CHUNK)
+    pad = nc * RWKV_CHUNK - T
+    if pad:
+        z = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = jnp.pad(r, z), jnp.pad(k, z), jnp.pad(v, z)
+        log_w = jnp.pad(log_w, z)  # log w = 0 → w = 1 on padding (harmless)
+    L = RWKV_CHUNK
+
+    def to_chunks(x):
+        x = x.reshape(B, nc, L, H, dh).transpose(1, 0, 2, 3, 4)
+        return constrain(x, None, "batch", None, "model", None)
+
+    rc, kc, vc, lwc = map(to_chunks, (r, k, v, log_w))
+
+    @jax.checkpoint  # recompute the (L,L,dh) pairwise tensor in backward
+    def chunk_step(S, xs):
+        rb, kb, vb, lw = xs  # (B,L,H,dh)
+        la = jnp.cumsum(lw, axis=1)            # inclusive ∑ log w
+        la_prev = la - lw                       # exclusive
+        # r decayed vs chunk start; k re-scaled vs own position
+        r_in = rb * jnp.exp(la_prev)
+        k_out = kb * jnp.exp(la[:, -1:] - la)   # for state update
+        # pairwise decay exp(la_prev[t]-la[j]) for j<t — exponent <= 0, so
+        # this is stable for arbitrary data-dependent decays (unlike the
+        # separable exp(la_prev[t])·exp(-la[j]) factorization, which
+        # overflows when per-step decay is strong).  (B,L,L,H,dh) bounds
+        # the memory; RWKV_CHUNK is sized for it.
+        ld = la_prev[:, :, None, :, :] - la[:, None, :, :, :]
+        # mask j < t strictly; bonus handles j == t
+        tri = jnp.tril(jnp.ones((L, L), bool), k=-1)
+        scores = jnp.einsum("blhd,bmhd,blmhd->bhlm", rb, kb,
+                            jnp.where(tri[None, :, :, None, None],
+                                      jnp.exp(ld), 0.0))
+        y = jnp.einsum("bhlm,bmhd->blhd", scores, vb)
+        # cross-chunk: r decayed to chunk start times S
+        y = y + jnp.einsum("blhk,bhkv->blhv", r_in, S)
+        # bonus diagonal term
+        y = y + jnp.einsum("blhd,blhd,blhv->blhv", rb, kb * u, vb)
+        S_new = S * jnp.exp(la[:, -1])[..., None] \
+            + jnp.einsum("blhk,blhv->bhkv", k_out, vb)
+        return S_new, y
+
+    S_T, ys = jax.lax.scan(chunk_step, S0, (rc, kc, vc, lwc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, nc * L, H, dh)[:, :T]
+    return y, S_T
+
+
+def _rwkv_groupnorm(y, scale, H, dh, eps=1e-5):
+    B, T = y.shape[:2]
+    yf = y.reshape(B, T, H, dh).astype(jnp.float32)
+    mu = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    yf = (yf - mu) * jax.lax.rsqrt(var + eps)
+    return (yf.reshape(B, T, H * dh) * scale)
+
+
+def rwkv_apply(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    B, T, d = x.shape
+    H, dh = rwkv_dims(cfg)
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :T]
+    r, k, v, g, log_w = _rwkv_proj(params, x, x_prev, cfg)
+
+    def heads(t):
+        return t.astype(jnp.float32).reshape(B, T, H, dh)
+
+    S0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    y, _ = _wkv_chunked(heads(r), heads(k), heads(v), heads(log_w),
+                        params["rwkv_first"], S0)
+    y = _rwkv_groupnorm(y, params["rwkv_ln_scale"], H, dh)
+    y = (y.astype(g.dtype) * g)
+    y = constrain(y, None, None, "model")
+    return y @ params["rwkv_o"]
+
+
+def rwkv_cache_init(cfg: ModelConfig, batch: int, dtype) -> dict:
+    H, dh = rwkv_dims(cfg)
+    return {
+        "shift": jnp.zeros((batch, 1, cfg.d_model), dtype),
+        "wkv": jnp.zeros((batch, H, dh, dh), jnp.float32),
+    }
+
+
+def rwkv_decode(params: dict, x: jax.Array, cache: dict,
+                cfg: ModelConfig) -> Tuple[jax.Array, dict]:
+    B = x.shape[0]
+    H, dh = rwkv_dims(cfg)
+    r, k, v, g, log_w = _rwkv_proj(params, x, cache["shift"].astype(x.dtype),
+                                   cfg)
+
+    def heads(t):
+        return t.astype(jnp.float32).reshape(B, H, dh)
+
+    rf, kf, vf, lw = map(heads, (r[:, 0], k[:, 0], v[:, 0], log_w[:, 0]))
+    S = cache["wkv"]
+    kv = jnp.einsum("bhk,bhv->bhkv", kf, vf)
+    y = jnp.einsum("bhk,bhkv->bhv", rf, S + params["rwkv_first"][..., None]
+                   * kv)
+    S = S * jnp.exp(lw)[..., None] + kv
+    y = y.reshape(B, 1, H * dh)
+    y = _rwkv_groupnorm(y, params["rwkv_ln_scale"], H, dh)
+    y = (y.astype(g.dtype) * g) @ params["rwkv_o"]
+    return y, {"shift": x, "wkv": S}
+
+
+# --- rwkv channel-mix (its FFN flavor) -------------------------------------
+
+def cmix_init(key, cfg: ModelConfig, d_ff: int, dtype) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 2)
+    return {
+        "cmix_mix": jnp.full((d,), 0.5, jnp.float32),
+        "cmix_k": dense_init(ks[0], (d, d_ff), dtype),
+        "cmix_v": dense_init(ks[1], (d_ff, d), dtype),
+    }
+
+
+def cmix_apply(params: dict, x: jax.Array, x_prev: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    xk = xf + (x_prev.astype(jnp.float32) - xf) * params["cmix_mix"]
+    h = jnp.square(jax.nn.relu(xk.astype(x.dtype) @ params["cmix_k"]))
+    h = constrain(h, None, None, "model")
+    return h @ params["cmix_v"]

@@ -1,0 +1,376 @@
+"""Transformer LM assembly: pattern-driven blocks, scan-over-layers, enc-dec.
+
+A model is `init(key, cfg) -> params` + pure apply functions.  Layers are
+grouped into *segments* (cfg.segments()): each segment stacks `count`
+repetitions of the layer pattern, applied with jax.lax.scan (+ optional
+remat) so 126-layer models lower to compact HLO.
+
+Entry points
+  apply(params, cfg, tokens|embeds, ...)    -> (logits, aux)   # train/score
+  prefill(params, cfg, tokens|embeds, ...)  -> (last_logits, cache)
+  decode_step(params, cfg, cache, tokens)   -> (logits, cache)
+  init_cache(cfg, batch, max_seq, dtype)    -> cache pytree
+  loss_and_aux(params, cfg, batch)          -> (ce_loss, aux)
+
+Cache pytree mirrors the segment structure:
+  {"idx": (), "segments": [per-slot stacked cache, ...], "enc": enc_out?}
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.sharding import constrain
+from repro.common.types import LayerSpec, ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (dtype_of, embed_init, embed_lookup,
+                                 head_init, lm_logits, mlp_apply, mlp_init,
+                                 rmsnorm, rmsnorm_init, sinusoidal_positions)
+
+
+# ---------------------------------------------------------------------------
+# single block
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg: ModelConfig, spec: LayerSpec, dtype,
+                cross: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm_mix": rmsnorm_init(cfg.d_model)}
+    if spec.mixer in ("attn", "attn_local"):
+        p["attn"] = attn.attn_init(ks[0], cfg, cfg.attn, dtype)
+    elif spec.mixer == "mamba":
+        p["mamba"] = ssm_mod.mamba_init(ks[0], cfg, dtype)
+    elif spec.mixer == "rwkv":
+        p["rwkv"] = ssm_mod.rwkv_init(ks[0], cfg, dtype)
+    else:
+        raise ValueError(spec.mixer)
+    if cross:
+        p["norm_cross"] = rmsnorm_init(cfg.d_model)
+        p["cross"] = attn.cross_attn_init(ks[3], cfg, cfg.attn, dtype)
+    p["norm_ffn"] = rmsnorm_init(cfg.d_model)
+    if spec.ffn == "dense":
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.ffn.d_ff,
+                            cfg.ffn.mlp_type, dtype)
+    elif spec.ffn == "moe":
+        p["moe"] = moe_mod.moe_init(ks[1], cfg.d_model, cfg.ffn, dtype)
+    elif spec.ffn == "rwkv_cmix":
+        p["cmix"] = ssm_mod.cmix_init(ks[1], cfg, cfg.ffn.d_ff, dtype)
+    else:
+        raise ValueError(spec.ffn)
+    return p
+
+
+def _mixer_apply(p, x, spec: LayerSpec, cfg: ModelConfig, positions,
+                 causal=True):
+    if spec.mixer == "attn":
+        return attn.gqa_apply(p["attn"], x, cfg.attn, cfg, positions,
+                              cfg.attn.window, cfg.attn.rope_theta, causal) \
+            if cfg.attn.kind != "mla" else \
+            attn.mla_apply(p["attn"], x, cfg.attn, cfg, positions,
+                           cfg.attn.rope_theta)
+    if spec.mixer == "attn_local":
+        return attn.gqa_apply(p["attn"], x, cfg.attn, cfg, positions,
+                              cfg.local_window, cfg.local_rope_theta, causal)
+    if spec.mixer == "mamba":
+        return ssm_mod.mamba_apply(p["mamba"], x, cfg)
+    if spec.mixer == "rwkv":
+        return ssm_mod.rwkv_apply(p["rwkv"], x, cfg)
+    raise ValueError(spec.mixer)
+
+
+def _ffn_apply(p, x, spec: LayerSpec, cfg: ModelConfig):
+    """-> (out, aux)."""
+    if spec.ffn == "dense":
+        return mlp_apply(p["mlp"], x, cfg.ffn.mlp_type), 0.0
+    if spec.ffn == "moe":
+        return moe_mod.moe_apply(p["moe"], x, cfg.ffn)
+    if spec.ffn == "rwkv_cmix":
+        T = x.shape[1]
+        x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :T]
+        return ssm_mod.cmix_apply(p["cmix"], x, x_prev), 0.0
+    raise ValueError(spec.ffn)
+
+
+def _block_apply(p, x, spec: LayerSpec, cfg: ModelConfig, positions,
+                 enc: Optional[jax.Array] = None, causal: bool = True):
+    """Pre-norm residual block. -> (x, aux)."""
+    h = _mixer_apply(p, rmsnorm(p["norm_mix"], x, cfg.norm_eps), spec, cfg,
+                     positions, causal)
+    x = x + h
+    if "cross" in p:
+        h = attn.cross_attn_apply(p["cross"],
+                                  rmsnorm(p["norm_cross"], x, cfg.norm_eps),
+                                  enc, cfg.attn)
+        x = x + h
+    h, aux = _ffn_apply(p, rmsnorm(p["norm_ffn"], x, cfg.norm_eps), spec, cfg)
+    return x + h, aux
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _segment_init(key, cfg: ModelConfig, count: int, specs, dtype,
+                  cross=False) -> dict:
+    """Stack `count` repetitions: leaves get a leading (count,) dim."""
+    def one(k):
+        kk = jax.random.split(k, len(specs))
+        return {f"slot_{i}": _block_init(kk[i], cfg, s, dtype, cross)
+                for i, s in enumerate(specs)}
+
+    keys = jax.random.split(key, count)
+    reps = [one(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
+
+
+def init(key, cfg: ModelConfig) -> dict:
+    dtype = dtype_of(cfg)
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {}
+    params.update(embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype))
+    if not cfg.tie_embeddings:
+        params.update(head_init(ks[1], cfg.vocab_size, cfg.d_model, dtype))
+    params["final_norm"] = rmsnorm_init(cfg.d_model)
+    segs = cfg.segments()
+    params["segments"] = [
+        _segment_init(k, cfg, count, specs, dtype, cross=cfg.enc_dec)
+        for k, (count, specs) in zip(jax.random.split(ks[2], len(segs)), segs)
+    ]
+    if cfg.enc_dec:
+        # encoder: plain full-attention blocks over frame embeddings
+        enc_specs = (LayerSpec("attn", "dense"),)
+        params["enc_segments"] = [_segment_init(
+            ks[3], cfg, cfg.n_enc_layers, enc_specs, dtype)]
+        params["enc_norm"] = rmsnorm_init(cfg.d_model)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (full sequence)
+# ---------------------------------------------------------------------------
+
+def _run_segments(segments, cfg: ModelConfig, x, positions, specs_per_seg,
+                  enc=None, causal=True, remat=True):
+    """x -> (x, total_aux)."""
+    aux_total = 0.0
+    for seg_params, (count, specs) in zip(segments, specs_per_seg):
+        def body(carry, slot_params):
+            h, aux = carry
+            for i, spec in enumerate(specs):
+                h, a = _block_apply(slot_params[f"slot_{i}"], h, spec, cfg,
+                                    positions, enc, causal)
+                aux = aux + a
+            # sequence parallelism: the between-layer residual (the only
+            # activation remat saves per layer) shards its seq dim over
+            # the "seq" role axis (Megatron-SP); attention re-gathers it.
+            h = constrain(h, "batch", "seq", None)
+            return (h, aux), None
+
+        body_fn = jax.checkpoint(body) if remat else body
+        (x, aux_total), _ = jax.lax.scan(body_fn, (x, aux_total), seg_params)
+    return x, aux_total
+
+
+def _positions_for(cfg: ModelConfig, B: int, T: int, offset: int = 0):
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32) + offset, (B, T))
+    if cfg.attn.mrope_sections is not None:
+        # text-only stub: temporal/height/width indices coincide
+        return jnp.broadcast_to(pos, (3, B, T))
+    return pos
+
+
+def encode(params, cfg: ModelConfig, enc_embeds: jax.Array) -> jax.Array:
+    """Whisper encoder over precomputed frame embeddings (conv stub)."""
+    B, S, _ = enc_embeds.shape
+    x = enc_embeds + sinusoidal_positions(S, cfg.d_model).astype(
+        enc_embeds.dtype)
+    pos = _positions_for(cfg, B, S)
+    x, _ = _run_segments(params["enc_segments"], cfg, x, pos,
+                         [(cfg.n_enc_layers, (LayerSpec("attn", "dense"),))],
+                         causal=False)
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _embed_in(params, cfg, tokens, embeds):
+    if embeds is not None:
+        return embeds
+    x = embed_lookup(params, tokens, cfg)
+    return constrain(x, "batch", None, None)
+
+
+def apply(params, cfg: ModelConfig, tokens=None, embeds=None,
+          enc_embeds=None, remat: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. -> (logits (B,T,V), aux)."""
+    x = _embed_in(params, cfg, tokens, embeds)
+    B, T = x.shape[:2]
+    if cfg.enc_dec and not cfg.attn.use_rope:
+        x = x + sinusoidal_positions(T, cfg.d_model).astype(x.dtype)
+    pos = _positions_for(cfg, B, T)
+    enc = encode(params, cfg, enc_embeds) if cfg.enc_dec else None
+    x, aux = _run_segments(params["segments"], cfg, x, pos, cfg.segments(),
+                           enc=enc, remat=remat)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return lm_logits(params, x, cfg), aux
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def ce_loss(logits: jax.Array, labels: jax.Array,
+            mask: Optional[jax.Array] = None) -> jax.Array:
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def loss_and_aux(params, cfg: ModelConfig, batch: dict,
+                 remat: bool = True) -> Tuple[jax.Array, jax.Array]:
+    logits, aux = apply(params, cfg, tokens=batch.get("tokens"),
+                        embeds=batch.get("embeds"),
+                        enc_embeds=batch.get("enc_embeds"), remat=remat)
+    loss = ce_loss(logits, batch["labels"], batch.get("mask"))
+    return loss + aux, aux
+
+
+# ---------------------------------------------------------------------------
+# KV/state cache
+# ---------------------------------------------------------------------------
+
+def _slot_cache_init(cfg: ModelConfig, spec: LayerSpec, batch, max_seq,
+                     dtype) -> dict:
+    if spec.mixer == "attn":
+        if cfg.attn.kind == "mla":
+            c = attn.mla_cache_init(cfg.attn, batch, max_seq, dtype)
+        else:
+            c = attn.gqa_cache_init(cfg.attn, batch, max_seq,
+                                    cfg.attn.window, dtype)
+    elif spec.mixer == "attn_local":
+        c = attn.gqa_cache_init(cfg.attn, batch, max_seq, cfg.local_window,
+                                dtype)
+    elif spec.mixer == "mamba":
+        c = ssm_mod.mamba_cache_init(cfg, batch, dtype)
+    elif spec.mixer == "rwkv":
+        c = ssm_mod.rwkv_cache_init(cfg, batch, dtype)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.ffn == "rwkv_cmix":
+        c["cmix_shift"] = jnp.zeros((batch, 1, cfg.d_model), dtype)
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               enc_len: int = 0) -> dict:
+    dtype = dtype_of(cfg)
+    segments = []
+    for count, specs in cfg.segments():
+        slot = {f"slot_{i}": _slot_cache_init(cfg, s, batch, max_seq, dtype)
+                for i, s in enumerate(specs)}
+        segments.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (count,) + x.shape), slot))
+    cache = {"idx": jnp.zeros((), jnp.int32), "segments": segments}
+    if cfg.enc_dec:
+        cache["enc"] = jnp.zeros((batch, enc_len or cfg.enc_max_frames,
+                                  cfg.d_model), dtype)
+    return cache
+
+
+def _slot_decode(p, c, x, spec: LayerSpec, cfg: ModelConfig, idx,
+                 enc=None):
+    """One-token block step. x: (B,1,d) -> (x, cache)."""
+    h_in = rmsnorm(p["norm_mix"], x, cfg.norm_eps)
+    if spec.mixer == "attn":
+        if cfg.attn.kind == "mla":
+            h, c2 = attn.mla_decode(p["attn"], h_in, c_sub(c), idx, cfg.attn,
+                                    cfg, cfg.attn.rope_theta)
+        else:
+            h, c2 = attn.gqa_decode(p["attn"], h_in, c_sub(c), idx, cfg.attn,
+                                    cfg, cfg.attn.window, cfg.attn.rope_theta)
+    elif spec.mixer == "attn_local":
+        h, c2 = attn.gqa_decode(p["attn"], h_in, c_sub(c), idx, cfg.attn,
+                                cfg, cfg.local_window, cfg.local_rope_theta)
+    elif spec.mixer == "mamba":
+        h, c2 = ssm_mod.mamba_decode(p["mamba"], h_in, c_sub(c), cfg)
+    elif spec.mixer == "rwkv":
+        h, c2 = ssm_mod.rwkv_decode(p["rwkv"], h_in, c_sub(c), cfg)
+    else:
+        raise ValueError(spec.mixer)
+    x = x + h
+    if "cross" in p:
+        h = attn.cross_attn_apply(
+            p["cross"], rmsnorm(p["norm_cross"], x, cfg.norm_eps), enc,
+            cfg.attn)
+        x = x + h
+    h_f = rmsnorm(p["norm_ffn"], x, cfg.norm_eps)
+    if spec.ffn == "rwkv_cmix":
+        h = ssm_mod.cmix_apply(p["cmix"], h_f,
+                               c["cmix_shift"].astype(h_f.dtype))
+        c2["cmix_shift"] = h_f
+    else:
+        h, _ = _ffn_apply(p, h_f, spec, cfg)
+    return x + h, c2
+
+
+def c_sub(c: dict) -> dict:
+    return {k: v for k, v in c.items() if k != "cmix_shift"}
+
+
+def decode_step(params, cfg: ModelConfig, cache: dict,
+                tokens: jax.Array) -> Tuple[jax.Array, dict]:
+    """tokens: (B, 1) -> (logits (B, 1, V), cache)."""
+    idx = cache["idx"]
+    x = _embed_in(params, cfg, tokens, None)
+    if cfg.enc_dec and not cfg.attn.use_rope:
+        pe = sinusoidal_positions(cfg.max_seq, cfg.d_model)
+        x = x + jax.lax.dynamic_slice_in_dim(pe, idx, 1, 0)[None].astype(
+            x.dtype)
+    enc = cache.get("enc")
+    new_segments = []
+    for seg_params, seg_cache, (count, specs) in zip(
+            params["segments"], cache["segments"], cfg.segments()):
+
+        def body(x, xs):
+            sp, sc = xs
+            new_sc = {}
+            for i, spec in enumerate(specs):
+                x, new_sc[f"slot_{i}"] = _slot_decode(
+                    sp[f"slot_{i}"], sc[f"slot_{i}"], x, spec, cfg, idx, enc)
+            return x, new_sc
+
+        x, new_seg = jax.lax.scan(body, x, (seg_params, seg_cache))
+        new_segments.append(new_seg)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = lm_logits(params, x, cfg)
+    new_cache = {"idx": idx + 1, "segments": new_segments}
+    if enc is not None:
+        new_cache["enc"] = enc
+    return logits, new_cache
+
+
+def prefill(params, cfg: ModelConfig, tokens=None, embeds=None,
+            enc_embeds=None) -> Tuple[jax.Array, jax.Array]:
+    """Forward scoring pass for the prefill shape: last-token logits.
+
+    (A production server would also materialize the KV cache here; for the
+    dry-run cells the compute/memory/collective profile is the forward pass,
+    which this lowers exactly, without holding logits for all positions.)
+    """
+    x = _embed_in(params, cfg, tokens, embeds)
+    B, T = x.shape[:2]
+    if cfg.enc_dec and not cfg.attn.use_rope:
+        x = x + sinusoidal_positions(T, cfg.d_model).astype(x.dtype)
+    pos = _positions_for(cfg, B, T)
+    enc = encode(params, cfg, enc_embeds) if cfg.enc_dec else None
+    x, _ = _run_segments(params["segments"], cfg, x, pos, cfg.segments(),
+                         enc=enc, remat=False)
+    x = rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    logits = lm_logits(params, x, cfg)[:, 0]
+    return logits, logits.argmax(-1)

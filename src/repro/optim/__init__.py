@@ -1,0 +1,10 @@
+from repro.optim.optimizers import (Optimizer, adamw, clip_by_global_norm,
+                                    sgd_momentum)
+from repro.optim.schedules import constant, cosine_decay, linear_warmup_cosine
+from repro.optim.compression import (topk_compress_with_feedback,
+                                     int8_quantize, int8_dequantize)
+
+__all__ = ["Optimizer", "adamw", "sgd_momentum", "clip_by_global_norm",
+           "constant", "cosine_decay", "linear_warmup_cosine",
+           "topk_compress_with_feedback", "int8_quantize",
+           "int8_dequantize"]

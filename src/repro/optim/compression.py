@@ -1,0 +1,52 @@
+"""Gradient compression for the MA / sync-SGD baselines.
+
+EC-DNN itself needs no gradient traffic between aggregations (that is its
+point); these utilities serve the baselines the paper compares against and
+the sync mode's bandwidth knob at 1000+-node scale:
+
+  - top-k sparsification with error feedback (memory of dropped residuals
+    is re-added next step, preserving convergence),
+  - symmetric per-tensor int8 quantization for the wire format.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_compress_with_feedback(grads, residuals, frac: float = 0.01):
+    """Keep the top-`frac` fraction of entries (by |g|) per tensor.
+
+    -> (sparse_grads, new_residuals).  sparse + residual == grad exactly.
+    """
+    def one(g, r):
+        g = g.astype(jnp.float32) + r
+        flat = g.reshape(-1)
+        k = max(1, int(flat.size * frac))
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        mask = (jnp.abs(g) >= thresh).astype(jnp.float32)
+        kept = g * mask
+        return kept, g - kept
+
+    out = jax.tree.map(one, grads, residuals)
+    sparse = jax.tree.map(lambda t: t[0], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_res = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return sparse, new_res
+
+
+def int8_quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_residuals(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)

@@ -1,0 +1,27 @@
+"""Step -> learning-rate schedules (jit-safe, operate on traced steps)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.full((), lr, jnp.float32)
+
+
+def cosine_decay(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0, 1)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * cos)
+    return fn
+
+
+def linear_warmup_cosine(lr: float, warmup: int, total_steps: int,
+                         final_frac: float = 0.1):
+    cos = cosine_decay(lr, max(total_steps - warmup, 1), final_frac)
+
+    def fn(step):
+        s = step.astype(jnp.float32)
+        wu = lr * s / max(warmup, 1)
+        return jnp.where(step <= warmup, wu, cos(step - warmup))
+    return fn

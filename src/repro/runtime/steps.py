@@ -1,0 +1,139 @@
+"""Step-function builders shared by the Trainer and the launch layer.
+
+Everything here is a pure function factory: given configs it returns
+jit-able functions over (state, batch[, pseudo, lam]).  The Trainer wraps
+them with jax.jit for 1-device runs; launch/specs.py lowers the same
+functions under the production mesh with explicit in/out shardings — the
+dry-run therefore exercises exactly the code that trains.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.sharding import layout_ctx
+from repro.common.types import ModelConfig, ParallelConfig
+from repro.core import distill
+from repro.optim import Optimizer
+
+
+def make_logits_fn(cfg: ModelConfig, remat: bool = False) -> Callable:
+    if cfg.family == "cnn":
+        from repro.models import cnn
+        return lambda params, batch: cnn.nin_apply(params, batch["images"])
+    from repro.models import transformer as tf
+
+    def fn(params, batch):
+        logits, _ = tf.apply(params, cfg, tokens=batch.get("tokens"),
+                             embeds=batch.get("embeds"),
+                             enc_embeds=batch.get("enc_embeds"),
+                             remat=remat)
+        return logits
+    return fn
+
+
+def make_member_loss(cfg: ModelConfig) -> Callable:
+    """(params, batch, pseudo, lam) -> scalar Eqn-9 loss (+model aux)."""
+    if cfg.family == "cnn":
+        from repro.models import cnn
+
+        def cnn_loss(params, batch, pseudo, lam):
+            logits = cnn.nin_apply(params, batch["images"])
+            reg = sum(jnp.sum(jnp.square(v)) for k, v in params.items()
+                      if k.endswith("_w"))
+            return distill.mixed_ce(logits, batch["labels"], pseudo,
+                                    lam) + 1e-4 * reg
+        return cnn_loss
+
+    from repro.models import transformer as tf
+
+    def lm_loss(params, batch, pseudo, lam):
+        logits, aux = tf.apply(params, cfg, tokens=batch.get("tokens"),
+                               embeds=batch.get("embeds"),
+                               enc_embeds=batch.get("enc_embeds"),
+                               remat=True)
+        return distill.mixed_ce(logits, batch["labels"], pseudo, lam) + aux
+    return lm_loss
+
+
+def make_member_grads(cfg: ModelConfig, grad_accum: int = 1) -> Callable:
+    """(params, batch, pseudo, lam) -> (loss, grads), microbatched."""
+    member_loss = make_member_loss(cfg)
+
+    def fn(params, batch, pseudo, lam):
+        if grad_accum <= 1:
+            return jax.value_and_grad(member_loss)(params, batch, pseudo,
+                                                   lam)
+
+        def split(t):
+            # (B, ...) -> (accum, B/accum, ...) keeping the KEPT batch dim
+            # contiguous with the original sharding: device d's rows stay
+            # on device d every microstep (reshape (B,)->(accum,B/accum)
+            # would move the sharded dim onto `accum` and make scan's
+            # per-step slice a cross-device gather).
+            return jax.tree.map(
+                lambda x: x.reshape((-1, grad_accum) + x.shape[1:])
+                .swapaxes(0, 1), t)
+
+        def micro(c, mb):
+            b, ps = mb
+            l, g = jax.value_and_grad(member_loss)(params, b, ps, lam)
+            return (c[0] + l, jax.tree.map(
+                lambda acc, gi: acc + gi.astype(jnp.float32), c[1], g)), None
+
+        # f32 accumulators: bf16 += across many microbatches loses bits
+        zero = (jnp.zeros(()),
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params))
+        (l, g), _ = jax.lax.scan(micro, zero, (split(batch), split(pseudo)))
+        inv = 1.0 / grad_accum
+        return l * inv, jax.tree.map(lambda x: x * inv, g)
+    return fn
+
+
+def make_local_step(cfg: ModelConfig, opt: Optimizer,
+                    par: Optional[ParallelConfig] = None,
+                    grad_accum: int = 1, sync: bool = False) -> Callable:
+    """EC local-training step over member-stacked state.
+
+    (state {params, opt}, batch, pseudo, lam) -> (state, mean loss).
+    pseudo=None lowers the plain-CE variant.
+    """
+    member_grads = make_member_grads(cfg, grad_accum)
+    batch_axes = tuple(par.batch_axes) if par is not None else ()
+    seq_axis = (par.seq_axis or None) if par is not None else None
+
+    def step(state, batch, pseudo, lam):
+        with layout_ctx(batch=batch_axes, seq=seq_axis, train=True):
+            losses, grads = jax.vmap(
+                lambda p, b, ps: member_grads(p, b, ps, lam))(
+                state["params"], batch, pseudo)
+        if sync:
+            grads = jax.tree.map(
+                lambda g: jnp.broadcast_to(g.mean(0, keepdims=True),
+                                           g.shape), grads)
+        new_params, new_opt = jax.vmap(opt.update)(
+            grads, state["opt"], state["params"])
+        return {"params": new_params, "opt": new_opt}, losses.mean()
+    return step
+
+
+def make_serve_fns(cfg: ModelConfig, par: Optional[ParallelConfig] = None):
+    """(prefill_fn, decode_fn) for single-model serving."""
+    from repro.models import transformer as tf
+    batch_axes = tuple(par.batch_axes) if par is not None else \
+        ("pod", "data")
+
+    def prefill_fn(params, batch):
+        with layout_ctx(batch=batch_axes):
+            return tf.prefill(params, cfg, tokens=batch.get("tokens"),
+                              embeds=batch.get("embeds"),
+                              enc_embeds=batch.get("enc_embeds"))
+
+    def decode_fn(params, cache, tokens):
+        with layout_ctx(batch=batch_axes):
+            return tf.decode_step(params, cfg, cache, tokens)
+
+    return prefill_fn, decode_fn

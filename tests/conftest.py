@@ -1,0 +1,8 @@
+import os
+import sys
+
+# tests see exactly ONE CPU device (the dry-run's 512-device env is set
+# only inside launch/dryrun.py / subprocess tests, per its module rules)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,75 @@
+"""TopM sparse pseudo-label accumulator: exactness + error-bound properties."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compression as comp
+
+
+def _rand_probs(key, shape, vocab):
+    return jax.nn.softmax(jax.random.normal(key, shape + (vocab,)) * 3)
+
+
+def test_from_dense_to_dense_roundtrip_exact_when_m_covers():
+    p = _rand_probs(jax.random.PRNGKey(0), (4, 6), 16)
+    t = comp.from_dense(p, 16)  # M == V: lossless
+    d = comp.to_dense(t, 16)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(p), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(t.rest), 0.0, atol=1e-6)
+
+
+def test_merge_combines_duplicates_once():
+    v = 12
+    a = comp.from_dense(_rand_probs(jax.random.PRNGKey(1), (3,), v), v)
+    b = comp.from_dense(_rand_probs(jax.random.PRNGKey(2), (3,), v), v)
+    m = comp.merge(a, b)
+    dense = comp.to_dense(m, v)
+    expect = comp.to_dense(a, v) + comp.to_dense(b, v)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(expect),
+                               atol=1e-5)
+
+
+@hypothesis.given(
+    seed=st.integers(0, 1000),
+    m=st.integers(2, 8),
+    vocab=st.integers(8, 40),
+    k=st.integers(2, 5),
+)
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_accumulated_l1_error_bounded(seed, m, vocab, k):
+    """K-way accumulation: ||topm - oracle||_1 <= 2 * pruned mass."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), k)
+    denses = [_rand_probs(kk, (2,), vocab) for kk in keys]
+    acc = comp.from_dense(denses[0], m)
+    for d in denses[1:]:
+        acc = comp.merge(acc, comp.from_dense(d, m))
+    oracle = sum(denses)
+    approx = comp.to_dense(acc, vocab)
+    l1 = np.abs(np.asarray(approx) - np.asarray(oracle)).sum(-1)
+    bound = np.asarray(comp.l1_error_bound(acc))
+    assert (l1 <= bound + 1e-4).all()
+    # mass conservation: kept + rest == total mass exactly
+    total = np.asarray(acc.vals.sum(-1) + acc.rest)
+    np.testing.assert_allclose(total, float(k), atol=1e-4)
+
+
+def test_normalize_sums_to_one():
+    p = _rand_probs(jax.random.PRNGKey(3), (5,), 32)
+    acc = comp.from_dense(p * 7.0, 8)
+    n = comp.normalize(acc)
+    total = np.asarray(n.vals.sum(-1) + n.rest)
+    np.testing.assert_allclose(total, 1.0, atol=1e-5)
+
+
+def test_topm_keeps_heaviest():
+    p = jnp.asarray([[0.4, 0.3, 0.2, 0.05, 0.05]])
+    t = comp.from_dense(p, 2)
+    assert set(np.asarray(t.idx[0]).tolist()) == {0, 1}
+    np.testing.assert_allclose(float(t.rest[0]), 0.3, atol=1e-6)
+
+
+def test_bytes_per_token():
+    assert comp.bytes_per_token(64) == 64 * 8 + 4

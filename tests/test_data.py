@@ -1,0 +1,70 @@
+"""Synthetic data: determinism, disjoint member shards, learnable structure."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import (image_member_datasets, lm_member_datasets,
+                        sample_batch, sample_relabel_subset)
+
+
+def test_deterministic():
+    k = jax.random.PRNGKey(7)
+    a, _ = lm_member_datasets(k, 2, 8, 16, 100)
+    b, _ = lm_member_datasets(k, 2, 8, 16, 100)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+
+
+def test_member_shards_disjoint():
+    k = jax.random.PRNGKey(0)
+    train, _ = lm_member_datasets(k, 4, 16, 12, 50)
+    t = np.asarray(train["tokens"])
+    # sequences across members differ (random partition of the stream)
+    assert not (t[0] == t[1]).all()
+
+
+def test_labels_are_shifted_tokens():
+    k = jax.random.PRNGKey(0)
+    train, _ = lm_member_datasets(k, 2, 4, 10, 64)
+    # labels[t] is the next-token target: labels[:-1] aligns with
+    # tokens[1:] by construction of the stream
+    np.testing.assert_array_equal(np.asarray(train["tokens"][..., 1:]),
+                                  np.asarray(train["labels"][..., :-1]))
+
+
+def test_lm_structure_is_learnable():
+    """Bigram statistics beat uniform: the affine rules leak into counts."""
+    k = jax.random.PRNGKey(1)
+    train, _ = lm_member_datasets(k, 1, 64, 32, 16)
+    toks = np.asarray(train["tokens"][0]).reshape(-1)
+    nxt = np.asarray(train["labels"][0]).reshape(-1)
+    counts = np.zeros((16, 16))
+    np.add.at(counts, (toks, nxt), 1)
+    probs = counts / np.maximum(counts.sum(1, keepdims=True), 1)
+    # per-row entropy far below uniform ln(16)
+    ent = -(probs * np.log(np.maximum(probs, 1e-12))).sum(1)
+    assert ent[counts.sum(1) > 10].mean() < 0.6 * np.log(16)
+
+
+def test_image_classes_separable():
+    k = jax.random.PRNGKey(2)
+    train, test = image_member_datasets(k, 2, 128, n_classes=4, img=8,
+                                        noise=0.3)
+    x = np.asarray(train["images"]).reshape(-1, 8 * 8 * 3)
+    y = np.asarray(train["labels"]).reshape(-1)
+    # nearest-class-mean classifier should beat chance comfortably
+    means = np.stack([x[y == c].mean(0) for c in range(4)])
+    pred = ((x[:, None] - means[None]) ** 2).sum(-1).argmin(1)
+    assert (pred == y).mean() > 0.8
+
+
+def test_sampling_shapes():
+    rng = np.random.default_rng(0)
+    k = jax.random.PRNGKey(3)
+    train, _ = image_member_datasets(k, 3, 32, n_classes=5, img=8)
+    b = sample_batch(rng, train, 4)
+    assert b["images"].shape == (3, 4, 8, 8, 3)
+    sub, idx = sample_relabel_subset(rng, train, 0.5)
+    assert sub["images"].shape == (3, 16, 8, 8, 3)
+    # indices unique per member (sampling without replacement)
+    assert all(len(set(row)) == len(row) for row in idx)

@@ -1,0 +1,111 @@
+"""Property tests for the paper's central claim (Section 3).
+
+EC (output averaging): L(ensemble) <= mean_k L(member)  — ALWAYS, by
+Jensen, for any member logits whatsoever (hypothesis searches for a
+violation and must not find one).
+
+MA (parameter averaging): no such bound — we exhibit a concrete
+counterexample where the parameter-averaged model is strictly worse than
+every local model (the paper's Figure 1 phenomenon, in miniature).
+"""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ensemble as ens
+
+
+@hypothesis.given(
+    logits=hnp.arrays(np.float32, hnp.array_shapes(min_dims=3, max_dims=3,
+                                                   min_side=2, max_side=6),
+                      elements=st.floats(-30, 30, width=32)),
+)
+@hypothesis.settings(max_examples=200, deadline=None)
+def test_jensen_gap_nonnegative(logits):
+    K, B, C = logits.shape
+    labels = np.arange(B) % C
+    gap = ens.jensen_gap(jnp.asarray(logits), jnp.asarray(labels))
+    assert float(gap) >= -1e-4, f"Jensen violated: gap={float(gap)}"
+
+
+@hypothesis.given(
+    logits=hnp.arrays(np.float32, (4, 8, 10),
+                      elements=st.floats(-10, 10, width=32)),
+    w=hnp.arrays(np.float32, (4,), elements=st.floats(0.0, 1.0, width=32)),
+)
+@hypothesis.settings(max_examples=100, deadline=None)
+def test_jensen_gap_with_quorum_weights(logits, w):
+    hypothesis.assume(w.sum() > 1e-3)
+    labels = np.arange(8) % 10
+    p = ens.ensemble_probs(jnp.asarray(logits), weights=jnp.asarray(w))
+    gold = jnp.take_along_axis(p, jnp.asarray(labels)[:, None], 1)[:, 0]
+    e_nll = -jnp.log(jnp.maximum(gold, 1e-30)).mean()
+    lp = ens.member_log_probs(jnp.asarray(logits))
+    m_nll = -jnp.take_along_axis(
+        lp, jnp.broadcast_to(jnp.asarray(labels), (4, 8))[..., None],
+        axis=-1)[..., 0].mean(1)
+    weighted_mean = float((m_nll * (w / w.sum())).sum())
+    assert float(e_nll) <= weighted_mean + 1e-4
+
+
+def test_ma_counterexample():
+    """Two perfect XOR-ish members whose parameter mean is near-chance.
+
+    f(x) = softmax(W2 · relu(W1 x)): member A and member B are weight-
+    permuted versions of the same perfect classifier (a symmetry of the
+    network).  MA averages the permuted weights and destroys the function;
+    the ensemble of outputs is untouched by the permutation.
+    """
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (64, 8))
+    w1 = jax.random.normal(jax.random.PRNGKey(1), (8, 16)) * 1.5
+    w2 = jax.random.normal(jax.random.PRNGKey(2), (16, 4)) * 1.5
+    labels = jnp.argmax(jax.nn.relu(x @ w1) @ w2, axis=-1)  # teacher
+
+    perm = jax.random.permutation(jax.random.PRNGKey(3), 16)
+    members = [
+        (w1, w2),
+        (w1[:, perm], w2[perm, :]),  # identical function, permuted units
+    ]
+
+    def nll(w1_, w2_):
+        logits = jax.nn.relu(x @ w1_) @ w2_
+        lp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(lp, labels[:, None], 1).mean()
+
+    member_nll = jnp.stack([nll(*m) for m in members])
+    ma_nll = nll((members[0][0] + members[1][0]) / 2,
+                 (members[0][1] + members[1][1]) / 2)
+
+    member_logits = jnp.stack(
+        [jax.nn.relu(x @ a) @ b for a, b in members])
+    ec_nll = ens.ensemble_nll(member_logits, labels)
+
+    # MA is catastrophically worse than every member; EC is not.
+    assert float(ma_nll) > float(member_nll.max()) + 0.5
+    assert float(ec_nll) <= float(member_nll.mean()) + 1e-5
+
+
+@pytest.mark.parametrize("avg_probs", [True, False])
+def test_ensemble_probs_normalized(avg_probs):
+    logits = jax.random.normal(jax.random.PRNGKey(0), (3, 5, 7)) * 4
+    p = ens.ensemble_probs(logits, average_probs=avg_probs)
+    np.testing.assert_allclose(np.asarray(p.sum(-1)), 1.0, rtol=1e-5)
+
+
+def test_ma_average_is_mean():
+    tree = {"a": jnp.arange(12.0).reshape(4, 3),
+            "b": jnp.ones((4, 2, 2))}
+    out = ens.ma_average(tree)
+    np.testing.assert_allclose(np.asarray(out["a"][0]),
+                               np.asarray(tree["a"].mean(0)), rtol=1e-6)
+    assert out["a"].shape == (4, 3)
+    # weighted
+    w = jnp.array([1.0, 0.0, 0.0, 0.0])
+    out = ens.ma_average(tree, weights=w)
+    np.testing.assert_allclose(np.asarray(out["a"][2]),
+                               np.asarray(tree["a"][0]), rtol=1e-6)

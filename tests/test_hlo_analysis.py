@@ -1,0 +1,77 @@
+"""HLO analyzer: trip-count-corrected FLOPs/collectives on a known module
+(4 host devices in a subprocess so the main test process keeps 1 device)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import sys
+    sys.path.insert(0, "{src}")
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P, NamedSharding
+    from repro.launch.hlo_analysis import analyze
+
+    mesh = jax.make_mesh((4,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+    def body(x, w):
+        h = x @ w
+        h = jax.lax.with_sharding_constraint(h, P(None, "model"))
+        return h @ w.T, None
+
+    def f(x, ws):
+        y, _ = jax.lax.scan(body, x, ws)
+        return y.sum()
+
+    xs = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((7, 128, 128), jnp.float32)
+    with mesh:
+        c = jax.jit(f).lower(xs, ws).compile()
+    costs = analyze(c.as_text())
+    # 7 iters x 2 matmuls x 2*64*128*128 flops / 4 devices
+    expect = 2 * 7 * 2 * 64 * 128 * 128 / 4
+    ratio = costs.flops / expect
+    assert 0.99 < ratio < 1.01, f"flops ratio {{ratio}}"
+    ar = costs.collective_count["all-reduce"]
+    assert ar == 7, f"expected 7 all-reduces (1/iter), got {{ar}}"
+    # all-reduce bytes: 7 x (64x128x4) x 2 (ring factor)
+    expect_b = 7 * 64 * 128 * 4 * 2
+    assert abs(costs.collective_bytes["all-reduce"] - expect_b) < 1, \\
+        costs.collective_bytes
+    assert costs.hbm_bytes > 0
+    print("HLO_OK")
+""")
+
+
+def test_analyzer_on_known_module():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", SCRIPT.format(src=src)],
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "HLO_OK" in proc.stdout
+
+
+def test_shape_bytes_parser():
+    from repro.launch.hlo_analysis import _shape_bytes
+    assert _shape_bytes("f32[64,128]{1,0}") == 64 * 128 * 4
+    assert _shape_bytes("bf16[2,3]") == 12
+    assert _shape_bytes("(f32[4], s32[2])") == 16 + 8
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_parse_module_smoke():
+    from repro.launch.hlo_analysis import parse_module
+    txt = (
+        "ENTRY %main (p: f32[4,4]) -> f32[4,4] {\n"
+        "  %p = f32[4,4]{1,0} parameter(0)\n"
+        "  ROOT %dot = f32[4,4]{1,0} dot(%p, %p), "
+        "lhs_contracting_dims={1}, rhs_contracting_dims={0}\n"
+        "}\n")
+    comps = parse_module(txt)
+    assert "ENTRY" in comps
+    ops = [i.opcode for i in comps["ENTRY"].instrs]
+    assert "dot" in ops

@@ -1,0 +1,99 @@
+"""Sharding rules: pspec mapping, layout roles, sanitization, cache specs."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.common.sharding import (constrain, layout_ctx, make_param_pspecs,
+                                   pspec_for)
+from repro.common.types import ParallelConfig
+
+
+PAR = ParallelConfig(model_axis="model", fsdp_axis="")
+PAR_FSDP = ParallelConfig(model_axis="model", fsdp_axis="data")
+
+
+def test_column_row_rules():
+    assert pspec_for("w_q", 2, PAR) == P(None, "model")
+    assert pspec_for("w_down", 2, PAR) == P("model", None)
+    assert pspec_for("w_q", 2, PAR_FSDP) == P("data", "model")
+    assert pspec_for("w_down", 2, PAR_FSDP) == P("model", "data")
+
+
+def test_expert_and_embed_rules():
+    assert pspec_for("experts_gate", 3, PAR) == P("model", None, None)
+    assert pspec_for("experts_down", 3, PAR_FSDP) == P("model", None, "data")
+    assert pspec_for("embed", 2, PAR) == P("model", None)
+
+
+def test_replicated_prefixes():
+    for name in ("norm_scale", "router", "rwkv_decay_base", "mamba_A_log"):
+        assert pspec_for(name, 1, PAR) == P(None)
+
+
+def test_stacked_segment_padding():
+    # scan-stacked leaves get left-padded Nones
+    assert pspec_for("w_q", 3, PAR) == P(None, None, "model")
+    assert pspec_for("w_q", 4, PAR) == P(None, None, None, "model")
+
+
+def test_make_param_pspecs_sanitizes_nondivisible():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    params = {"embed": jax.ShapeDtypeStruct((51865, 384), jnp.float32),
+              "w_q": jax.ShapeDtypeStruct((384, 512), jnp.float32)}
+    specs = make_param_pspecs(params, PAR, mesh=FakeMesh())
+    assert specs["embed"] == P(None, None)  # 51865 % 16 != 0 -> replicate
+    assert specs["w_q"] == P(None, "model")  # 512 % 16 == 0 -> keep
+
+
+def test_ensemble_leading_axis():
+    params = {"w_q": jax.ShapeDtypeStruct((4, 384, 512), jnp.float32)}
+    par = ParallelConfig(ensemble_axis="data")
+    specs = make_param_pspecs(params, par, ensemble=True)
+    assert specs["w_q"] == P("data", None, "model")
+
+
+def test_constrain_noop_off_mesh():
+    x = jnp.ones((4, 8))
+    assert constrain(x, None, "model") is x  # no mesh: unchanged
+
+
+def test_layout_roles():
+    from repro.common.sharding import _layout_map
+    assert _layout_map()["batch"] == ("pod", "data")
+    with layout_ctx(batch=("data",), seq="model"):
+        assert _layout_map()["batch"] == ("data",)
+        assert _layout_map()["seq"] == "model"
+    assert _layout_map()["batch"] == ("pod", "data")
+
+
+def test_cache_pspecs_rules():
+    from repro.launch.specs import cache_pspecs
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+
+    par = ParallelConfig(batch_axes=("data",))
+    cache = {
+        "idx": jax.ShapeDtypeStruct((), jnp.int32),
+        "segments": [{
+            "slot_0": {
+                "k": jax.ShapeDtypeStruct((2, 128, 32768, 8, 128),
+                                          jnp.bfloat16),
+                "ssm": jax.ShapeDtypeStruct((2, 128, 8192, 16),
+                                            jnp.float32),
+            }}],
+    }
+    specs = cache_pspecs(None, cache, par, FakeMesh())
+    # kv=8 < 16 -> seq-sharded; leading stack dim None
+    assert specs["segments"][0]["slot_0"]["k"] \
+        == P(None, "data", "model", None, None)
+    assert specs["segments"][0]["slot_0"]["ssm"] \
+        == P(None, "data", "model", None)
+    assert specs["idx"] == P()
