@@ -14,13 +14,14 @@ def main():
     full = "--full" in sys.argv
     flag = [] if full else ["--fast"]
     from benchmarks import (aggregation_cost, fig12, kernel_bench,
-                            roofline, table1)
+                            roofline, serving_bench, table1)
     suite = [
         ("Table 1 (EC vs MA vs S-DNN)", table1.main, flag),
         ("Fig 1/2 (global-vs-local gaps)", fig12.main, flag),
         ("Aggregation communication cost", aggregation_cost.main, flag),
         ("Kernel structural roofline", kernel_bench.main, flag),
         ("Dry-run roofline table", roofline.main, flag),
+        ("Serving: engine vs member loop", serving_bench.main, flag),
     ]
     failures = 0
     for name, fn, argv in suite:

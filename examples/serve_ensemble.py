@@ -1,21 +1,22 @@
 """Batched serving with an EC ensemble (EC-DNN_G) vs a single member.
 
 The paper's Section 4: "take the global model as the final model if there
-are enough resources at test time".  This example decodes a token batch
-both ways and reports the ensemble's log-likelihood gain on held-out
-continuations — the serving-side face of the Jensen guarantee.
+are enough resources at test time".  This example scores held-out
+continuations through the serving engine (repro.serving.EnsembleEngine
+— the same vmapped-member decode path that generates tokens) and reports
+the ensemble's log-likelihood gain: the serving-side face of the Jensen
+guarantee.
 
   PYTHONPATH=src python examples/serve_ensemble.py
 """
 import argparse
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import registry
-from repro.core import ensemble as ens
 from repro.data import lm_member_datasets
 from repro.models import transformer as tf
+from repro.serving import EnsembleEngine
 
 
 def main():
@@ -35,33 +36,14 @@ def main():
     toks = test["tokens"][: args.batch]
     labels = test["labels"][: args.batch]
 
+    engine = EnsembleEngine(cfg, params, n_slots=1, max_prompt=1, max_out=1)
+    member_nll, ens_nll = engine.score(toks, labels)
+
     B, T = toks.shape
-    caches = [tf.init_cache(cfg, B, max_seq=T) for _ in range(K)]
-    step = jax.jit(lambda p, c, t: tf.decode_step(p, cfg, c, t))
-
-    member_nll = jnp.zeros((K,))
-    ens_nll = 0.0
-    for t in range(T):
-        logits_k = []
-        for m in range(K):
-            pm = jax.tree.map(lambda x: x[m], params)
-            lg, caches[m] = step(pm, caches[m], toks[:, t: t + 1])
-            logits_k.append(lg[:, 0])
-        stack = jnp.stack(logits_k)                       # (K, B, V)
-        lp = jax.nn.log_softmax(stack.astype(jnp.float32), -1)
-        gold = labels[:, t]
-        member_nll += -jnp.take_along_axis(
-            lp, gold[None, :, None], 2)[..., 0].mean(-1)
-        p_ens = ens.ensemble_probs(stack)
-        ens_nll += float(-jnp.log(jnp.take_along_axis(
-            p_ens, gold[:, None], 1) + 1e-30).mean())
-
-    member_nll = member_nll / T
-    ens_nll /= T
     print(f"served {B}x{T} tokens with K={K} members ({args.arch} reduced)")
     for m in range(K):
         print(f"  member {m}: nll/token = {float(member_nll[m]):.4f}")
-    print(f"  EC-DNN_G ensemble: nll/token = {ens_nll:.4f} "
+    print(f"  EC-DNN_G ensemble: nll/token = {float(ens_nll):.4f} "
           f"(<= mean member {float(member_nll.mean()):.4f} by Jensen)")
 
 

@@ -164,10 +164,85 @@ def _resolve(axis):
     return axis
 
 
+def ambient_mesh():
+    """The mesh constrain() honors, across jax versions.
+
+    jax >= 0.5 installs an *abstract* mesh via jax.sharding.set_mesh and
+    exposes it with get_abstract_mesh().  jax 0.4.x has neither public
+    API: fall back to the pjit thread-resources mesh that `with mesh:`
+    installs.  Returns None when off-mesh (constrain becomes a no-op).
+    """
+    get_am = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_am is not None:
+        m = get_am()
+        return None if m is None or m.empty else m
+    from jax._src import mesh as _mesh_lib
+    m = getattr(_mesh_lib, "get_abstract_mesh", lambda: None)()
+    abstract_cls = getattr(jax.sharding, "AbstractMesh", ())
+    if abstract_cls and isinstance(m, abstract_cls):
+        return m
+    env = _mesh_lib.thread_resources.env.physical_mesh
+    return None if env.empty else env
+
+
+def set_mesh(mesh):
+    """Version-portable jax.sharding.set_mesh (context manager).
+
+    On jax 0.4.x a Mesh is itself the context manager that installs the
+    thread-resources env ambient_mesh() falls back to.
+    """
+    sm = getattr(jax.sharding, "set_mesh", None)
+    return sm(mesh) if sm is not None else mesh
+
+
+def make_mesh(axis_shapes, axis_names, auto: bool = True):
+    """Version-portable jax.make_mesh with all-Auto axis types.
+
+    jax >= 0.5 wants explicit axis_types for sharding-in-types; 0.4.x
+    has neither the kwarg nor the enum — plain make_mesh is all-auto.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(axis_shapes, axis_names)
+    kinds = (axis_type.Auto if auto else axis_type.Explicit,)
+    return jax.make_mesh(axis_shapes, axis_names,
+                         axis_types=kinds * len(axis_names))
+
+
+def shard_map(f, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: bool = False):
+    """Version-portable jax.shard_map.
+
+    `axis_names` lists the MANUAL axes (jax >= 0.6 kwarg); on 0.4.x it
+    maps to `auto` = every mesh axis not named, and check_vma to the old
+    check_rep.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        kw = {} if axis_names is None else {"axis_names": set(axis_names)}
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma, **kw)
+    from jax.experimental.shard_map import shard_map as sm04
+    auto = frozenset() if axis_names is None \
+        else frozenset(mesh.axis_names) - set(axis_names)
+    return sm04(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                check_rep=check_vma, auto=auto)
+
+
+def axis_size(axis: str) -> int:
+    """Version-portable jax.lax.axis_size inside shard_map/pmap bodies.
+
+    0.4.x predates lax.axis_size; psum of a unit constant is the classic
+    idiom and constant-folds to a Python int.
+    """
+    fn = getattr(jax.lax, "axis_size", None)
+    return fn(axis) if fn is not None else jax.lax.psum(1, axis)
+
+
 def mesh_axis_size(axis: str) -> int:
     """Size of a mesh axis at trace time (1 off-mesh / absent)."""
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty:
+    mesh = ambient_mesh()
+    if mesh is None:
         return 1
     return dict(zip(mesh.axis_names, mesh.axis_sizes)).get(axis, 1)
 
@@ -186,8 +261,8 @@ def constrain(x, *spec):
     says constrain(x, None, None, "model") means "pin TP on this dim,
     leave the rest to propagation" — and that is what this emits.
     """
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty:
+    mesh = ambient_mesh()
+    if mesh is None:
         return x
     names = set(mesh.axis_names)
     U = P.UNCONSTRAINED

@@ -39,6 +39,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.common.sharding import axis_size as _axis_size
+from repro.common.sharding import shard_map as _shard_map
 from repro.common.types import ECConfig
 from repro.core import compression as comp
 from repro.core import ensemble as ens
@@ -77,7 +79,7 @@ def allgather_relabel(stacked_params, batches, logits_fn: Callable,
 def _ring_body(local_params, local_batch, logits_fn, ec: ECConfig,
                axis: str, quorum=None, n_vocab_shards: int = 1):
     """Runs on one shard of the ensemble axis. Leading local dim = 1."""
-    K = jax.lax.axis_size(axis)
+    K = _axis_size(axis)
     me = jax.lax.axis_index(axis)
     perm = [(i, (i + 1) % K) for i in range(K)]
 
@@ -157,8 +159,8 @@ def ring_relabel(mesh, stacked_params, batches, logits_fn: Callable,
     else:
         out_specs = P(axis)
     manual = {axis, *extra_manual_axes}
-    return jax.shard_map(
-        lambda p, b: body(p, b), mesh=mesh, in_specs=in_specs,
+    return _shard_map(
+        lambda p, b: body(p, b), mesh, in_specs=in_specs,
         out_specs=out_specs, axis_names=manual, check_vma=False)(
             stacked_params, batches)
 

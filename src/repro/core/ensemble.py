@@ -48,6 +48,41 @@ def ensemble_probs(member_logits: jax.Array,
     return jax.nn.softmax(lg, axis=-1)
 
 
+def quorum_weights(mask: jax.Array) -> jax.Array:
+    """(K,) 0/1 liveness mask -> normalized member weights.
+
+    Dropped members get exactly 0 weight and the rest renormalize to
+    1/(K-r) — the straggler policy of core/aggregation.py, reused by the
+    serving engine so a slow/dead member degrades the ensemble to the
+    surviving subset (which still carries the Jensen guarantee).
+    An all-zero quorum falls back to uniform rather than dividing by 0.
+    """
+    m = mask.astype(jnp.float32)
+    alive = m.sum()
+    return jnp.where(alive > 0, m / jnp.maximum(alive, 1.0),
+                     jnp.ones_like(m) / m.shape[0])
+
+
+def ensemble_log_probs(member_logits: jax.Array,
+                       weights: Optional[jax.Array] = None) -> jax.Array:
+    """(K, ..., V) member logits -> (..., V) LOG of the Eqn-6 mixture.
+
+    log sum_k w_k softmax(z_k) computed with logsumexp — the log-space
+    twin of ensemble_probs (exp of this matches it to float tolerance)
+    used on the serving hot path: batched over arbitrary middle dims,
+    quorum-weighted, and safe to feed straight into categorical sampling
+    or argmax without the +eps clamp a probs->log round-trip needs.
+    Zero-weight members contribute -inf mass, i.e. exactly nothing.
+    """
+    K = member_logits.shape[0]
+    w = jnp.ones((K,), jnp.float32) / K if weights is None \
+        else weights / jnp.maximum(weights.sum(), 1e-9)
+    logw = jnp.log(jnp.maximum(w, 1e-30)).reshape(
+        (K,) + (1,) * (member_logits.ndim - 1))
+    lp = member_log_probs(member_logits)
+    return jax.nn.logsumexp(lp + logw, axis=0)
+
+
 def ensemble_nll(member_logits: jax.Array, labels: jax.Array,
                  weights: Optional[jax.Array] = None) -> jax.Array:
     """Cross-entropy of the ensemble distribution against int labels."""

@@ -59,7 +59,14 @@ def image_member_datasets(key, n_members: int, per_member: int,
 # ---------------------------------------------------------------------------
 
 def _affine_stream(key, n_seq: int, seq_len: int, vocab: int,
-                   n_rules: int = 16, noise_p: float = 0.05):
+                   n_rules: int = 0, noise_p: float = 0.05):
+    """n_rules=0 scales the pool with the vocab (vocab//4, clamped to
+    [2, 16]): a small vocab with as many rules as tokens mixes ~vocab
+    affine maps into a near-uniform bigram table, destroying the
+    marginal structure the stream promises (tests/test_data.py checks
+    bigram entropy is well below uniform)."""
+    if n_rules <= 0:
+        n_rules = min(16, max(2, vocab // 4))
     kr, k0, kn, kz = jax.random.split(key, 4)
     rule_a = jax.random.randint(kr, (n_rules,), 1, max(vocab - 1, 2))
     rule_b = jax.random.randint(kz, (n_rules,), 0, vocab)

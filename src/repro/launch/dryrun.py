@@ -68,6 +68,7 @@ def flops_model(arch: str, shape_name: str) -> float:
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              variant: str = "plain") -> dict:
     import jax
+    from repro.common.sharding import set_mesh as _set_mesh
     from repro.common.types import SHAPES
     from repro.configs import registry
     from repro.launch import hlo_analysis
@@ -93,7 +94,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         # use_mesh (NOT `with mesh:`): only use_mesh installs the abstract
         # mesh that with_sharding_constraint needs — under a bare Mesh
         # context every internal constraint silently no-ops.
-        with jax.sharding.set_mesh(mesh):
+        with _set_mesh(mesh):
             lowered = jax.jit(
                 cell.fn, in_shardings=cell.in_shardings,
                 out_shardings=cell.out_shardings,

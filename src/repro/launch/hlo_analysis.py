@@ -108,7 +108,14 @@ def _parse_operands(rest: str) -> List[str]:
             cur += ch
     if cur.strip():
         ops.append(cur.strip())
-    return [o for o in ops if o.startswith("%")]
+    # newer XLA prints bare "%name" operands; older versions prefix the
+    # type ("f32[64,128]{1,0} %name") — take the %name token either way
+    out = []
+    for o in ops:
+        nm = re.search(r"%[\w\.\-]+", o)
+        if nm:
+            out.append(nm.group(0))
+    return out
 
 
 _HEADER_RE = re.compile(

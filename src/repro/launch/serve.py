@@ -1,12 +1,22 @@
-"""Serving launcher: batched decode with a single model or an EC ensemble.
+"""Serving launcher: the EC-DNN_G ensemble engine behind a CLI.
 
-EC-DNN_G serving: each ensemble member scores the batch and the output
-distributions are averaged (paper Eqn 6) before sampling — the ensemble
-IS the product when resources allow.  Single-model mode serves a member /
-compressed model (EC-DNN_L).
+EC-DNN_G serving: all K members score each step inside ONE compiled
+program (repro.serving.EnsembleEngine) and the output distributions are
+averaged (paper Eqn 6) before sampling — the ensemble IS the product
+when resources allow.  --members 1 serves a single member / compressed
+model (EC-DNN_L) through the identical path.
 
+Static batch (tok/s):
   python -m repro.launch.serve --arch gemma3-1b --reduced --members 4 \
       --batch 8 --steps 16 --ensemble
+
+Continuous batching under synthetic load (tok/s + TTFT + latency
+percentiles):
+  python -m repro.launch.serve --arch gemma3-1b --reduced --members 4 \
+      --ensemble --continuous --requests 32
+
+--quorum "1,1,0,1" drops member 2 (straggler policy): the fused
+distribution renormalizes over the survivors, no recompile.
 """
 from __future__ import annotations
 
@@ -14,7 +24,7 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 
 def main():
@@ -24,61 +34,64 @@ def main():
     ap.add_argument("--members", type=int, default=1)
     ap.add_argument("--ensemble", action="store_true",
                     help="EC-DNN_G: average member distributions")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="decode slots (concurrent requests)")
     ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=16,
+                    help="max new tokens per request")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--eos-id", type=int, default=-1)
+    ap.add_argument("--quorum", default="",
+                    help="comma 0/1 per member, e.g. 1,1,0,1")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching under synthetic load")
+    ap.add_argument("--requests", type=int, default=32,
+                    help="synthetic requests (--continuous)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     from repro.configs import registry
-    from repro.core import ensemble as ens
     from repro.models import transformer as tf
+    from repro.serving import EnsembleEngine, client
 
     cfg = registry.get_config(args.arch, reduced=args.reduced)
     key = jax.random.PRNGKey(args.seed)
     K = args.members if args.ensemble else 1
     params = jax.vmap(lambda k: tf.init(k, cfg))(jax.random.split(key, K))
+    quorum = ([float(x) for x in args.quorum.split(",")]
+              if args.quorum else None)
+    if quorum is not None and len(quorum) != K:
+        raise SystemExit(f"--quorum needs {K} entries, got {len(quorum)}")
+
+    engine = EnsembleEngine(
+        cfg, params, n_slots=args.batch, max_prompt=args.prompt_len,
+        max_out=args.steps, temperature=args.temperature, top_k=args.top_k,
+        eos_id=args.eos_id, quorum=quorum, seed=args.seed)
+    print(f"engine: K={K} members, {args.batch} slots, "
+          f"cache pool {engine.cache_bytes() / 2**20:.1f} MiB")
+
+    if args.continuous:
+        reqs = client.make_requests(
+            args.requests, cfg.vocab_size,
+            prompt_len=(max(2, args.prompt_len // 4), args.prompt_len),
+            max_new=(max(1, args.steps // 2), args.steps), seed=args.seed)
+        # compile outside the timed run so percentiles measure serving
+        engine.generate([reqs[0][0]], max_new=1)
+        client.print_report(client.run_load(engine, reqs))
+        return 0
 
     B = args.batch
-    max_seq = args.prompt_len + args.steps
-    prompt = jax.random.randint(jax.random.PRNGKey(1), (B, args.prompt_len),
-                                0, cfg.vocab_size)
-    caches = [tf.init_cache(cfg, B, max_seq=max_seq) for _ in range(K)]
-    if cfg.enc_dec:
-        enc = jnp.zeros((B, cfg.enc_max_frames, cfg.d_model), jnp.bfloat16)
-        for c in range(K):
-            caches[c]["enc"] = tf.encode(
-                jax.tree.map(lambda x: x[c], params), cfg, enc)
-
-    step = jax.jit(lambda p, c, t: tf.decode_step(p, cfg, c, t))
-
+    prompt = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (B, args.prompt_len), 0, cfg.vocab_size))
+    engine.generate(list(prompt), max_new=args.steps)  # warmup/compile
     t0 = time.time()
-    tok = prompt[:, :1]
-    out_tokens = []
-    for i in range(args.prompt_len + args.steps - 1):
-        member_logits = []
-        for m in range(K):
-            pm = jax.tree.map(lambda x: x[m], params)
-            logits, caches[m] = step(pm, caches[m], tok)
-            member_logits.append(logits[:, 0])
-        probs = ens.ensemble_probs(jnp.stack(member_logits))
-        if i + 1 < args.prompt_len:
-            tok = prompt[:, i + 1: i + 2]  # teacher-force the prompt
-        else:
-            if args.temperature > 0:
-                key, sub = jax.random.split(key)
-                tok = jax.random.categorical(
-                    sub, jnp.log(probs + 1e-30) / args.temperature)[:, None]
-            else:
-                tok = probs.argmax(-1)[:, None].astype(jnp.int32)
-            out_tokens.append(tok)
+    outs = engine.generate(list(prompt), max_new=args.steps)
     dt = time.time() - t0
-    gen = jnp.concatenate(out_tokens, axis=1)
-    n_tok = gen.size
+    n_tok = sum(len(o) for o in outs)
     print(f"served batch={B} members={K} steps={args.steps}: "
-          f"{n_tok} tokens in {dt:.2f}s ({n_tok/dt:.1f} tok/s)")
-    print("sample:", gen[0][:16].tolist())
+          f"{n_tok} tokens in {dt:.2f}s ({n_tok / dt:.1f} tok/s)")
+    print("sample:", outs[0][:16].tolist())
     return 0
 
 

@@ -355,6 +355,62 @@ def decode_step(params, cfg: ModelConfig, cache: dict,
     return logits, new_cache
 
 
+def init_slot_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                    enc_len: int = 0) -> dict:
+    """Slot-addressable decode cache: `idx` is a (batch,) position vector.
+
+    Each batch row is an independent *slot* at its own sequence position,
+    which is what continuous-batching serving needs: a finished request's
+    slot is recycled by resetting idx[b] to 0 (stale KV entries are masked
+    out by the position bookkeeping, so no reallocation and no zeroing of
+    the K/V planes is required — recurrent SSM state DOES need zeroing,
+    which repro.serving.kv_cache.reset_slots handles).
+    """
+    cache = init_cache(cfg, batch, max_seq, enc_len)
+    cache["idx"] = jnp.zeros((batch,), jnp.int32)
+    return cache
+
+
+def slot_cache_axes(cache: dict):
+    """vmap in/out axes mapping the batch row of a slot cache.
+
+    `idx` carries rows at axis 0; segment leaves are (count, B, ...) so
+    their row axis is 1; the encoder output (if any) is (B, S, d).
+    """
+    axes = {"idx": 0, "segments": [1] * len(cache["segments"])}
+    if "enc" in cache:
+        axes["enc"] = 0
+    return axes
+
+
+def decode_step_slots(params, cfg: ModelConfig, cache: dict,
+                      tokens: jax.Array) -> Tuple[jax.Array, dict]:
+    """Per-slot decode step: every row advances at its OWN position.
+
+    tokens: (B, 1); cache from init_slot_cache (idx: (B,)).
+    -> (logits (B, 1, V), cache).  Implemented as a row-vmap of the
+    scalar-position decode_step, so the two paths cannot drift: a batch
+    where all rows share one position is bitwise the decode_step batch.
+    """
+    axes = slot_cache_axes(cache)
+
+    def one_row(c, t):
+        # vmap strips the mapped batch axis; decode_step wants B=1 back
+        cb = {"idx": c["idx"],
+              "segments": jax.tree.map(lambda x: x[:, None], c["segments"])}
+        if "enc" in c:
+            cb["enc"] = c["enc"][None]
+        logits, nc = decode_step(params, cfg, cb, t[None])
+        out = {"idx": nc["idx"],
+               "segments": jax.tree.map(lambda x: x[:, 0], nc["segments"])}
+        if "enc" in nc:
+            out["enc"] = nc["enc"][0]
+        return logits[0], out
+
+    step = jax.vmap(one_row, in_axes=(axes, 0), out_axes=(0, axes))
+    return step(cache, tokens)
+
+
 def prefill(params, cfg: ModelConfig, tokens=None, embeds=None,
             enc_embeds=None) -> Tuple[jax.Array, jax.Array]:
     """Forward scoring pass for the prefill shape: last-token logits.

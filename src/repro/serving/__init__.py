@@ -1,0 +1,12 @@
+"""repro.serving — EC-DNN_G as a first-class serving mode.
+
+EnsembleEngine fuses all K members into one jitted decode step over a
+pool of slot-addressable KV caches; Scheduler runs continuous batching
+on top; client drives synthetic load and reports tok/s / TTFT / latency
+percentiles.  See engine.py for the architecture note.
+"""
+from repro.serving.engine import EnsembleEngine, SlotState
+from repro.serving.scheduler import Completion, Request, Scheduler
+
+__all__ = ["EnsembleEngine", "SlotState", "Scheduler", "Request",
+           "Completion"]

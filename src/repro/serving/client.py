@@ -1,0 +1,76 @@
+"""Synthetic load driver + latency reporting for the serving engine.
+
+Generates a stream of token-id requests with mixed prompt/output
+lengths, pushes them through a Scheduler, and reports the numbers a
+serving SLO cares about: aggregate tok/s, time-to-first-token, and
+per-request latency percentiles.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Sequence
+
+import numpy as np
+
+from repro.serving.engine import EnsembleEngine
+from repro.serving.scheduler import Completion, Scheduler
+
+
+def make_requests(n: int, vocab: int, prompt_len=(4, 24), max_new=(8, 32),
+                  seed: int = 0):
+    """-> list of (tokens, max_new) with lengths uniform in the ranges."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for _ in range(n):
+        plen = int(rng.integers(prompt_len[0], prompt_len[1] + 1))
+        gen = int(rng.integers(max_new[0], max_new[1] + 1))
+        reqs.append((rng.integers(0, vocab, size=plen, dtype=np.int32), gen))
+    return reqs
+
+
+def percentile(xs: Sequence[float], p: float) -> float:
+    return float(np.percentile(np.asarray(xs), p)) if len(xs) else 0.0
+
+
+def run_load(engine: EnsembleEngine, requests) -> dict:
+    """Serve `requests` through a fresh Scheduler; -> stats report dict."""
+    sched = Scheduler(engine)
+    for tokens, max_new in requests:
+        sched.submit(tokens, max_new)
+    t0 = time.time()
+    completions = sched.run()
+    wall = time.time() - t0
+    return build_report(completions, wall, engine)
+
+
+def build_report(completions: Dict[int, Completion], wall: float,
+                 engine: EnsembleEngine) -> dict:
+    gen_tokens = sum(len(c.tokens) for c in completions.values())
+    ttft = [c.ttft for c in completions.values()]
+    lat = [c.latency for c in completions.values()]
+    return {
+        "n_requests": len(completions),
+        "members": engine.n_members,
+        "slots": engine.n_slots,
+        "gen_tokens": gen_tokens,
+        "wall_s": wall,
+        "tok_s": gen_tokens / max(wall, 1e-9),
+        "ttft_p50_ms": percentile(ttft, 50) * 1e3,
+        "ttft_p95_ms": percentile(ttft, 95) * 1e3,
+        "latency_p50_ms": percentile(lat, 50) * 1e3,
+        "latency_p95_ms": percentile(lat, 95) * 1e3,
+        "latency_p99_ms": percentile(lat, 99) * 1e3,
+        "cache_mb": engine.cache_bytes() / 2**20,
+    }
+
+
+def print_report(r: dict):
+    print(f"served {r['n_requests']} requests | K={r['members']} members, "
+          f"{r['slots']} slots, cache pool {r['cache_mb']:.1f} MiB")
+    print(f"  {r['gen_tokens']} tokens in {r['wall_s']:.2f}s "
+          f"= {r['tok_s']:.1f} tok/s")
+    print(f"  ttft    p50 {r['ttft_p50_ms']:.1f} ms   "
+          f"p95 {r['ttft_p95_ms']:.1f} ms")
+    print(f"  latency p50 {r['latency_p50_ms']:.1f} ms   "
+          f"p95 {r['latency_p95_ms']:.1f} ms   "
+          f"p99 {r['latency_p99_ms']:.1f} ms")

@@ -1,0 +1,278 @@
+"""EC-DNN_G continuous-batching inference engine.
+
+The paper's Section 4 serving mode — "take the global model as the final
+model if there are enough resources at test time" — as one compiled
+program per decode step instead of the K-jit-calls-per-token Python loop
+it replaces:
+
+  - all K members score the step inside a single jit: params and the
+    kv_cache pool carry a leading member axis and a jax.vmap over it
+    batches every layer's matmuls across the ensemble;
+  - each batch row is an independent *slot* at its own sequence position
+    (models/transformer.decode_step_slots), so requests of different
+    lengths share the decode batch — the substrate continuous batching
+    (scheduler.py) admits into and evicts from;
+  - member distributions fuse on-device via core.ensemble
+    .ensemble_log_probs (Eqn 6 in log space) under a (K,) quorum vector:
+    zeroing a member's weight degrades gracefully to the surviving
+    subset, mirroring ring_relabel's straggler policy, with no recompile
+    (the quorum is a traced argument);
+  - prompt prefill, sampling, output bookkeeping and EOS/length
+    eviction flags all happen inside the same jitted step, so the host
+    loop is dispatch-only.
+
+Every decode in the repo (launch/serve.py CLI, examples, benchmarks,
+the scheduler) goes through EnsembleEngine.step — one decode path.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.types import ModelConfig
+from repro.core import ensemble as ens
+from repro.models import transformer as tf
+from repro.serving import kv_cache, sampling
+
+
+class SlotState(NamedTuple):
+    """Device-resident per-slot serving state (one row per batch slot)."""
+
+    tok: jax.Array         # (B,)   next input token
+    pos: jax.Array         # (B,)   tokens consumed so far (== cache idx)
+    prompt: jax.Array      # (B,P)  padded prompt buffer
+    prompt_len: jax.Array  # (B,)
+    max_new: jax.Array     # (B,)   per-request generation budget
+    n_gen: jax.Array       # (B,)   tokens emitted so far
+    active: jax.Array      # (B,)   slot occupied by a request
+    done: jax.Array        # (B,)   finished, awaiting host harvest
+    out: jax.Array         # (B,G)  emitted tokens
+    key: jax.Array         # PRNG carried across steps
+
+
+class EnsembleEngine:
+    """Vmapped-member decode engine over a fixed pool of batch slots.
+
+    stacked_params: member params with a leading (K,) axis (the layout
+    `jax.vmap(lambda k: tf.init(k, cfg))(keys)` produces and training
+    checkpoints store).  K = 1 serves a single/compressed model
+    (EC-DNN_L) through the identical path.
+    """
+
+    def __init__(self, cfg: ModelConfig, stacked_params, *,
+                 n_slots: int = 8, max_prompt: int = 64, max_out: int = 64,
+                 temperature: float = 0.0, top_k: int = 0, eos_id: int = -1,
+                 quorum: Optional[Sequence[float]] = None, seed: int = 0):
+        self.cfg = cfg
+        self.params = stacked_params
+        self.n_members = jax.tree.leaves(stacked_params)[0].shape[0]
+        self.n_slots = n_slots
+        self.max_prompt = max_prompt
+        self.max_out = max_out
+        self.max_seq = max_prompt + max_out
+        self.temperature = temperature
+        self.top_k = top_k
+        self.eos_id = eos_id
+        self.quorum = (jnp.ones((self.n_members,), jnp.float32)
+                       if quorum is None
+                       else jnp.asarray(quorum, jnp.float32))
+        self.cache = kv_cache.init_pool(cfg, self.n_members, n_slots,
+                                        self.max_seq)
+        if cfg.enc_dec:
+            self.cache["enc"] = self._encode_stub(n_slots)
+        self.state = self._blank_state(seed)
+        self.steps_run = 0
+        # cache + state are donated: the pool is updated in place across
+        # the server's lifetime, never reallocated.
+        self._step = jax.jit(self._step_impl, donate_argnums=(1, 2))
+        self._update = jax.jit(self._update_impl, donate_argnums=(0, 1))
+        self._score = jax.jit(self._score_impl, donate_argnums=(1,))
+
+    # -- construction -------------------------------------------------------
+
+    def _blank_state(self, seed: int) -> SlotState:
+        B, P, G = self.n_slots, self.max_prompt, self.max_out
+        zi = lambda *s: jnp.zeros(s, jnp.int32)
+        zb = lambda *s: jnp.zeros(s, bool)
+        return SlotState(tok=zi(B), pos=zi(B), prompt=zi(B, P),
+                         prompt_len=zi(B), max_new=zi(B), n_gen=zi(B),
+                         active=zb(B), done=zb(B), out=zi(B, G),
+                         key=jax.random.PRNGKey(seed))
+
+    def _encode_stub(self, batch: int) -> jax.Array:
+        """Per-member encoder outputs over stub frame embeddings.
+
+        Audio/VLM frontends are stubs repo-wide (DESIGN §4); per-request
+        encoder state is a serving follow-up (ROADMAP).  Computed once —
+        the decode loop only reads it.
+        """
+        from repro.models.layers import dtype_of
+        enc_in = jnp.zeros((batch, self.cfg.enc_max_frames,
+                            self.cfg.d_model), dtype_of(self.cfg))
+        return jax.jit(jax.vmap(
+            lambda p: tf.encode(p, self.cfg, enc_in)))(self.params)
+
+    # -- jitted kernels -----------------------------------------------------
+
+    def _member_logits(self, params, cache, tok) -> Tuple[jax.Array, dict]:
+        """All members score the step in one program. -> ((K,B,V), cache)."""
+        def one(p, c):
+            return tf.decode_step_slots(p, self.cfg, c, tok[:, None])
+
+        logits, cache = jax.vmap(one)(params, cache)  # (K, B, 1, V)
+        return logits[:, :, 0], cache
+
+    def _step_impl(self, params, cache, st: SlotState, quorum):
+        B = st.tok.shape[0]
+        logits, cache = self._member_logits(params, cache, st.tok)
+        logp = ens.ensemble_log_probs(logits, weights=quorum)  # (B, V)
+        key, sub = jax.random.split(st.key)
+        sampled = sampling.sample(sub, logp, self.temperature, self.top_k)
+
+        pos1 = st.pos + 1
+        in_prompt = pos1 < st.prompt_len  # next input is teacher-forced
+        P = st.prompt.shape[1]
+        nxt_prompt = jnp.take_along_axis(
+            st.prompt, jnp.minimum(pos1, P - 1)[:, None], axis=1)[:, 0]
+
+        emit = st.active & ~st.done & ~in_prompt
+        row = jnp.arange(B)
+        col = jnp.minimum(st.n_gen, st.out.shape[1] - 1)
+        out = st.out.at[row, col].set(
+            jnp.where(emit, sampled, st.out[row, col]))
+        n_gen = st.n_gen + emit.astype(jnp.int32)
+        finished = emit & (n_gen >= st.max_new)
+        if self.eos_id >= 0:
+            finished |= emit & (sampled == self.eos_id)
+        done = st.done | finished
+        tok = jnp.where(in_prompt, nxt_prompt, sampled)
+        return SlotState(tok=tok, pos=pos1, prompt=st.prompt,
+                         prompt_len=st.prompt_len, max_new=st.max_new,
+                         n_gen=n_gen, active=st.active, done=done,
+                         out=out, key=key), cache
+
+    def _update_impl(self, cache, st: SlotState, release, admit,
+                     prompt, plen, max_new):
+        """Evict `release` slots, (re)fill `admit` slots with new requests."""
+        cache = kv_cache.reset_slots(cache, admit)
+        a2 = admit[:, None]
+        return SlotState(
+            tok=jnp.where(admit, prompt[:, 0], st.tok),
+            pos=jnp.where(admit, 0, st.pos),
+            prompt=jnp.where(a2, prompt, st.prompt),
+            prompt_len=jnp.where(admit, plen, st.prompt_len),
+            max_new=jnp.where(admit, max_new, st.max_new),
+            n_gen=jnp.where(admit, 0, st.n_gen),
+            active=(st.active & ~release) | admit,
+            done=st.done & ~release & ~admit,
+            out=jnp.where(a2, 0, st.out),
+            key=st.key), cache
+
+    def _score_impl(self, params, cache, tok_t, gold_t, quorum):
+        """Teacher-forced scoring step: per-member + ensemble NLL."""
+        logits, cache = self._member_logits(params, cache, tok_t)  # (K,B,V)
+        lp = ens.member_log_probs(logits)
+        gold = jnp.broadcast_to(gold_t[None], logits.shape[:-1])
+        m_nll = -jnp.take_along_axis(lp, gold[..., None],
+                                     axis=-1)[..., 0].mean(-1)  # (K,)
+        e_lp = ens.ensemble_log_probs(logits, weights=quorum)
+        e_nll = -jnp.take_along_axis(e_lp, gold_t[:, None],
+                                     axis=1)[:, 0].mean()
+        return m_nll, e_nll, cache
+
+    # -- host API -----------------------------------------------------------
+
+    def validate_request(self, tokens, max_new: int) -> np.ndarray:
+        """Check a request against the engine's budgets; -> 1-D int32
+        prompt.  The single source of truth for admission limits, used
+        by update_slots and by Scheduler.submit (reject at the door)."""
+        t = np.asarray(tokens, np.int32).reshape(-1)
+        if not 0 < t.size <= self.max_prompt:
+            raise ValueError(f"prompt len {t.size} not in "
+                             f"[1, {self.max_prompt}]")
+        if not 0 < max_new <= self.max_out:
+            raise ValueError(f"max_new {max_new} not in "
+                             f"[1, {self.max_out}]")
+        return t
+
+    def step(self) -> SlotState:
+        """Advance every slot one token (one compiled program)."""
+        self.state, self.cache = self._step(self.params, self.cache,
+                                            self.state, self.quorum)
+        self.steps_run += 1
+        return self.state
+
+    def update_slots(self, release: Sequence[int] = (),
+                     admits: Sequence[Tuple[int, np.ndarray, int]] = ()):
+        """Evict finished slots and admit new requests.
+
+        admits: (slot, prompt_tokens, max_new) triples.  Fixed-shape
+        masked updates, so any admission pattern reuses one compiled
+        program.
+        """
+        B, P = self.n_slots, self.max_prompt
+        rel = np.zeros((B,), bool)
+        adm = np.zeros((B,), bool)
+        prompt = np.zeros((B, P), np.int32)
+        plen = np.zeros((B,), np.int32)
+        mnew = np.zeros((B,), np.int32)
+        for b in release:
+            rel[b] = True
+        for b, toks, max_new in admits:
+            t = self.validate_request(toks, max_new)
+            adm[b] = True
+            prompt[b, :t.size] = t
+            plen[b] = t.size
+            mnew[b] = max_new
+        self.state, self.cache = self._update(
+            self.cache, self.state, jnp.asarray(rel), jnp.asarray(adm),
+            jnp.asarray(prompt), jnp.asarray(plen), jnp.asarray(mnew))
+
+    def generate(self, prompts: Sequence[np.ndarray],
+                 max_new: int) -> list:
+        """Static-batch decode: admit up to n_slots prompts, run to done.
+
+        The whole run is dispatch-only (no host sync inside the loop);
+        use scheduler.Scheduler for continuous admission instead.
+        Returns one int32 array of generated tokens per prompt.
+        """
+        if len(prompts) > self.n_slots:
+            raise ValueError(f"{len(prompts)} prompts > {self.n_slots} slots")
+        self.update_slots(
+            release=range(self.n_slots),
+            admits=[(i, p, max_new) for i, p in enumerate(prompts)])
+        steps = max(len(np.reshape(p, -1)) for p in prompts) + max_new - 1
+        for _ in range(steps):
+            self.step()
+        st = jax.device_get(self.state)
+        return [st.out[i, :st.n_gen[i]] for i in range(len(prompts))]
+
+    def score(self, tokens: jax.Array, labels: jax.Array):
+        """Teacher-forced NLL of a (B, T) batch: (per-member (K,), ensemble).
+
+        The serving-side face of the Jensen guarantee: the returned
+        ensemble NLL is <= the mean member NLL for any members.
+        Uses a private cache pool; slot state is untouched.
+        """
+        tokens = jnp.asarray(tokens, jnp.int32)
+        B, T = tokens.shape
+        cache = kv_cache.init_pool(self.cfg, self.n_members, B, T)
+        if self.cfg.enc_dec:
+            cache["enc"] = self._encode_stub(B)
+        m_tot = jnp.zeros((self.n_members,), jnp.float32)
+        e_tot = jnp.zeros((), jnp.float32)
+        for t in range(T):
+            m, e, cache = self._score(self.params, cache, tokens[:, t],
+                                      jnp.asarray(labels[:, t]), self.quorum)
+            m_tot, e_tot = m_tot + m, e_tot + e
+        return m_tot / T, e_tot / T
+
+    def set_quorum(self, mask: Sequence[float]):
+        """0/1 liveness per member; renormalized on-device, no recompile."""
+        self.quorum = ens.quorum_weights(jnp.asarray(mask, jnp.float32))
+
+    def cache_bytes(self) -> int:
+        return kv_cache.pool_bytes(self.cache)

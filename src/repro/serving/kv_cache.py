@@ -1,0 +1,80 @@
+"""Slot-indexed decode-cache pool for the ensemble serving engine.
+
+One pool holds the caches of all K ensemble members for all B batch
+slots, as a single pytree whose leaves carry a leading member axis:
+
+  idx            (K, B)                per-member, per-slot position
+  segment leaves (K, count, B, ...)    stacked KV / SSM state planes
+  enc            (K, B, S, d)          (enc-dec only; not served yet)
+
+The pool is allocated ONCE (engine construction) and recycled for the
+lifetime of the server: finishing a request never frees or reallocates
+anything — `reset_slots` rewinds the slot's position to 0 and zeroes the
+recurrent planes, and the next request overwrites the attention KV
+in-place as it decodes (stale entries are masked by position bookkeeping,
+see models/attention.gqa_decode).  The engine donates the pool into its
+jitted step so XLA updates it in place.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import ModelConfig
+from repro.models import transformer as tf
+
+
+def init_pool(cfg: ModelConfig, n_members: int, n_slots: int,
+              max_seq: int) -> dict:
+    """Allocate the (K members) x (B slots) cache pool.
+
+    enc-dec archs get a zeroed per-member encoder-output plane; the
+    engine fills it once at construction (audio frontends are stubs,
+    DESIGN §4 — per-request encoder state is a serving follow-up).
+    """
+    base = tf.init_slot_cache(cfg, n_slots, max_seq)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_members,) + x.shape), base)
+
+
+# positional cache planes: stale entries are masked by position
+# bookkeeping, so recycling a slot never needs to touch them
+_POSITIONAL = frozenset({"k", "v", "c_kv", "k_r"})
+
+
+def reset_slots(pool: dict, mask: jax.Array) -> dict:
+    """Recycle slots where mask (B,) is True, across all members.
+
+    Rewinding idx to 0 is enough for attention state: each KV entry the
+    new request can attend to is overwritten before it first becomes
+    visible, so the (large) positional planes are left untouched and
+    admission cost stays proportional to the (small) recurrent state.
+    Recurrent state (mamba conv/ssm planes, rwkv shift/wkv, cmix shift)
+    has no position axis, so it IS zeroed explicitly — otherwise the
+    previous occupant leaks into the next request.
+    """
+    out = dict(pool)
+    out["idx"] = jnp.where(mask[None, :], 0, pool["idx"])
+
+    def z(path, x):  # leaves are (K, count, B, ...)
+        name = next((str(e.key) for e in reversed(path)
+                     if isinstance(e, jax.tree_util.DictKey)), "")
+        if name in _POSITIONAL:
+            return x
+        m = mask.reshape((1, 1, -1) + (1,) * (x.ndim - 3))
+        return jnp.where(m, jnp.zeros_like(x), x)
+
+    out["segments"] = jax.tree_util.tree_map_with_path(
+        z, pool["segments"])
+    # "enc" (encoder context) survives reset: it is not decode state
+    return out
+
+
+def slot_positions(pool: dict) -> jax.Array:
+    """(B,) current per-slot positions (identical across members)."""
+    return pool["idx"][0]
+
+
+def pool_bytes(pool: dict) -> int:
+    """Total bytes held by the pool (capacity-planning telemetry)."""
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(pool))

@@ -1,0 +1,36 @@
+"""Token sampling on the fused ensemble distribution.
+
+Operates in LOG space (the engine fuses members with
+core.ensemble.ensemble_log_probs) so greedy/temperature/top-k all work
+off one numerically-stable array with no probs->log round trip.
+temperature/top_k are Python statics: the engine closes over them, so
+each serving configuration compiles exactly one step program.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def top_k_mask(log_probs: jax.Array, k: int) -> jax.Array:
+    """Keep the k largest entries of the last axis, mask the rest."""
+    v, _ = jax.lax.top_k(log_probs, k)
+    return jnp.where(log_probs < v[..., -1:], NEG_INF, log_probs)
+
+
+def sample(key, log_probs: jax.Array, temperature: float = 0.0,
+           top_k: int = 0) -> jax.Array:
+    """(..., V) fused log-probs -> (...) int32 token ids.
+
+    temperature <= 0 is greedy (argmax); otherwise categorical over
+    log_probs / temperature, optionally truncated to the top-k bucket.
+    """
+    if temperature <= 0.0:
+        return log_probs.argmax(axis=-1).astype(jnp.int32)
+    lp = log_probs
+    if top_k > 0:
+        lp = top_k_mask(lp, top_k)
+    return jax.random.categorical(key, lp / temperature,
+                                  axis=-1).astype(jnp.int32)

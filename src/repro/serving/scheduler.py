@@ -1,0 +1,133 @@
+"""Continuous batching: a request queue over the engine's slot pool.
+
+The engine decodes a fixed batch of B slots every step; the scheduler
+keeps those slots full.  Each loop iteration it (1) admits queued
+requests into free slots (per-slot prompt prefill is teacher-forced
+inside the engine step, so admission is just a masked state write +
+cache-slot reset), (2) runs one engine step, and (3) harvests slots
+whose request hit EOS or its generation budget, freeing them for the
+next admission.  Requests of different prompt/output lengths therefore
+interleave in the same decode batch instead of padding to a common
+length — the classic continuous-batching win.
+
+All policy lives host-side in this module; the engine step stays a
+single compiled program.  Admission is FIFO; slots are filled greedily.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.serving.engine import EnsembleEngine
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray
+    max_new: int
+    submit_t: float
+
+
+@dataclass
+class Completion:
+    rid: int
+    tokens: np.ndarray          # generated ids (prompt not included)
+    prompt_len: int
+    submit_t: float
+    admit_t: float
+    first_token_t: Optional[float]
+    finish_t: float
+
+    @property
+    def ttft(self) -> float:
+        """Submit -> first generated token (queue wait + prefill)."""
+        return (self.first_token_t or self.finish_t) - self.submit_t
+
+    @property
+    def latency(self) -> float:
+        return self.finish_t - self.submit_t
+
+
+@dataclass
+class _SlotMeta:
+    req: Request
+    admit_t: float
+    first_token_t: Optional[float] = None
+
+
+class Scheduler:
+    """FIFO continuous-batching scheduler over one EnsembleEngine."""
+
+    def __init__(self, engine: EnsembleEngine):
+        self.engine = engine
+        self.pending: deque = deque()
+        self.slots: list = [None] * engine.n_slots  # Optional[_SlotMeta]
+        self.completions: Dict[int, Completion] = {}
+        self._next_rid = 0
+        self._to_release: list = []
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, tokens, max_new: int) -> int:
+        """Queue a request; returns its id (keyed in .completions).
+
+        Validates against the engine's budgets HERE so one oversized
+        request is rejected at the door instead of crashing run() and
+        taking every in-flight request down with it.
+        """
+        t = self.engine.validate_request(tokens, max_new)
+        rid = self._next_rid
+        self._next_rid += 1
+        self.pending.append(Request(rid, t, int(max_new), time.time()))
+        return rid
+
+    # -- scheduling loop ----------------------------------------------------
+
+    def _fill_slots(self):
+        admits = []
+        now = time.time()
+        for b in range(self.engine.n_slots):
+            if self.slots[b] is None and self.pending:
+                req = self.pending.popleft()
+                admits.append((b, req.tokens, req.max_new))
+                self.slots[b] = _SlotMeta(req, now)
+        if admits or self._to_release:
+            self.engine.update_slots(release=self._to_release, admits=admits)
+            self._to_release = []
+
+    def _harvest(self):
+        st = self.engine.state
+        done = np.asarray(st.done)      # the per-step host sync point
+        n_gen = np.asarray(st.n_gen)
+        now = time.time()
+        for b, meta in enumerate(self.slots):
+            if meta is None:
+                continue
+            if meta.first_token_t is None and n_gen[b] > 0:
+                meta.first_token_t = now
+            if done[b]:
+                req = meta.req
+                self.completions[req.rid] = Completion(
+                    rid=req.rid,
+                    tokens=np.asarray(st.out[b, :n_gen[b]]),
+                    prompt_len=len(req.tokens),
+                    submit_t=req.submit_t, admit_t=meta.admit_t,
+                    first_token_t=meta.first_token_t, finish_t=now)
+                self.slots[b] = None
+                self._to_release.append(b)
+
+    def run(self) -> Dict[int, Completion]:
+        """Drive until the queue drains and every slot is idle."""
+        while self.pending or any(m is not None for m in self.slots):
+            self._fill_slots()
+            self.engine.step()
+            self._harvest()
+        if self._to_release:
+            self.engine.update_slots(release=self._to_release)
+            self._to_release = []
+        return self.completions

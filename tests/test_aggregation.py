@@ -93,18 +93,18 @@ RING_SCRIPT = textwrap.dedent("""
     import sys
     sys.path.insert(0, "{src}")
     import jax, jax.numpy as jnp, numpy as np
+    from repro.common import sharding as shd
     from repro.common.types import ECConfig
     from repro.core import aggregation as agg, compression as comp
 
-    mesh = jax.make_mesh((4,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = shd.make_mesh((4,), ("data",))
     K, m, d, V = 4, 3, 6, 12
     k = jax.random.PRNGKey(0)
     params = {{"W": jax.random.normal(k, (K, d, V))}}
     batches = {{"x": jax.random.normal(jax.random.PRNGKey(1), (K, m, d))}}
     fn = lambda p, b: b["x"] @ p["W"]
 
-    with jax.sharding.set_mesh(mesh):
+    with shd.set_mesh(mesh):
         ec = ECConfig(label_mode="dense")
         ring = agg.ring_relabel(mesh, params, batches, fn, ec, axis="data")
         oracle = agg.allgather_relabel(params, batches, fn, ec)

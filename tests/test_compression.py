@@ -1,7 +1,11 @@
 """TopM sparse pseudo-label accumulator: exactness + error-bound properties."""
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional [test] extra")
+hnp = pytest.importorskip("hypothesis.extra.numpy")
+st = pytest.importorskip("hypothesis.strategies")
+
 import jax
 import jax.numpy as jnp
 import numpy as np

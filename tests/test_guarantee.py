@@ -8,13 +8,16 @@ MA (parameter averaging): no such bound — we exhibit a concrete
 counterexample where the parameter-averaged model is strictly worse than
 every local model (the paper's Figure 1 phenomenon, in miniature).
 """
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional [test] extra")
+hnp = pytest.importorskip("hypothesis.extra.numpy")
+st = pytest.importorskip("hypothesis.strategies")
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import ensemble as ens
 

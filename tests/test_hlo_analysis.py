@@ -13,10 +13,10 @@ SCRIPT = textwrap.dedent("""
     sys.path.insert(0, "{src}")
     import jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P, NamedSharding
+    from repro.common.sharding import make_mesh
     from repro.launch.hlo_analysis import analyze
 
-    mesh = jax.make_mesh((4,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((4,), ("model",))
 
     def body(x, w):
         h = x @ w

@@ -1,0 +1,203 @@
+"""repro.serving: engine/loop equivalence, continuous batching, quorum.
+
+Equivalence strategy: greedy rollout comparisons run on a float32 config
+so near-tie argmax flips (the seed fuses in prob space where exp() can
+round two close logits flat; bf16 activations make such ties reachable)
+cannot fork the rollout, while the teacher-forced check asserts the
+engine's member logits are BITWISE those of the seed's batched
+decode_step on the default (bf16) config.
+"""
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core import ensemble as ens
+from repro.models import transformer as tf
+from repro.serving import EnsembleEngine, Scheduler
+from repro.serving import kv_cache
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+# THE seed-loop baseline (per-member jit calls, host stacking, prob-space
+# Eqn-6 fusion, greedy) — one copy, shared with the >=2x acceptance gate
+from benchmarks.serving_bench import python_loop_decode as _seed_loop
+
+CFG_BF16 = registry.get_config("gemma3-1b", reduced=True)
+CFG = CFG_BF16.with_(dtype="float32")
+
+
+def _params(cfg, K, seed=0):
+    return jax.vmap(lambda k: tf.init(k, cfg))(
+        jax.random.split(jax.random.PRNGKey(seed), K))
+
+
+def test_engine_matches_seed_loop_greedy_k2():
+    K, B, plen, steps = 2, 4, 6, 8
+    params = _params(CFG, K)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (B, plen), 0,
+                                CFG.vocab_size)
+    ref = _seed_loop(CFG, params, K, prompt, steps)  # (B, steps) np
+    eng = EnsembleEngine(CFG, params, n_slots=B, max_prompt=plen,
+                         max_out=steps)
+    outs = eng.generate(list(np.asarray(prompt)), max_new=steps)
+    for b in range(B):
+        np.testing.assert_array_equal(outs[b], ref[b])
+
+
+def test_slot_decode_bitwise_matches_batched_decode_bf16():
+    """decode_step_slots == decode_step when all rows share a position."""
+    B, T = 4, 10
+    p = jax.tree.map(lambda x: x[0], _params(CFG_BF16, 1))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, T), 0,
+                              CFG_BF16.vocab_size)
+    c_ref = tf.init_cache(cfg=CFG_BF16, batch=B, max_seq=T)
+    c_slot = tf.init_slot_cache(CFG_BF16, B, max_seq=T)
+    step_ref = jax.jit(lambda c, t: tf.decode_step(p, CFG_BF16, c, t))
+    step_slot = jax.jit(lambda c, t: tf.decode_step_slots(p, CFG_BF16, c, t))
+    for t in range(T):
+        lg_ref, c_ref = step_ref(c_ref, toks[:, t: t + 1])
+        lg_slot, c_slot = step_slot(c_slot, toks[:, t: t + 1])
+        np.testing.assert_array_equal(np.asarray(lg_ref), np.asarray(lg_slot))
+
+
+def test_ensemble_log_probs_matches_probs():
+    key = jax.random.PRNGKey(3)
+    logits = jax.random.normal(key, (3, 5, 17)) * 5
+    w = jnp.array([2.0, 1.0, 0.0])
+    lp = ens.ensemble_log_probs(logits, weights=w)
+    p = ens.ensemble_probs(logits, weights=w)
+    np.testing.assert_allclose(np.exp(np.asarray(lp)), np.asarray(p),
+                               atol=1e-6)
+    # uniform default too
+    np.testing.assert_allclose(np.exp(np.asarray(ens.ensemble_log_probs(
+        logits))), np.asarray(ens.ensemble_probs(logits)), atol=1e-6)
+
+
+def test_quorum_weights_drop_and_renormalize():
+    w = ens.quorum_weights(jnp.array([1.0, 0.0, 1.0]))
+    np.testing.assert_allclose(np.asarray(w), [0.5, 0.0, 0.5], atol=1e-7)
+    # all-dead quorum degrades to uniform instead of NaN
+    w0 = ens.quorum_weights(jnp.zeros(4))
+    np.testing.assert_allclose(np.asarray(w0), [0.25] * 4, atol=1e-7)
+
+
+def test_quorum_masked_member_equals_serving_the_subset():
+    """Quorum [1,1,0] over K=3 == serving the first K-1 members."""
+    K, B, plen, steps = 3, 2, 4, 6
+    params3 = _params(CFG, K, seed=7)
+    prompts = [np.arange(1, plen + 1), np.arange(2, plen + 2)]
+    e3 = EnsembleEngine(CFG, params3, n_slots=B, max_prompt=plen,
+                        max_out=steps, quorum=[1.0, 1.0, 0.0])
+    e2 = EnsembleEngine(CFG, jax.tree.map(lambda x: x[:2], params3),
+                        n_slots=B, max_prompt=plen, max_out=steps)
+    o3 = e3.generate(prompts, max_new=steps)
+    o2 = e2.generate(prompts, max_new=steps)
+    for a, b in zip(o3, o2):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_scheduler_interleaves_and_isolates_requests():
+    """Mixed-length requests through 2 slots: every completion equals the
+    request decoded in isolation (slot recycling leaks nothing), and the
+    step count proves the batch was shared, not run sequentially."""
+    K, B = 2, 2
+    params = _params(CFG, K)
+    eng = EnsembleEngine(CFG, params, n_slots=B, max_prompt=8, max_out=8)
+    reqs = [(np.arange(1, 6), 8), (np.arange(2, 4), 3),
+            (np.arange(3, 9), 5), (np.arange(1, 3), 6)]
+
+    # isolated references (same engine shape -> row-independent vmap
+    # makes results identical regardless of batch companions)
+    refs = [eng.generate([toks], max_new) for toks, max_new in reqs]
+
+    sched = Scheduler(eng)
+    rids = [sched.submit(toks, max_new) for toks, max_new in reqs]
+    steps_before = eng.steps_run
+    comps = sched.run()
+    steps_used = eng.steps_run - steps_before
+
+    assert set(comps) == set(rids)
+    for rid, (toks, max_new) in zip(rids, reqs):
+        assert len(comps[rid].tokens) == max_new
+        np.testing.assert_array_equal(comps[rid].tokens, refs[rids.index(rid)][0])
+        assert comps[rid].latency >= 0 and comps[rid].ttft >= 0
+    # sequential lower bound: sum of per-request step counts
+    sequential = sum(len(t) + m - 1 for t, m in reqs)
+    assert steps_used < sequential, (steps_used, sequential)
+
+
+def test_scheduler_eos_evicts_early():
+    K, B, plen = 2, 2, 4
+    params = _params(CFG, K)
+    probe = EnsembleEngine(CFG, params, n_slots=B, max_prompt=8, max_out=8)
+    prompt = np.arange(1, plen + 1)
+    full = probe.generate([prompt], max_new=8)[0]
+    eos = int(full[2])  # third generated token becomes the EOS id
+    stop_at = int(np.nonzero(full == eos)[0][0])  # first occurrence
+    eng = EnsembleEngine(CFG, params, n_slots=B, max_prompt=8, max_out=8,
+                         eos_id=eos)
+    sched = Scheduler(eng)
+    rid = sched.submit(prompt, 8)
+    comps = sched.run()
+    got = comps[rid].tokens
+    np.testing.assert_array_equal(got, full[: stop_at + 1])
+    assert got[-1] == eos and len(got) < 8
+
+
+def test_slot_cache_reset_recycles_without_leak():
+    """Generating twice through the same slots gives identical output."""
+    K, B = 2, 2
+    params = _params(CFG, K)
+    eng = EnsembleEngine(CFG, params, n_slots=B, max_prompt=8, max_out=4)
+    prompts = [np.arange(1, 7), np.arange(4, 8)]
+    first = eng.generate(prompts, max_new=4)
+    second = eng.generate(prompts, max_new=4)
+    for a, b in zip(first, second):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_cache_pool_shapes_and_reset():
+    K, B, S = 2, 3, 8
+    pool = kv_cache.init_pool(CFG, K, B, S)
+    assert pool["idx"].shape == (K, B)
+    assert kv_cache.slot_positions(pool).shape == (B,)
+    assert kv_cache.pool_bytes(pool) > 0
+    bumped = dict(pool)
+    bumped["idx"] = pool["idx"] + 5
+    mask = jnp.array([True, False, True])
+    reset = kv_cache.reset_slots(bumped, mask)
+    np.testing.assert_array_equal(np.asarray(reset["idx"]),
+                                  [[0, 5, 0]] * K)
+
+
+def test_enc_dec_arch_serves():
+    """whisper (enc-dec) decodes through the engine: stub encoder
+    context is computed per member once and survives slot recycling."""
+    cfg = registry.get_config("whisper-tiny", reduced=True).with_(
+        dtype="float32")
+    params = _params(cfg, 2)
+    eng = EnsembleEngine(cfg, params, n_slots=2, max_prompt=4, max_out=4)
+    prompts = [np.arange(1, 4), np.arange(2, 6)]
+    first = eng.generate(prompts, max_new=4)
+    second = eng.generate(prompts, max_new=4)
+    for a, b in zip(first, second):
+        assert len(a) == 4
+        np.testing.assert_array_equal(a, b)
+
+
+def test_score_carries_jensen_guarantee():
+    """Engine scoring: ensemble NLL <= mean member NLL (Eqn 4-5)."""
+    K, B, T = 3, 4, 6
+    params = _params(CFG, K)
+    eng = EnsembleEngine(CFG, params, n_slots=1, max_prompt=1, max_out=1)
+    key = jax.random.PRNGKey(9)
+    toks = jax.random.randint(key, (B, T), 0, CFG.vocab_size)
+    labels = jax.random.randint(jax.random.PRNGKey(10), (B, T), 0,
+                                CFG.vocab_size)
+    m_nll, e_nll = eng.score(toks, labels)
+    assert m_nll.shape == (K,)
+    assert float(e_nll) <= float(m_nll.mean()) + 1e-5

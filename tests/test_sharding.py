@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.common import sharding as shd
 from repro.common.sharding import (constrain, layout_ctx, make_param_pspecs,
                                    pspec_for)
 from repro.common.types import ParallelConfig
@@ -38,8 +39,7 @@ def test_stacked_segment_padding():
 
 
 def test_make_param_pspecs_sanitizes_nondivisible():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = shd.make_mesh((1, 1), ("data", "model"))
 
     class FakeMesh:
         shape = {"data": 16, "model": 16}
