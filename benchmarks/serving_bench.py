@@ -1,16 +1,18 @@
-"""Serving throughput: the vmapped ensemble engine vs the seed decoder.
+"""Serving throughput + TTFT: the ensemble engine vs its baselines.
 
-The seed's serving path issued one jit call per member per token from a
-Python `for m in range(K)` loop, stacked the member logits on the host
-path, and fused/sampled with ad-hoc dispatches.  The engine runs all of
-that as ONE compiled program per token (members vmapped, fusion and
-sampling on-device).  This benchmark keeps the old loop alive as the
-baseline and reports tok/s for both at K in {1, 2, 4, 8}.
+Two gates:
+
+  - throughput (ISSUE 1): the vmapped single-program engine vs the
+    seed's K-jit-calls-per-token Python loop (kept alive below as the
+    baseline and as the equivalence reference for tests).  Engine must
+    be >= 2x at K=4 on the reduced gemma3-1b config, CPU.
+  - TTFT (ISSUE 2): batched chunk prefill vs the engine's own per-token
+    teacher-forcing prompt path (prefill_chunk=0).  Admission-to-first-
+    token must improve >= 4x at K=4 with prompt_len >= 32 — a prompt is
+    decode-ready after ceil(prompt/chunk) programs instead of `prompt`
+    engine steps.
 
   PYTHONPATH=src python benchmarks/serving_bench.py [--fast]
-
-Acceptance gate (ISSUE 1): engine >= 2x baseline at K=4 on the reduced
-gemma3-1b config, CPU.
 """
 from __future__ import annotations
 
@@ -82,6 +84,45 @@ def bench_k(cfg, K, batch, plen, steps, repeats, seed=0):
     return loop_s, eng_s, match
 
 
+def bench_ttft(cfg, K, batch, plen, chunk, max_out, repeats, seed=0):
+    """Admission-to-first-token: chunked prefill vs per-token prompt walk.
+
+    Both paths run the same engine shape (batch slots, K members); one
+    request is admitted into slot 0 and driven until its first token is
+    out (exactly `plen` decode steps for the baseline, ceil(plen/chunk)
+    prefill programs for the chunked path), host-synced like a real
+    server's TTFT stamp.
+    """
+    params = jax.vmap(lambda k: tf.init(k, cfg))(
+        jax.random.split(jax.random.PRNGKey(seed), K))
+    prompt = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (plen,), 0, cfg.vocab_size))
+
+    def time_first_token(engine, drive):
+        def once():
+            engine.update_slots(release=range(engine.n_slots),
+                                admits=[(0, prompt, max_out)])
+            drive(engine)
+            jax.block_until_ready(engine.state.out)
+        once()  # warmup/compile
+        t0 = time.time()
+        for _ in range(repeats):
+            once()
+        return (time.time() - t0) / repeats
+
+    base = EnsembleEngine(cfg, params, n_slots=batch, max_prompt=plen,
+                          max_out=max_out, prefill_chunk=0)
+    t_base = time_first_token(
+        base, lambda e: [e.step() for _ in range(plen)])
+
+    eng = EnsembleEngine(cfg, params, n_slots=batch, max_prompt=plen,
+                         max_out=max_out, prefill_chunk=chunk)
+    rounds = -(-plen // eng.prefill_chunk)
+    t_pref = time_first_token(
+        eng, lambda e: [e.prefill(0) for _ in range(rounds)])
+    return t_base, t_pref
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="gemma3-1b")
@@ -90,11 +131,18 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--steps", type=int, default=16)
     ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--ttft-prompt", type=int, default=64,
+                    help="prompt length for the TTFT gate (>= 32)")
+    ap.add_argument("--prefill-chunk", type=int, default=32)
     ap.add_argument("--fast", action="store_true",
                     help="CI-sized run (fewer members/steps)")
     args = ap.parse_args(argv)
+    if args.prefill_chunk <= 0:
+        ap.error("--prefill-chunk must be >= 1: the TTFT gate measures "
+                 "chunked prefill against the per-token baseline")
     if args.fast:
         args.members, args.steps, args.repeats = [1, 4], 8, 1
+        args.ttft_prompt = 32
 
     cfg = registry.get_config(args.arch, reduced=True)
     print(f"{args.arch} (reduced) | batch={args.batch} "
@@ -109,12 +157,26 @@ def main(argv=None):
         speedups[K] = eng_s / loop_s
         print(f"{K:>3} {loop_s:>12.1f} {eng_s:>13.1f} "
               f"{speedups[K]:>7.2f}x  {match:>8.1%}")
+
+    t_base, t_pref = bench_ttft(cfg, 4, args.batch, args.ttft_prompt,
+                                args.prefill_chunk, args.steps,
+                                args.repeats)
+    ttft_x = t_base / t_pref
+    print(f"TTFT K=4 prompt={args.ttft_prompt} chunk={args.prefill_chunk}: "
+          f"per-token {t_base * 1e3:.1f} ms -> prefill {t_pref * 1e3:.1f} ms "
+          f"({ttft_x:.2f}x)")
+
+    ok = True
     if 4 in speedups:
         gate = speedups[4] >= 2.0
-        print(f"K=4 acceptance (>= 2x): {'PASS' if gate else 'FAIL'} "
-              f"({speedups[4]:.2f}x)")
-        return 0 if gate else 1
-    return 0
+        ok &= gate
+        print(f"K=4 throughput acceptance (>= 2x): "
+              f"{'PASS' if gate else 'FAIL'} ({speedups[4]:.2f}x)")
+    gate = ttft_x >= 4.0
+    ok &= gate
+    print(f"K=4 TTFT acceptance (>= 4x): {'PASS' if gate else 'FAIL'} "
+          f"({ttft_x:.2f}x)")
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":

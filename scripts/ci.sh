@@ -21,3 +21,6 @@ fi
 rm -f "$pip_log"
 
 JAX_PLATFORMS=cpu python -m pytest -x -q "$@"
+
+# serving acceptance gates (throughput >= 2x, prefill TTFT >= 4x at K=4)
+JAX_PLATFORMS=cpu python benchmarks/serving_bench.py --fast

@@ -39,6 +39,12 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--steps", type=int, default=16,
                     help="max new tokens per request")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="prompt tokens per prefill program "
+                         "(0: per-token reference path)")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="prompt tokens prefilled per scheduler "
+                         "iteration (default: 2 chunks)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--eos-id", type=int, default=-1)
@@ -66,9 +72,11 @@ def main():
 
     engine = EnsembleEngine(
         cfg, params, n_slots=args.batch, max_prompt=args.prompt_len,
-        max_out=args.steps, temperature=args.temperature, top_k=args.top_k,
+        max_out=args.steps, prefill_chunk=args.prefill_chunk,
+        temperature=args.temperature, top_k=args.top_k,
         eos_id=args.eos_id, quorum=quorum, seed=args.seed)
     print(f"engine: K={K} members, {args.batch} slots, "
+          f"prefill chunk {engine.prefill_chunk}, "
           f"cache pool {engine.cache_bytes() / 2**20:.1f} MiB")
 
     if args.continuous:
@@ -76,9 +84,12 @@ def main():
             args.requests, cfg.vocab_size,
             prompt_len=(max(2, args.prompt_len // 4), args.prompt_len),
             max_new=(max(1, args.steps // 2), args.steps), seed=args.seed)
-        # compile outside the timed run so percentiles measure serving
-        engine.generate([reqs[0][0]], max_new=1)
-        client.print_report(client.run_load(engine, reqs))
+        # compile outside the timed run so percentiles measure serving;
+        # max_new=2 forces one decode step, so BOTH kernels (prefill +
+        # decode) are built here, not inside the first timed iteration
+        engine.generate([reqs[0][0]], max_new=2)
+        client.print_report(client.run_load(
+            engine, reqs, prefill_budget=args.prefill_budget))
         return 0
 
     B = args.batch

@@ -293,6 +293,93 @@ def gqa_decode(params: dict, x: jax.Array, cache: dict, idx: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# GQA chunk prefill
+# ---------------------------------------------------------------------------
+
+def chunk_cache_write(plane: jax.Array, chunk: jax.Array, idx: jax.Array,
+                      n_tok: jax.Array, window: int) -> jax.Array:
+    """Bulk-write a prompt chunk into a positional cache plane.
+
+    plane: (B, S, ...) cache; chunk: (B, C, ...) entries for positions
+    idx..idx+n_tok-1 (t >= n_tok is padding and is NOT written).  For
+    sliding-window caches the slot for position p is p % S and a chunk
+    longer than the ring keeps only the last S positions — the write is
+    a single deterministic scatter (losers map to the dropped
+    out-of-range index), never a duplicate-index race.  n_tok == 0 is a
+    bit-exact no-op.
+    """
+    S, C = plane.shape[1], chunk.shape[1]
+    t = jnp.arange(C)
+    if window > 0:
+        tgt = (idx + t) % S
+        win = (t < n_tok) & (t >= n_tok - S)  # ring: last S positions win
+    else:
+        tgt = idx + t
+        win = t < n_tok
+    tgt = jnp.where(win, tgt, S)  # S is out of range -> dropped
+    return plane.at[:, tgt].set(chunk, mode="drop")
+
+
+def _chunk_q_pos(idx: jax.Array, B: int, C: int, mrope: bool):
+    pos = jnp.broadcast_to(idx + jnp.arange(C, dtype=jnp.int32), (B, C))
+    return jnp.broadcast_to(pos, (3, B, C)) if mrope else pos
+
+
+def _cache_entry_pos(slots: int, idx: jax.Array, window: int) -> jax.Array:
+    """Absolute positions held by cache slots BEFORE a chunk at `idx` is
+    written (positions < idx); empty/future slots get the mask sentinel."""
+    slot_ids = jnp.arange(slots)
+    last = idx - 1
+    if window > 0:
+        # slot s holds the most recent p <= last with p % slots == s
+        pos = last - ((last - slot_ids) % slots)
+    else:
+        pos = slot_ids
+    return jnp.where((pos >= 0) & (pos <= last), pos, -(10 ** 9))
+
+
+def gqa_prefill(params: dict, x: jax.Array, cache: dict, idx: jax.Array,
+                n_tok: jax.Array, a: AttnConfig, cfg: ModelConfig,
+                window: int, theta: float) -> Tuple[jax.Array, dict]:
+    """Multi-token prefill. x: (B, C, d) chunk at positions idx..idx+C-1;
+    n_tok () valid tokens (the tail is padding: masked out of attention
+    and never written).  Queries attend causally over the pre-existing
+    cache entries plus the chunk itself, then the chunk's K/V land in
+    the cache in one bulk write.  -> (out (B, C, d), cache)."""
+    B, C, _ = x.shape
+    kv = _kv_spec(a.n_kv_heads)
+    kf, vf = x @ params["w_k"], x @ params["w_v"]
+    if kv == REP:  # see gqa_apply: keep shards out of head_dim
+        kf = constrain(kf, None, None, REP)
+        vf = constrain(vf, None, None, REP)
+    q = (x @ params["w_q"]).reshape(B, C, a.n_heads, a.head_dim)
+    k = kf.reshape(B, C, a.n_kv_heads, a.head_dim)
+    v = vf.reshape(B, C, a.n_kv_heads, a.head_dim)
+    q, k = _maybe_qknorm(params, q, k, cfg.norm_eps)
+    pos = _chunk_q_pos(idx, B, C, a.mrope_sections is not None)
+    if a.use_rope:
+        q = apply_rope(q, pos, theta, a.mrope_sections)
+        k = apply_rope(k, pos, theta, a.mrope_sections)
+    k = constrain(k, None, None, kv, None)
+    v = constrain(v, None, None, kv, None)
+    slots = cache["k"].shape[1]
+    pos1d = pos if a.mrope_sections is None else pos[0]
+    t = jnp.arange(C)
+    chunk_pos = jnp.where(t < n_tok, idx + t, -(10 ** 9))
+    k_pos = jnp.concatenate([_cache_entry_pos(slots, idx, window),
+                             chunk_pos])
+    k_all = jnp.concatenate([cache["k"], k], axis=1)
+    v_all = jnp.concatenate([cache["v"], v], axis=1)
+    scale = 1.0 / math.sqrt(a.head_dim)
+    o = attend(q, k_all, v_all, pos1d[0], k_pos, window=window, causal=True,
+               scale=scale, force_dense=(slots + C) <= ATTN_CHUNK * 4)
+    o = o.reshape(B, C, -1) @ params["w_o"]
+    ck = chunk_cache_write(cache["k"], k, idx, n_tok, window)
+    cv = chunk_cache_write(cache["v"], v, idx, n_tok, window)
+    return o, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
 # MLA (deepseek-v2): latent-compressed KV
 # ---------------------------------------------------------------------------
 
@@ -365,6 +452,35 @@ def mla_decode(params: dict, x: jax.Array, cache: dict, idx: jax.Array,
     o = attend(q_full, k_full, v, pos[0], k_pos, window=0, causal=True,
                scale=scale)
     o = o.reshape(B, 1, -1) @ params["w_o"]
+    return o, {"c_kv": cc, "k_r": cr}
+
+
+def mla_prefill(params: dict, x: jax.Array, cache: dict, idx: jax.Array,
+                n_tok: jax.Array, a: AttnConfig, cfg: ModelConfig,
+                theta: float) -> Tuple[jax.Array, dict]:
+    """Multi-token MLA prefill: bulk-write the chunk's latents, then
+    attend over the expanded cache (entries past idx+n_tok stay masked,
+    exactly as in mla_decode).  -> (out (B, C, d), cache)."""
+    B, C, _ = x.shape
+    q, c_kv, k_r = _mla_qkv(params, x, a)
+    pos = _chunk_q_pos(idx, B, C, False)
+    q_c, q_r = q[..., :a.qk_nope_dim], q[..., a.qk_nope_dim:]
+    q_r = apply_rope(q_r, pos, theta)
+    k_r = apply_rope(k_r[..., None, :], pos, theta)[..., 0, :]
+    cc = chunk_cache_write(cache["c_kv"], c_kv, idx, n_tok, 0)
+    cr = chunk_cache_write(cache["k_r"], k_r, idx, n_tok, 0)
+    S = cc.shape[1]
+    k_c, v = _mla_expand(params, cc, a)
+    slot_ids = jnp.arange(S)
+    k_pos = jnp.where(slot_ids < idx + n_tok, slot_ids, -(10 ** 9))
+    q_full = jnp.concatenate([q_c, q_r], -1)
+    k_full = jnp.concatenate(
+        [k_c, jnp.broadcast_to(cr[..., None, :],
+                               k_c.shape[:-1] + (a.qk_rope_dim,))], -1)
+    scale = 1.0 / math.sqrt(a.qk_nope_dim + a.qk_rope_dim)
+    o = attend(q_full, k_full, v, pos[0], k_pos, window=0, causal=True,
+               scale=scale)
+    o = o.reshape(B, C, -1) @ params["w_o"]
     return o, {"c_kv": cc, "k_r": cr}
 
 

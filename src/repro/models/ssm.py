@@ -76,13 +76,17 @@ def _mamba_conv_full(x, w):
     return out
 
 
-def _mamba_inner(params, xz, cfg: ModelConfig, h0):
+def _mamba_inner(params, xz, cfg: ModelConfig, h0, valid=None):
     """Shared scan core. xz: conv'd x (B,T,di); returns (y, h_T).
 
     The (B,T,di,N) transition/input tensors are never materialized for the
     full sequence: dt/B/C/x are chunked into the scan xs and a_t/b_t are
     formed per chunk inside the body (live set (B,CH,di,N), then reduced
     against C before the next chunk).
+
+    valid (B,T) marks real positions; where False, dt is forced to 0 so
+    the transition is exp(0)=identity and the input term vanishes — the
+    state passes through padding untouched (chunk-prefill tails).
     """
     s = cfg.ssm
     d_inner, dt_rank = mamba_dims(cfg)
@@ -93,6 +97,8 @@ def _mamba_inner(params, xz, cfg: ModelConfig, h0):
     Cm = proj[..., dt_rank + s.d_state:].astype(jnp.float32)
     dt = jax.nn.softplus(dt_lo @ params["mamba_dt_w"]
                          + params["mamba_dt_b"])          # (B,T,di)
+    if valid is not None:
+        dt = jnp.where(valid[..., None], dt, 0.0)
     dt = constrain(dt, "batch", None, "model")
     A = -jnp.exp(params["mamba_A_log"])                    # (di, N)
     xf = xz.astype(jnp.float32)
@@ -173,6 +179,35 @@ def mamba_decode(params: dict, x: jax.Array, cache: dict,
     y, h = _mamba_inner(params, xc, cfg, cache["ssm"])
     y = (y.astype(z.dtype) * jax.nn.silu(z)) @ params["mamba_out"]
     return y, {"conv": window[:, 1:], "ssm": h}
+
+
+def mamba_prefill(params: dict, x: jax.Array, cache: dict, n_tok: jax.Array,
+                  cfg: ModelConfig) -> Tuple[jax.Array, dict]:
+    """Multi-token prefill. x: (B,C,d) chunk; n_tok () valid tokens.
+
+    The conv window is seeded from the cached tail (so the chunk joins
+    the sequence seamlessly) and the ssm scan starts from the cached
+    state with padded positions masked to identity transitions — the
+    returned state equals stepping mamba_decode over exactly the n_tok
+    valid tokens.  New tails are cut at offset n_tok, so n_tok == 0 is a
+    bit-exact no-op.
+    """
+    s = cfg.ssm
+    d_inner, _ = mamba_dims(cfg)
+    B, C, _ = x.shape
+    xz = x @ params["mamba_in"]
+    xs, z = xz[..., :d_inner], xz[..., d_inner:]
+    xs = constrain(xs, None, None, "model")
+    ctx = jnp.concatenate([cache["conv"].astype(xs.dtype), xs], axis=1)
+    conv = _mamba_conv_full(ctx, params["mamba_conv"])[:, s.conv_width - 1:]
+    xc = jax.nn.silu(conv).astype(xs.dtype)
+    valid = jnp.broadcast_to(jnp.arange(C) < n_tok, (B, C))
+    y, h = _mamba_inner(params, xc, cfg, cache["ssm"], valid=valid)
+    y = (y.astype(z.dtype) * jax.nn.silu(z))
+    y = constrain(y, None, None, "model")
+    y = y @ params["mamba_out"]
+    new_conv = jax.lax.dynamic_slice_in_dim(ctx, n_tok, s.conv_width - 1, 1)
+    return y, {"conv": new_conv, "ssm": h}
 
 
 # ===========================================================================
@@ -350,6 +385,36 @@ def rwkv_decode(params: dict, x: jax.Array, cache: dict,
     y = _rwkv_groupnorm(y, params["rwkv_ln_scale"], H, dh)
     y = (y.astype(g.dtype) * g) @ params["rwkv_o"]
     return y, {"shift": x, "wkv": S}
+
+
+def rwkv_prefill(params: dict, x: jax.Array, cache: dict, n_tok: jax.Array,
+                 cfg: ModelConfig) -> Tuple[jax.Array, dict]:
+    """Multi-token prefill. x: (B,C,d) chunk; n_tok () valid tokens.
+
+    Token shift is seeded from the cached tail; padded positions are
+    masked to state no-ops (k -> 0 kills the input term, log_w -> 0 is
+    decay 1), so the returned wkv state equals stepping rwkv_decode over
+    exactly the n_tok valid tokens.  n_tok == 0 is a bit-exact no-op.
+    """
+    B, C, d = x.shape
+    H, dh = rwkv_dims(cfg)
+    ctx = jnp.concatenate([cache["shift"].astype(x.dtype), x], axis=1)
+    r, k, v, g, log_w = _rwkv_proj(params, x, ctx[:, :C], cfg)
+    valid = (jnp.arange(C) < n_tok)[None, :, None]
+    k = jnp.where(valid, k, 0)
+    log_w = jnp.where(valid, log_w, 0.0)
+
+    def heads(t):
+        return t.astype(jnp.float32).reshape(B, C, H, dh)
+
+    y, S = _wkv_chunked(heads(r), heads(k), heads(v), heads(log_w),
+                        params["rwkv_first"], cache["wkv"])
+    y = _rwkv_groupnorm(y, params["rwkv_ln_scale"], H, dh)
+    y = (y.astype(g.dtype) * g)
+    y = constrain(y, None, None, "model")
+    y = y @ params["rwkv_o"]
+    new_shift = jax.lax.dynamic_slice_in_dim(ctx, n_tok, 1, 1)
+    return y, {"shift": new_shift, "wkv": S}
 
 
 # --- rwkv channel-mix (its FFN flavor) -------------------------------------

@@ -411,13 +411,130 @@ def decode_step_slots(params, cfg: ModelConfig, cache: dict,
     return step(cache, tokens)
 
 
+def _slot_prefill(p, c, x, spec: LayerSpec, cfg: ModelConfig, idx, n_tok,
+                  enc=None):
+    """Chunk block step. x: (B,C,d) at positions idx..idx+C-1; n_tok ()
+    valid tokens (padding tail is masked out of every cache/state write).
+    -> (x, cache)."""
+    h_in = rmsnorm(p["norm_mix"], x, cfg.norm_eps)
+    if spec.mixer == "attn":
+        if cfg.attn.kind == "mla":
+            h, c2 = attn.mla_prefill(p["attn"], h_in, c_sub(c), idx, n_tok,
+                                     cfg.attn, cfg, cfg.attn.rope_theta)
+        else:
+            h, c2 = attn.gqa_prefill(p["attn"], h_in, c_sub(c), idx, n_tok,
+                                     cfg.attn, cfg, cfg.attn.window,
+                                     cfg.attn.rope_theta)
+    elif spec.mixer == "attn_local":
+        h, c2 = attn.gqa_prefill(p["attn"], h_in, c_sub(c), idx, n_tok,
+                                 cfg.attn, cfg, cfg.local_window,
+                                 cfg.local_rope_theta)
+    elif spec.mixer == "mamba":
+        h, c2 = ssm_mod.mamba_prefill(p["mamba"], h_in, c_sub(c), n_tok, cfg)
+    elif spec.mixer == "rwkv":
+        h, c2 = ssm_mod.rwkv_prefill(p["rwkv"], h_in, c_sub(c), n_tok, cfg)
+    else:
+        raise ValueError(spec.mixer)
+    x = x + h
+    if "cross" in p:
+        h = attn.cross_attn_apply(
+            p["cross"], rmsnorm(p["norm_cross"], x, cfg.norm_eps), enc,
+            cfg.attn)
+        x = x + h
+    h_f = rmsnorm(p["norm_ffn"], x, cfg.norm_eps)
+    if spec.ffn == "rwkv_cmix":
+        C = x.shape[1]
+        ctx = jnp.concatenate([c["cmix_shift"].astype(h_f.dtype), h_f], 1)
+        h = ssm_mod.cmix_apply(p["cmix"], h_f, ctx[:, :C])
+        c2["cmix_shift"] = jax.lax.dynamic_slice_in_dim(ctx, n_tok, 1, 1)
+    else:
+        h, _ = _ffn_apply(p, h_f, spec, cfg)
+    return x + h, c2
+
+
+def prefill_step(params, cfg: ModelConfig, cache: dict, tokens: jax.Array,
+                 n_tok: jax.Array) -> Tuple[jax.Array, dict]:
+    """Consume a whole prompt chunk in one forward pass.
+
+    tokens: (B, C) prompt chunk at positions idx..idx+C-1 (idx is the
+    cache's current position); n_tok: () how many of the C are real —
+    the padded tail is masked to a state/cache no-op, so arbitrary
+    prompt lengths run through one compiled C-shaped program.  Every
+    prompt position's KV/recurrent state is materialized directly into
+    the cache and idx advances by n_tok.
+    -> (last_logits (B, V) at position idx+n_tok-1, cache): the caller
+    samples the FIRST generated token straight from prefill.
+    """
+    idx = cache["idx"]
+    x = _embed_in(params, cfg, tokens, None)
+    C = x.shape[1]
+    if cfg.enc_dec and not cfg.attn.use_rope:
+        pe = sinusoidal_positions(cfg.max_seq, cfg.d_model)
+        x = x + jax.lax.dynamic_slice_in_dim(pe, idx, C, 0)[None].astype(
+            x.dtype)
+    enc = cache.get("enc")
+    new_segments = []
+    for seg_params, seg_cache, (count, specs) in zip(
+            params["segments"], cache["segments"], cfg.segments()):
+
+        def body(x, xs):
+            sp, sc = xs
+            new_sc = {}
+            for i, spec in enumerate(specs):
+                x, new_sc[f"slot_{i}"] = _slot_prefill(
+                    sp[f"slot_{i}"], sc[f"slot_{i}"], x, spec, cfg, idx,
+                    n_tok, enc)
+            return x, new_sc
+
+        x, new_seg = jax.lax.scan(body, x, (seg_params, seg_cache))
+        new_segments.append(new_seg)
+    last = jnp.maximum(n_tok - 1, 0)  # last valid position in the chunk
+    xl = jax.lax.dynamic_slice_in_dim(x, last, 1, 1)
+    xl = rmsnorm(params["final_norm"], xl, cfg.norm_eps)
+    logits = lm_logits(params, xl, cfg)[:, 0]
+    new_cache = {"idx": idx + n_tok, "segments": new_segments}
+    if enc is not None:
+        new_cache["enc"] = enc
+    return logits, new_cache
+
+
+def prefill_slots(params, cfg: ModelConfig, cache: dict, tokens: jax.Array,
+                  n_tok: jax.Array) -> Tuple[jax.Array, dict]:
+    """Per-slot chunk prefill: every row consumes its OWN n_tok prompt
+    tokens starting at its OWN cache position.
+
+    tokens: (B, C); n_tok: (B,); cache from init_slot_cache (idx: (B,)).
+    -> (last_logits (B, V), cache).  Implemented as a row-vmap of the
+    scalar prefill_step (the decode_step_slots trick), so slots with
+    n_tok == 0 are bit-exact no-ops and mixed prefill/idle batches reuse
+    one compiled program.
+    """
+    axes = slot_cache_axes(cache)
+
+    def one_row(c, t, n):
+        cb = {"idx": c["idx"],
+              "segments": jax.tree.map(lambda x: x[:, None], c["segments"])}
+        if "enc" in c:
+            cb["enc"] = c["enc"][None]
+        logits, nc = prefill_step(params, cfg, cb, t[None], n)
+        out = {"idx": nc["idx"],
+               "segments": jax.tree.map(lambda x: x[:, 0], nc["segments"])}
+        if "enc" in nc:
+            out["enc"] = nc["enc"][0]
+        return logits[0], out
+
+    step = jax.vmap(one_row, in_axes=(axes, 0, 0), out_axes=(0, axes))
+    return step(cache, tokens, n_tok)
+
+
 def prefill(params, cfg: ModelConfig, tokens=None, embeds=None,
             enc_embeds=None) -> Tuple[jax.Array, jax.Array]:
     """Forward scoring pass for the prefill shape: last-token logits.
 
-    (A production server would also materialize the KV cache here; for the
-    dry-run cells the compute/memory/collective profile is the forward pass,
-    which this lowers exactly, without holding logits for all positions.)
+    (The serving engine materializes the KV cache with prefill_step /
+    prefill_slots above; this variant keeps the dry-run cells' profile:
+    the compute/memory/collective shape of the forward pass, without
+    holding logits for all positions.)
     """
     x = _embed_in(params, cfg, tokens, embeds)
     B, T = x.shape[:2]

@@ -32,9 +32,9 @@ def percentile(xs: Sequence[float], p: float) -> float:
     return float(np.percentile(np.asarray(xs), p)) if len(xs) else 0.0
 
 
-def run_load(engine: EnsembleEngine, requests) -> dict:
+def run_load(engine: EnsembleEngine, requests, prefill_budget=None) -> dict:
     """Serve `requests` through a fresh Scheduler; -> stats report dict."""
-    sched = Scheduler(engine)
+    sched = Scheduler(engine, prefill_budget=prefill_budget)
     for tokens, max_new in requests:
         sched.submit(tokens, max_new)
     t0 = time.time()

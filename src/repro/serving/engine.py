@@ -17,12 +17,22 @@ it replaces:
     zeroing a member's weight degrades gracefully to the surviving
     subset, mirroring ring_relabel's straggler policy, with no recompile
     (the quorum is a traced argument);
-  - prompt prefill, sampling, output bookkeeping and EOS/length
-    eviction flags all happen inside the same jitted step, so the host
-    loop is dispatch-only.
+  - sampling, output bookkeeping and EOS/length eviction flags all
+    happen inside the jitted step, so the host loop is dispatch-only;
+  - prompts go through a SECOND compiled kernel: prefill (also vmapped
+    over members; slot index traced) consumes a whole prompt chunk of
+    one slot per program and materializes every prompt position's
+    KV/recurrent state straight into that slot's cache row (slot_row ->
+    chunk forward -> write_slot_row, the prefill-then-insert idiom), so
+    a request is decode-ready after ceil(prompt_len / prefill_chunk)
+    programs instead of prompt_len steps, costs O(chunk) — not
+    O(n_slots x chunk) — and its first generated token is sampled from
+    the prefill program's last-token logits.  prefill_chunk=0 keeps the
+    original one-token-per-step teacher-forcing path as a reference
+    baseline.
 
 Every decode in the repo (launch/serve.py CLI, examples, benchmarks,
-the scheduler) goes through EnsembleEngine.step — one decode path.
+the scheduler) goes through EnsembleEngine.prefill/step — one path.
 """
 from __future__ import annotations
 
@@ -64,7 +74,8 @@ class EnsembleEngine:
 
     def __init__(self, cfg: ModelConfig, stacked_params, *,
                  n_slots: int = 8, max_prompt: int = 64, max_out: int = 64,
-                 temperature: float = 0.0, top_k: int = 0, eos_id: int = -1,
+                 prefill_chunk: int = 32, temperature: float = 0.0,
+                 top_k: int = 0, eos_id: int = -1,
                  quorum: Optional[Sequence[float]] = None, seed: int = 0):
         self.cfg = cfg
         self.params = stacked_params
@@ -73,6 +84,9 @@ class EnsembleEngine:
         self.max_prompt = max_prompt
         self.max_out = max_out
         self.max_seq = max_prompt + max_out
+        # prompt tokens consumed per prefill program; 0 disables batched
+        # prefill and keeps the per-token teacher-forcing reference path
+        self.prefill_chunk = min(max(prefill_chunk, 0), max_prompt)
         self.temperature = temperature
         self.top_k = top_k
         self.eos_id = eos_id
@@ -85,9 +99,11 @@ class EnsembleEngine:
             self.cache["enc"] = self._encode_stub(n_slots)
         self.state = self._blank_state(seed)
         self.steps_run = 0
+        self.prefills_run = 0
         # cache + state are donated: the pool is updated in place across
         # the server's lifetime, never reallocated.
         self._step = jax.jit(self._step_impl, donate_argnums=(1, 2))
+        self._prefill = jax.jit(self._prefill_impl, donate_argnums=(1, 2))
         self._update = jax.jit(self._update_impl, donate_argnums=(0, 1))
         self._score = jax.jit(self._score_impl, donate_argnums=(1,))
 
@@ -127,18 +143,27 @@ class EnsembleEngine:
 
     def _step_impl(self, params, cache, st: SlotState, quorum):
         B = st.tok.shape[0]
+        # only live slots advance: an inactive / finished slot must not
+        # walk pos (and the cache idx) past max_seq while the server
+        # idles.  With batched prefill on, mid-prompt slots also hold
+        # still here — the prefill program owns the prompt path.
+        adv = st.active & ~st.done
+        if self.prefill_chunk > 0:
+            adv &= st.pos >= st.prompt_len
+        old_cache = cache
         logits, cache = self._member_logits(params, cache, st.tok)
+        cache = kv_cache.keep_frozen(cache, old_cache, adv)
         logp = ens.ensemble_log_probs(logits, weights=quorum)  # (B, V)
         key, sub = jax.random.split(st.key)
         sampled = sampling.sample(sub, logp, self.temperature, self.top_k)
 
-        pos1 = st.pos + 1
+        pos1 = st.pos + adv.astype(jnp.int32)
         in_prompt = pos1 < st.prompt_len  # next input is teacher-forced
         P = st.prompt.shape[1]
         nxt_prompt = jnp.take_along_axis(
             st.prompt, jnp.minimum(pos1, P - 1)[:, None], axis=1)[:, 0]
 
-        emit = st.active & ~st.done & ~in_prompt
+        emit = adv & ~in_prompt
         row = jnp.arange(B)
         col = jnp.minimum(st.n_gen, st.out.shape[1] - 1)
         out = st.out.at[row, col].set(
@@ -148,7 +173,8 @@ class EnsembleEngine:
         if self.eos_id >= 0:
             finished |= emit & (sampled == self.eos_id)
         done = st.done | finished
-        tok = jnp.where(in_prompt, nxt_prompt, sampled)
+        tok = jnp.where(adv, jnp.where(in_prompt, nxt_prompt, sampled),
+                        st.tok)
         return SlotState(tok=tok, pos=pos1, prompt=st.prompt,
                          prompt_len=st.prompt_len, max_new=st.max_new,
                          n_gen=n_gen, active=st.active, done=done,
@@ -170,6 +196,56 @@ class EnsembleEngine:
             done=st.done & ~release & ~admit,
             out=jnp.where(a2, 0, st.out),
             key=st.key), cache
+
+    def _prefill_impl(self, params, cache, st: SlotState, quorum, slot):
+        """Consume up to prefill_chunk prompt tokens of ONE slot in one
+        compiled program (members vmapped, like _step_impl).
+
+        The slot index is a traced scalar, so every slot reuses this one
+        program; only the selected slot's cache row rides through the
+        chunk forward (slot_row -> prefill -> write_slot_row, maxtext's
+        prefill-then-insert), so a prefill costs O(chunk) compute — not
+        O(n_slots x chunk) — and in-flight neighbors are untouched.  A
+        slot whose prompt completes inside this chunk gets its first
+        generated token sampled from the chunk's last-token logits: the
+        first token comes out of prefill itself, no decode step needed.
+        Idle / decode-phase slots are bit-exact no-ops (n_tok == 0).
+        """
+        C = self.prefill_chunk
+        pos, plen = st.pos[slot], st.prompt_len[slot]
+        need = st.active[slot] & ~st.done[slot] & (pos < plen)
+        n_tok = jnp.where(need, jnp.minimum(C, plen - pos), 0)
+        P = st.prompt.shape[1]
+        cols = jnp.clip(pos + jnp.arange(C), 0, P - 1)
+        chunk = st.prompt[slot][cols][None]  # (1, C)
+        row = kv_cache.slot_row(cache, slot)
+
+        def one(p, c):
+            return tf.prefill_slots(p, self.cfg, c, chunk, n_tok[None])
+
+        logits, row = jax.vmap(one)(params, row)  # (K, 1, V)
+        cache = kv_cache.write_slot_row(cache, row, slot)
+        logp = ens.ensemble_log_probs(logits[:, 0], weights=quorum)  # (V,)
+        key, sub = jax.random.split(st.key)
+        sampled = sampling.sample(sub, logp, self.temperature, self.top_k)
+
+        pos1 = pos + n_tok
+        completed = need & (pos1 >= plen)
+        col = jnp.minimum(st.n_gen[slot], st.out.shape[1] - 1)
+        out = st.out.at[slot, col].set(
+            jnp.where(completed, sampled, st.out[slot, col]))
+        n_gen = st.n_gen.at[slot].add(completed.astype(jnp.int32))
+        finished = completed & (st.n_gen[slot] + 1 >= st.max_new[slot])
+        if self.eos_id >= 0:
+            finished |= completed & (sampled == self.eos_id)
+        return SlotState(
+            tok=st.tok.at[slot].set(jnp.where(completed, sampled,
+                                              st.tok[slot])),
+            pos=st.pos.at[slot].set(pos1), prompt=st.prompt,
+            prompt_len=st.prompt_len, max_new=st.max_new, n_gen=n_gen,
+            active=st.active, done=st.done.at[slot].set(st.done[slot]
+                                                        | finished),
+            out=out, key=key), cache
 
     def _score_impl(self, params, cache, tok_t, gold_t, quorum):
         """Teacher-forced scoring step: per-member + ensemble NLL."""
@@ -205,6 +281,29 @@ class EnsembleEngine:
         self.steps_run += 1
         return self.state
 
+    def prefill(self, slot: int) -> SlotState:
+        """Advance one mid-prompt slot by up to prefill_chunk prompt
+        tokens (one compiled program, slot index traced — every slot
+        reuses it); a slot whose prompt completes emits its first
+        generated token from this same program.
+
+        An admitted request is decode-ready after
+        ceil(prompt_len / prefill_chunk) prefill programs instead of
+        prompt_len engine steps, and the program touches only this
+        slot's cache row — in-flight neighbors don't pay for it.
+        """
+        if self.prefill_chunk <= 0:
+            raise ValueError("engine built with prefill_chunk=0 "
+                             "(per-token reference path)")
+        if not 0 <= int(slot) < self.n_slots:
+            raise ValueError(f"slot {slot} out of range "
+                             f"[0, {self.n_slots})")
+        self.state, self.cache = self._prefill(
+            self.params, self.cache, self.state, self.quorum,
+            jnp.asarray(slot, jnp.int32))
+        self.prefills_run += 1
+        return self.state
+
     def update_slots(self, release: Sequence[int] = (),
                      admits: Sequence[Tuple[int, np.ndarray, int]] = ()):
         """Evict finished slots and admit new requests.
@@ -214,14 +313,24 @@ class EnsembleEngine:
         program.
         """
         B, P = self.n_slots, self.max_prompt
+
+        def check_slot(b) -> int:
+            # validate BEFORE indexing: numpy wraparound would silently
+            # alias slot -1 onto the last slot
+            b = int(b)
+            if not 0 <= b < B:
+                raise ValueError(f"slot {b} out of range [0, {B})")
+            return b
+
         rel = np.zeros((B,), bool)
         adm = np.zeros((B,), bool)
         prompt = np.zeros((B, P), np.int32)
         plen = np.zeros((B,), np.int32)
         mnew = np.zeros((B,), np.int32)
         for b in release:
-            rel[b] = True
+            rel[check_slot(b)] = True
         for b, toks, max_new in admits:
+            b = check_slot(b)
             t = self.validate_request(toks, max_new)
             adm[b] = True
             prompt[b, :t.size] = t
@@ -239,12 +348,23 @@ class EnsembleEngine:
         use scheduler.Scheduler for continuous admission instead.
         Returns one int32 array of generated tokens per prompt.
         """
+        if len(prompts) == 0:
+            return []
         if len(prompts) > self.n_slots:
             raise ValueError(f"{len(prompts)} prompts > {self.n_slots} slots")
         self.update_slots(
             release=range(self.n_slots),
             admits=[(i, p, max_new) for i, p in enumerate(prompts)])
-        steps = max(len(np.reshape(p, -1)) for p in prompts) + max_new - 1
+        plens = [len(np.reshape(p, -1)) for p in prompts]
+        if self.prefill_chunk > 0:
+            # chunked prefill emits each slot's first token; decode does
+            # the remaining max_new - 1
+            for i, plen in enumerate(plens):
+                for _ in range(-(-plen // self.prefill_chunk)):
+                    self.prefill(i)
+            steps = max_new - 1
+        else:
+            steps = max(plens) + max_new - 1
         for _ in range(steps):
             self.step()
         st = jax.device_get(self.state)

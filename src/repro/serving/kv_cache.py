@@ -70,6 +70,64 @@ def reset_slots(pool: dict, mask: jax.Array) -> dict:
     return out
 
 
+def slot_row(pool: dict, b: jax.Array) -> dict:
+    """Slice one slot's caches (all members) out of the pool: the B axis
+    of every leaf narrows to length 1 at (traced) slot b.  The prefill
+    kernel runs the chunk forward on this row only, so its cost scales
+    with the chunk — not with n_slots."""
+    sl = jax.lax.dynamic_slice_in_dim
+    out = {"idx": sl(pool["idx"], b, 1, 1),
+           "segments": jax.tree.map(lambda x: sl(x, b, 1, 2),
+                                    pool["segments"])}
+    if "enc" in pool:
+        out["enc"] = sl(pool["enc"], b, 1, 1)
+    return out
+
+
+def write_slot_row(pool: dict, row: dict, b: jax.Array) -> dict:
+    """Insert a length-1-B row (from slot_row, advanced by prefill) back
+    into the pool at slot b — maxtext's prefill-then-insert, as one
+    in-place dynamic-update per leaf on the donated pool."""
+    up = jax.lax.dynamic_update_slice_in_dim
+    out = dict(pool)
+    out["idx"] = up(pool["idx"], row["idx"], b, 1)
+    out["segments"] = jax.tree.map(lambda x, r: up(x, r, b, 2),
+                                   pool["segments"], row["segments"])
+    # "enc" is computed once at construction and never advanced
+    return out
+
+
+def keep_frozen(new: dict, old: dict, advance: jax.Array) -> dict:
+    """Undo a decode step's cache mutation for rows where advance (B,)
+    is False: a frozen slot (inactive, finished-awaiting-harvest, or
+    mid-prompt while prefill owns the prompt path) must not walk its
+    position forward or mutate recurrent state — otherwise an idle slot
+    on a long-running server marches idx past max_seq and leans on
+    clamped out-of-range cache writes.
+
+    Only idx and the recurrent planes are restored.  The positional KV
+    planes keep the step's (garbage) write: it lands at the frozen idx,
+    stays invisible under the position bookkeeping, and is overwritten
+    before a later occupant can see it — the same invariant reset_slots
+    relies on — so the restore cost stays proportional to the (small)
+    recurrent state.
+    """
+    out = dict(new)
+    out["idx"] = jnp.where(advance[None, :], new["idx"], old["idx"])
+
+    def sel(path, n, o):  # leaves are (K, count, B, ...)
+        name = next((str(e.key) for e in reversed(path)
+                     if isinstance(e, jax.tree_util.DictKey)), "")
+        if name in _POSITIONAL:
+            return n
+        m = advance.reshape((1, 1, -1) + (1,) * (n.ndim - 3))
+        return jnp.where(m, n, o)
+
+    out["segments"] = jax.tree_util.tree_map_with_path(
+        sel, new["segments"], old["segments"])
+    return out
+
+
 def slot_positions(pool: dict) -> jax.Array:
     """(B,) current per-slot positions (identical across members)."""
     return pool["idx"][0]

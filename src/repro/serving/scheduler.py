@@ -2,24 +2,32 @@
 
 The engine decodes a fixed batch of B slots every step; the scheduler
 keeps those slots full.  Each loop iteration it (1) admits queued
-requests into free slots (per-slot prompt prefill is teacher-forced
-inside the engine step, so admission is just a masked state write +
-cache-slot reset), (2) runs one engine step, and (3) harvests slots
-whose request hit EOS or its generation budget, freeing them for the
-next admission.  Requests of different prompt/output lengths therefore
-interleave in the same decode batch instead of padding to a common
-length — the classic continuous-batching win.
+requests into free slots, (2) runs one engine decode step for the
+slots already past their prompt, (3) prefills admitted prompts in
+chunks — one compiled multi-token program per selected slot (slot
+index traced, so all slots share the program), under a per-iteration
+prompt-token budget so one long prompt cannot starve decode latency
+for in-flight slots — and (4) harvests slots whose request hit EOS or
+its generation budget, freeing them for the next admission.  Requests of different prompt/output lengths
+therefore interleave in the same decode batch instead of padding to a
+common length — the classic continuous-batching win — and a newly
+admitted request reaches its first token after ceil(prompt/chunk)
+prefill programs instead of `prompt` engine steps.
 
-All policy lives host-side in this module; the engine step stays a
-single compiled program.  Admission is FIFO; slots are filled greedily.
+All policy lives host-side in this module; the engine's prefill and
+decode kernels each stay a single compiled program.  Admission is
+FIFO; slots are filled greedily; the prefill budget is spent in FIFO
+admission order.  With engines built prefill_chunk=0 the scheduler
+degrades to the per-token teacher-forcing path unchanged.
 """
 from __future__ import annotations
 
 import time
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Optional
 
+import jax
 import numpy as np
 
 from repro.serving.engine import EnsembleEngine
@@ -46,7 +54,9 @@ class Completion:
     @property
     def ttft(self) -> float:
         """Submit -> first generated token (queue wait + prefill)."""
-        return (self.first_token_t or self.finish_t) - self.submit_t
+        first = (self.first_token_t if self.first_token_t is not None
+                 else self.finish_t)  # `or` would drop a valid 0.0 stamp
+        return first - self.submit_t
 
     @property
     def latency(self) -> float:
@@ -58,13 +68,22 @@ class _SlotMeta:
     req: Request
     admit_t: float
     first_token_t: Optional[float] = None
+    prefill_left: int = 0       # prompt tokens not yet prefilled
 
 
 class Scheduler:
-    """FIFO continuous-batching scheduler over one EnsembleEngine."""
+    """FIFO continuous-batching scheduler over one EnsembleEngine.
 
-    def __init__(self, engine: EnsembleEngine):
+    prefill_budget caps how many prompt tokens may enter prefill
+    programs per loop iteration (default: 2 chunks).  One chunk is
+    always allowed, so a single over-budget prompt still progresses.
+    """
+
+    def __init__(self, engine: EnsembleEngine,
+                 prefill_budget: Optional[int] = None):
         self.engine = engine
+        self.prefill_budget = (2 * engine.prefill_chunk
+                               if prefill_budget is None else prefill_budget)
         self.pending: deque = deque()
         self.slots: list = [None] * engine.n_slots  # Optional[_SlotMeta]
         self.completions: Dict[int, Completion] = {}
@@ -91,19 +110,47 @@ class Scheduler:
     def _fill_slots(self):
         admits = []
         now = time.time()
+        chunked = self.engine.prefill_chunk > 0
         for b in range(self.engine.n_slots):
             if self.slots[b] is None and self.pending:
                 req = self.pending.popleft()
                 admits.append((b, req.tokens, req.max_new))
-                self.slots[b] = _SlotMeta(req, now)
+                self.slots[b] = _SlotMeta(
+                    req, now,
+                    prefill_left=len(req.tokens) if chunked else 0)
         if admits or self._to_release:
             self.engine.update_slots(release=self._to_release, admits=admits)
             self._to_release = []
 
+    def _run_prefill(self):
+        """Spend the iteration's prefill budget in admission (FIFO)
+        order — one chunk program per selected slot."""
+        chunk = self.engine.prefill_chunk
+        if chunk <= 0:
+            return
+        spent = 0
+        waiting = sorted(
+            (b for b, m in enumerate(self.slots)
+             if m is not None and m.prefill_left > 0),
+            key=lambda b: self.slots[b].req.rid)
+        for b in waiting:
+            meta = self.slots[b]
+            take = min(meta.prefill_left, chunk)
+            if spent and spent + take > self.prefill_budget:
+                break  # over budget; first selection always proceeds
+            self.engine.prefill(b)
+            spent += take
+            meta.prefill_left -= take
+
+    def _decode_ready(self) -> bool:
+        return any(m is not None and m.prefill_left == 0
+                   for m in self.slots)
+
     def _harvest(self):
         st = self.engine.state
-        done = np.asarray(st.done)      # the per-step host sync point
-        n_gen = np.asarray(st.n_gen)
+        # ONE device transfer per iteration: finished slots' outputs ride
+        # along with the done/n_gen flags instead of a per-slot fetch
+        done, n_gen, out = jax.device_get((st.done, st.n_gen, st.out))
         now = time.time()
         for b, meta in enumerate(self.slots):
             if meta is None:
@@ -114,7 +161,7 @@ class Scheduler:
                 req = meta.req
                 self.completions[req.rid] = Completion(
                     rid=req.rid,
-                    tokens=np.asarray(st.out[b, :n_gen[b]]),
+                    tokens=out[b, :n_gen[b]].copy(),
                     prompt_len=len(req.tokens),
                     submit_t=req.submit_t, admit_t=meta.admit_t,
                     first_token_t=meta.first_token_t, finish_t=now)
@@ -122,10 +169,18 @@ class Scheduler:
                 self._to_release.append(b)
 
     def run(self) -> Dict[int, Completion]:
-        """Drive until the queue drains and every slot is idle."""
+        """Drive until the queue drains and every slot is idle.
+
+        Decode runs BEFORE prefill each iteration: the harvest stamp
+        then directly follows any first token a prefill program just
+        produced, so reported TTFT is not inflated by an unrelated
+        decode step dispatched after it.
+        """
         while self.pending or any(m is not None for m in self.slots):
             self._fill_slots()
-            self.engine.step()
+            if self._decode_ready():  # skip decode while all mid-prompt
+                self.engine.step()
+            self._run_prefill()
             self._harvest()
         if self._to_release:
             self.engine.update_slots(release=self._to_release)

@@ -18,7 +18,7 @@ import pytest
 from repro.configs import registry
 from repro.core import ensemble as ens
 from repro.models import transformer as tf
-from repro.serving import EnsembleEngine, Scheduler
+from repro.serving import Completion, EnsembleEngine, Scheduler
 from repro.serving import kv_cache
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
@@ -187,6 +187,204 @@ def test_enc_dec_arch_serves():
     for a, b in zip(first, second):
         assert len(a) == 4
         np.testing.assert_array_equal(a, b)
+
+
+# -- batched prefill (ISSUE 2) ----------------------------------------------
+
+
+def _reference_walk(cfg, params, toks, T):
+    """Teacher-forced token-by-token slot-decode logits. -> (B, T, V)."""
+    B = toks.shape[0]
+    p = jax.tree.map(lambda x: x[0], params)
+    cache = tf.init_slot_cache(cfg, B, max_seq=T)
+    step = jax.jit(lambda c, t: tf.decode_step_slots(p, cfg, c, t))
+    out = []
+    for t in range(T):
+        lg, cache = step(cache, toks[:, t: t + 1])
+        out.append(np.asarray(lg[:, 0]))
+    return np.stack(out, 1)
+
+
+@pytest.mark.parametrize("arch", ["gemma3-1b", "rwkv6-7b",
+                                  "jamba-v0.1-52b", "deepseek-v2-236b"])
+def test_prefill_slots_matches_teacher_forced_walk(arch):
+    """Cache materialized by prefill_slots then decoded == the per-token
+    walk, to float tolerance: attention (incl. sliding-window ring),
+    MLA latent cache, mamba+moe hybrid, and rwkv recurrent state all
+    covered.  Rows carry different prompt lengths, so chunk-tail
+    masking and n_tok=0 no-op rows are exercised too."""
+    cfg = registry.get_config(arch, reduced=True).with_(dtype="float32")
+    T, chunk, plens = 12, 5, [12, 4, 7]
+    B = len(plens)
+    params = _params(cfg, 1, seed=3)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, T), 0,
+                              cfg.vocab_size)
+    ref = _reference_walk(cfg, params, toks, T)
+
+    p = jax.tree.map(lambda x: x[0], params)
+    cache = tf.init_slot_cache(cfg, B, max_seq=T)
+    pf = jax.jit(lambda c, t, n: tf.prefill_slots(p, cfg, c, t, n))
+    step = jax.jit(lambda c, t: tf.decode_step_slots(p, cfg, c, t))
+    pos = np.zeros(B, np.int32)
+    plen = np.array(plens)
+    last = np.zeros((B, cfg.vocab_size), np.float32)
+    toks_np = np.asarray(toks)
+    for _ in range(-(-max(plens) // chunk)):
+        n_tok = np.minimum(chunk, np.maximum(plen - pos, 0)).astype(np.int32)
+        cols = np.clip(pos[:, None] + np.arange(chunk)[None, :], 0, T - 1)
+        lg, cache = pf(cache, jnp.asarray(
+            np.take_along_axis(toks_np, cols, axis=1)), jnp.asarray(n_tok))
+        fin = (n_tok > 0) & (pos + n_tok >= plen)
+        last[fin] = np.asarray(lg)[fin]
+        pos += n_tok
+    np.testing.assert_array_equal(np.asarray(cache["idx"]), plen)
+    for b in range(B):  # last prefill logits == walk logits at plen-1
+        np.testing.assert_allclose(last[b], ref[b, plens[b] - 1],
+                                   atol=2e-4, rtol=1e-4)
+    # decode onward from the prefilled cache, each row at its own pace
+    for _ in range(T - max(plens)):
+        tok_b = toks_np[np.arange(B), pos][:, None]
+        lg, cache = step(cache, jnp.asarray(tok_b))
+        for b in range(B):
+            np.testing.assert_allclose(np.asarray(lg[b, 0]), ref[b, pos[b]],
+                                       atol=2e-4, rtol=1e-4)
+        pos += 1
+
+
+def test_prefill_window_ring_wrap():
+    """Prompts longer than the sliding window, chunk > window: the ring
+    keeps only the last `window` positions and decode continues exactly."""
+    cfg = CFG.with_(local_window=8)
+    plen, chunk, steps = 20, 10, 4
+    params = _params(cfg, 2)
+    prompt = np.asarray(jax.random.randint(jax.random.PRNGKey(5),
+                                           (plen,), 0, cfg.vocab_size))
+    ref_eng = EnsembleEngine(cfg, params, n_slots=1, max_prompt=plen,
+                             max_out=steps, prefill_chunk=0)
+    eng = EnsembleEngine(cfg, params, n_slots=1, max_prompt=plen,
+                         max_out=steps, prefill_chunk=chunk)
+    np.testing.assert_array_equal(
+        eng.generate([prompt], max_new=steps)[0],
+        ref_eng.generate([prompt], max_new=steps)[0])
+
+
+@pytest.mark.parametrize("arch", ["gemma3-1b", "rwkv6-7b"])
+def test_engine_prefill_matches_per_token_reference(arch):
+    """generate() through the chunked-prefill engine == the retained
+    per-token teacher-forcing path, K=2, mixed prompt lengths."""
+    cfg = registry.get_config(arch, reduced=True).with_(dtype="float32")
+    params = _params(cfg, 2)
+    prompts = [np.arange(1, 12) % cfg.vocab_size, np.arange(2, 5),
+               np.arange(3, 10)]
+    kw = dict(n_slots=3, max_prompt=12, max_out=6)
+    ref = EnsembleEngine(cfg, params, prefill_chunk=0, **kw).generate(
+        prompts, max_new=6)
+    got = EnsembleEngine(cfg, params, prefill_chunk=4, **kw).generate(
+        prompts, max_new=6)
+    for a, b in zip(got, ref):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_scheduler_prefill_budget_serves_correctly():
+    """A tight per-iteration prefill budget (one chunk) still serves
+    every request exactly; prefill programs ran chunked, not per-token."""
+    K = 2
+    params = _params(CFG, K)
+    eng = EnsembleEngine(CFG, params, n_slots=2, max_prompt=8, max_out=4,
+                         prefill_chunk=4)
+    reqs = [(np.arange(1, 9), 4), (np.arange(2, 8), 4), (np.arange(3, 6), 4)]
+    refs = [eng.generate([t], m) for t, m in reqs]
+    sched = Scheduler(eng, prefill_budget=4)
+    rids = [sched.submit(t, m) for t, m in reqs]
+    prefills_before = eng.prefills_run
+    comps = sched.run()
+    for rid, ref in zip(rids, refs):
+        np.testing.assert_array_equal(comps[rid].tokens, ref[0])
+    # 8+6+3 prompt tokens at <=4/iteration needs >= 5 prefill programs
+    assert eng.prefills_run - prefills_before >= 5
+
+
+# -- bugfix regressions (ISSUE 2 satellites) --------------------------------
+
+
+def test_generate_empty_prompt_list_returns_empty():
+    params = _params(CFG, 1)
+    eng = EnsembleEngine(CFG, params, n_slots=2, max_prompt=4, max_out=4)
+    assert eng.generate([], max_new=4) == []
+
+
+def test_update_slots_rejects_out_of_range_slots():
+    """Negative slots must raise, not alias the last slot via numpy
+    wraparound; >= n_slots must raise too."""
+    params = _params(CFG, 1)
+    eng = EnsembleEngine(CFG, params, n_slots=2, max_prompt=4, max_out=4)
+    for bad in (-1, 2, 17):
+        with pytest.raises(ValueError, match="out of range"):
+            eng.update_slots(release=[bad])
+        with pytest.raises(ValueError, match="out of range"):
+            eng.update_slots(admits=[(bad, np.arange(1, 3), 2)])
+    state_before = jax.device_get(eng.state)
+    with pytest.raises(ValueError):
+        eng.update_slots(release=[0], admits=[(-1, np.arange(1, 3), 2)])
+    # the failed call must not have mutated slot state
+    np.testing.assert_array_equal(state_before.active,
+                                  jax.device_get(eng.state).active)
+
+
+def test_idle_and_done_slots_freeze_position():
+    """pos / cache idx must not advance for inactive or finished slots:
+    an idle slot on a long-running server must never walk past max_seq."""
+    params = _params(CFG, 2)
+    eng = EnsembleEngine(CFG, params, n_slots=2, max_prompt=4, max_out=2)
+    out = eng.generate([np.arange(1, 4)], max_new=2)  # slot 1 never admitted
+    extra = eng.max_seq + 8  # enough steps to walk past max_seq unfixed
+    for _ in range(extra):
+        eng.step()
+    st = jax.device_get(eng.state)
+    idx = np.asarray(kv_cache.slot_positions(eng.cache))
+    # prompt(3) + decode steps(max_new - 1), then frozen
+    assert st.pos[0] == idx[0] == 3 + 1
+    assert st.pos[1] == idx[1] == 0     # never active
+    assert st.pos.max() < eng.max_seq
+    # and the frozen steps did not corrupt the slot for the NEXT request
+    np.testing.assert_array_equal(
+        eng.generate([np.arange(1, 4)], max_new=2)[0], out[0])
+
+
+def test_completion_ttft_honors_zero_first_token_time():
+    """first_token_t=0.0 is a valid stamp, not a missing one: ttft must
+    not fall back to finish_t (the old falsy-`or` footgun)."""
+    c = Completion(rid=0, tokens=np.arange(2), prompt_len=2, submit_t=0.0,
+                   admit_t=0.0, first_token_t=0.0, finish_t=5.0)
+    assert c.ttft == 0.0
+    c_none = Completion(rid=0, tokens=np.arange(2), prompt_len=2,
+                        submit_t=1.0, admit_t=1.0, first_token_t=None,
+                        finish_t=5.0)
+    assert c_none.ttft == 4.0
+
+
+def test_harvest_fetches_state_in_one_transfer(monkeypatch):
+    """_harvest must issue ONE device_get per iteration, not one per
+    finished slot: completions for a full batch finishing together ride
+    a single transfer."""
+    from repro.serving import scheduler as sched_mod
+    params = _params(CFG, 1)
+    eng = EnsembleEngine(CFG, params, n_slots=4, max_prompt=4, max_out=3)
+    sched = Scheduler(eng)
+    rids = [sched.submit(np.arange(1, 4), 3) for _ in range(4)]
+    calls = {"n": 0}
+    real = jax.device_get
+
+    def counting(x):
+        calls["n"] += 1
+        return real(x)
+
+    monkeypatch.setattr(sched_mod.jax, "device_get", counting)
+    comps = sched.run()
+    assert set(comps) == set(rids)
+    assert all(len(comps[r].tokens) == 3 for r in rids)
+    # one fetch per loop iteration (4 requests finish simultaneously)
+    assert calls["n"] <= eng.steps_run + eng.prefills_run + 1
 
 
 def test_score_carries_jensen_guarantee():
