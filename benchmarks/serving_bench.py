@@ -1,6 +1,6 @@
-"""Serving throughput + TTFT: the ensemble engine vs its baselines.
+"""Serving throughput + TTFT + mesh placement: engine vs baselines.
 
-Two gates:
+Three gates:
 
   - throughput (ISSUE 1): the vmapped single-program engine vs the
     seed's K-jit-calls-per-token Python loop (kept alive below as the
@@ -11,8 +11,18 @@ Two gates:
     token must improve >= 4x at K=4 with prompt_len >= 32 — a prompt is
     decode-ready after ceil(prompt/chunk) programs instead of `prompt`
     engine steps.
+  - mesh placement (ISSUE 3, --mesh MxD): the member-sharded engine's
+    PER-DEVICE cache bytes must be <= single-device bytes / M (the slot
+    state is replicated and lives outside the pool, so the pool itself
+    divides exactly), with tokens matching the single-device engine.
+    Per-device tok/s is reported for the record — on a forced-host-CPU
+    mesh the "devices" share the same silicon, so no speedup gate.
 
   PYTHONPATH=src python benchmarks/serving_bench.py [--fast]
+  # mesh stage on a forced 2-device CPU host:
+  XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+      PYTHONPATH=src python benchmarks/serving_bench.py \
+      --fast --mesh 2x1 --mesh-only
 """
 from __future__ import annotations
 
@@ -23,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common import sharding as shd
 from repro.configs import registry
 from repro.core import ensemble as ens
 from repro.models import transformer as tf
@@ -123,6 +134,55 @@ def bench_ttft(cfg, K, batch, plen, chunk, max_out, repeats, seed=0):
     return t_base, t_pref
 
 
+def bench_mesh(cfg, mesh_arg, K, batch, plen, steps, repeats, seed=0):
+    """Member-sharded engine vs single-device: per-device cache bytes,
+    tok/s, and token equality.  -> (ok, lines to print)."""
+    mesh = shd.parse_mesh_arg(mesh_arg)
+    lines = []
+    want_m = int(mesh_arg.lower().split("x")[0]) if "x" in mesh_arg else 1
+    M = 1 if mesh is None else mesh.shape[shd.MEMBER_AXIS]
+    if M < max(want_m, 2):
+        # local_mesh clamps to the devices present, so a 1-device host
+        # yields a 1x1 mesh — running the gate there would "PASS" while
+        # verifying no sharding at all.  Skip loudly instead.
+        return True, [f"mesh: --mesh {mesh_arg} needs {want_m} devices on "
+                      f"the member axis (have {len(jax.devices())}); "
+                      f"skipping the gate "
+                      f"(XLA_FLAGS=--xla_force_host_platform_device_count="
+                      f"{want_m})"]
+    params = jax.vmap(lambda k: tf.init(k, cfg))(
+        jax.random.split(jax.random.PRNGKey(seed), K))
+    prompt = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (batch, plen), 0, cfg.vocab_size))
+    kw = dict(n_slots=batch, max_prompt=plen, max_out=steps)
+
+    single = EnsembleEngine(cfg, params, **kw)
+    ref = single.generate(list(prompt), max_new=steps)
+    bytes_single = single.cache_bytes()
+
+    eng = EnsembleEngine(cfg, params, mesh=mesh, **kw)
+    outs = eng.generate(list(prompt), max_new=steps)  # warmup/compile
+    t0 = time.time()
+    for _ in range(repeats):
+        eng.generate(list(prompt), max_new=steps)
+    tok_s = batch * steps * repeats / (time.time() - t0)
+    bytes_mesh = eng.cache_bytes()
+
+    match = all(np.array_equal(np.asarray(a), np.asarray(b))
+                for a, b in zip(outs, ref))
+    lines.append(
+        f"mesh {dict(mesh.shape)} K={K}: cache "
+        f"{bytes_single / 2**20:.2f} MiB/device single -> "
+        f"{bytes_mesh / 2**20:.2f} MiB/device sharded "
+        f"({bytes_single / bytes_mesh:.2f}x smaller), {tok_s:.1f} tok/s, "
+        f"tokens {'match' if match else 'MISMATCH'}")
+    gate = match and bytes_mesh <= bytes_single // M
+    lines.append(f"mesh per-device cache acceptance "
+                 f"(<= single/{M}, tokens equal): "
+                 f"{'PASS' if gate else 'FAIL'}")
+    return gate, lines
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="gemma3-1b")
@@ -136,15 +196,28 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=32)
     ap.add_argument("--fast", action="store_true",
                     help="CI-sized run (fewer members/steps)")
+    ap.add_argument("--mesh", default="",
+                    help="'MxD': also run the member-sharded engine and "
+                         "gate per-device cache bytes (e.g. 2x1)")
+    ap.add_argument("--mesh-only", action="store_true",
+                    help="skip the throughput/TTFT gates (CI runs them "
+                         "in the single-device stage already)")
     args = ap.parse_args(argv)
     if args.prefill_chunk <= 0:
         ap.error("--prefill-chunk must be >= 1: the TTFT gate measures "
                  "chunked prefill against the per-token baseline")
+    if args.mesh_only and not args.mesh:
+        ap.error("--mesh-only needs --mesh MxD")
     if args.fast:
         args.members, args.steps, args.repeats = [1, 4], 8, 1
         args.ttft_prompt = 32
 
     cfg = registry.get_config(args.arch, reduced=True)
+    if args.mesh_only:
+        ok, lines = bench_mesh(cfg, args.mesh, 4, args.batch,
+                               args.prompt_len, args.steps, args.repeats)
+        print("\n".join(lines))
+        return 0 if ok else 1
     print(f"{args.arch} (reduced) | batch={args.batch} "
           f"prompt={args.prompt_len} steps={args.steps} "
           f"repeats={args.repeats}")
@@ -176,6 +249,13 @@ def main(argv=None):
     ok &= gate
     print(f"K=4 TTFT acceptance (>= 4x): {'PASS' if gate else 'FAIL'} "
           f"({ttft_x:.2f}x)")
+
+    if args.mesh:
+        mesh_ok, lines = bench_mesh(cfg, args.mesh, 4, args.batch,
+                                    args.prompt_len, args.steps,
+                                    args.repeats)
+        print("\n".join(lines))
+        ok &= mesh_ok
     return 0 if ok else 1
 
 

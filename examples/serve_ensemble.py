@@ -1,22 +1,53 @@
-"""Batched serving with an EC ensemble (EC-DNN_G) vs a single member.
+"""Batched serving with an EC ensemble (EC-DNN_G), member-sharded.
 
-The paper's Section 4: "take the global model as the final model if there
-are enough resources at test time".  This example scores held-out
-continuations through the serving engine (repro.serving.EnsembleEngine
-— the same vmapped-member decode path that generates tokens) and reports
-the ensemble's log-likelihood gain: the serving-side face of the Jensen
-guarantee.
+The paper's Section 4: "take the global model as the final model if
+there are enough resources at test time".  This example serves the
+ensemble two ways through repro.serving.EnsembleEngine — single-device
+and member-sharded over a ("member", "data") mesh — and shows that the
+placement changes WHERE the members live (per-device cache bytes drop
+K/M-fold), not WHAT the engine computes (scores match; the Jensen
+log-likelihood gain is identical).
 
-  PYTHONPATH=src python examples/serve_ensemble.py
+Runs on plain CPU: host devices are forced below (before jax imports)
+so `--mesh 2x1` gets a real 2-device member axis anywhere.
+
+  PYTHONPATH=src python examples/serve_ensemble.py [--mesh 2x1]
 """
 import argparse
+import os
 
-import jax
+# force a multi-device CPU host BEFORE jax initializes: the mesh demo
+# needs >= 2 devices and a laptop/CI box has 1 (idempotent if the
+# caller already forced a count)
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=2").strip()
 
-from repro.configs import registry
-from repro.data import lm_member_datasets
-from repro.models import transformer as tf
-from repro.serving import EnsembleEngine
+import jax  # noqa: E402  (env must be set first)
+
+from repro.common import sharding as shd  # noqa: E402
+from repro.configs import registry  # noqa: E402
+from repro.data import lm_member_datasets  # noqa: E402
+from repro.models import transformer as tf  # noqa: E402
+from repro.serving import EnsembleEngine  # noqa: E402
+
+
+def placement_summary(engine) -> str:
+    """Which members, and how many cache bytes, each device holds."""
+    mesh = engine.mesh
+    if mesh is None:
+        return (f"  single device {jax.devices()[0]}: "
+                f"members 0..{engine.n_members - 1}, "
+                f"{engine.cache_bytes() / 2**20:.2f} MiB cache")
+    per = engine.n_members // engine.member_shards
+    lines = []
+    for i, dev in enumerate(mesh.devices[:, 0]):
+        lines.append(f"  device {dev}: members "
+                     f"{i * per}..{(i + 1) * per - 1}, "
+                     f"{engine.cache_bytes() / 2**20:.2f} MiB cache")
+    return "\n".join(lines)
 
 
 def main():
@@ -25,6 +56,8 @@ def main():
     ap.add_argument("--members", type=int, default=4)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--steps", type=int, default=24)
+    ap.add_argument("--mesh", default="2x1",
+                    help="'MxD' member x data grid ('' = single device)")
     args = ap.parse_args()
 
     cfg = registry.get_config(args.arch, reduced=True)
@@ -36,15 +69,29 @@ def main():
     toks = test["tokens"][: args.batch]
     labels = test["labels"][: args.batch]
 
-    engine = EnsembleEngine(cfg, params, n_slots=1, max_prompt=1, max_out=1)
-    member_nll, ens_nll = engine.score(toks, labels)
+    single = EnsembleEngine(cfg, params, n_slots=1, max_prompt=1, max_out=1)
+    mesh = shd.parse_mesh_arg(args.mesh)
+    sharded = EnsembleEngine(cfg, params, n_slots=1, max_prompt=1,
+                             max_out=1, mesh=mesh)
+
+    print(f"single-device placement:\n{placement_summary(single)}")
+    print(f"mesh placement ({args.mesh}):\n{placement_summary(sharded)}")
+
+    member_nll, ens_nll = sharded.score(toks, labels)
+    m_ref, e_ref = single.score(toks, labels)
 
     B, T = toks.shape
-    print(f"served {B}x{T} tokens with K={K} members ({args.arch} reduced)")
+    print(f"\nserved {B}x{T} tokens with K={K} members ({args.arch} "
+          f"reduced), member axis over "
+          f"{sharded.member_shards} device(s)")
     for m in range(K):
         print(f"  member {m}: nll/token = {float(member_nll[m]):.4f}")
     print(f"  EC-DNN_G ensemble: nll/token = {float(ens_nll):.4f} "
           f"(<= mean member {float(member_nll.mean()):.4f} by Jensen)")
+    print(f"  single-device check: ensemble nll {float(e_ref):.4f}, "
+          f"max member delta "
+          f"{float(abs(member_nll - m_ref).max()):.2e} — same math, "
+          f"1/{sharded.member_shards} the cache per device")
 
 
 if __name__ == "__main__":

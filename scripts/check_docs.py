@@ -1,0 +1,112 @@
+#!/usr/bin/env python
+"""Fail CI when docs/*.md references a symbol that no longer exists.
+
+Grep-based, deliberately simple: every inline code span in the docs is
+classified and checked against the working tree —
+
+  - path-like spans (contain '/'):      the file or directory must exist
+  - dotted names (a.b.c) and
+    attribute refs (Engine.step(...)):  every identifier component must
+                                        appear somewhere in the code
+  - bare identifiers (>= 3 chars):      must appear somewhere in the code
+  - CLI flags (--mesh, --prefill-chunk): the flag string must appear
+
+Spans containing spaces, shell operators, or placeholders are skipped
+(they are commands or prose, not symbol references).  The point is not
+perfect resolution — it is that renaming EnsembleEngine.prefill or
+deleting kv_cache.slot_row turns the stale doc into a red build instead
+of a lie.
+
+  python scripts/check_docs.py [docs_dir]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+CODE_DIRS = ("src", "scripts", "benchmarks", "examples", "tests")
+CODE_EXT = {".py", ".sh", ".toml", ".yml", ".yaml"}
+
+IDENT = re.compile(r"^[A-Za-z_][A-Za-z0-9_]*$")
+DOTTED = re.compile(r"^[A-Za-z_][A-Za-z0-9_]*(\.[A-Za-z_][A-Za-z0-9_]*)+$")
+SKIP_CHARS = set(" \t'\"$|&;{}<>*=,")
+# tokens that are math/shape notation or too generic to grep usefully
+IGNORE = {"None", "True", "False", "int32", "float32", "bf16", "jax",
+          "jnp", "numpy", "np", "pytest", "pip", "python", "MxD", "KxD",
+          "out", "idx", "enc", "pos", "tok"}
+
+
+def code_corpus() -> str:
+    chunks = []
+    for d in CODE_DIRS:
+        root = REPO / d
+        if not root.is_dir():
+            continue
+        for f in sorted(root.rglob("*")):
+            if f.suffix in CODE_EXT and f.is_file():
+                chunks.append(f.read_text(errors="ignore"))
+    return "\n".join(chunks)
+
+
+def spans(md_text: str):
+    # fenced blocks are runnable examples, not symbol references — the
+    # inline-span rule below would misfire on prose inside them
+    text = re.sub(r"```.*?```", "", md_text, flags=re.S)
+    return re.findall(r"`([^`\n]+)`", text)
+
+
+def check_span(span: str, corpus: str):
+    """-> list of unresolved symbol strings (empty when the span is
+    fine or not a symbol reference)."""
+    s = span.strip().rstrip(":,.")
+    if not s or SKIP_CHARS & set(s):
+        return []
+    if s.startswith("--"):  # CLI flag
+        return [] if s in corpus else [s]
+    if "/" in s:  # path-like
+        target = s.rstrip("/")
+        return [] if (REPO / target).exists() else [s]
+    s = re.sub(r"\(.*\)$", "", s)  # Engine.step(slot) -> Engine.step
+    if DOTTED.match(s):
+        missing = [part for part in s.split(".")
+                   if part not in IGNORE and len(part) >= 3
+                   and not re.search(r"\b%s\b" % re.escape(part), corpus)]
+        return [f"{s} (component {m!r})" for m in missing]
+    if IDENT.match(s) and len(s) >= 3 and s not in IGNORE:
+        if not re.search(r"\b%s\b" % re.escape(s), corpus):
+            return [s]
+    return []
+
+
+def main(argv):
+    docs = Path(argv[1]) if len(argv) > 1 else REPO / "docs"
+    files = sorted(docs.glob("*.md"))
+    if not files:
+        print(f"check_docs: no markdown under {docs}", file=sys.stderr)
+        return 1
+    corpus = code_corpus()
+    failures = []
+    n_spans = 0
+    for f in files:
+        try:
+            rel = f.relative_to(REPO)
+        except ValueError:
+            rel = f
+        for span in spans(f.read_text()):
+            n_spans += 1
+            for miss in check_span(span, corpus):
+                failures.append(f"{rel}: `{span}` -> unresolved {miss}")
+    if failures:
+        print("check_docs: stale symbol references:", file=sys.stderr)
+        for line in failures:
+            print(f"  {line}", file=sys.stderr)
+        return 1
+    print(f"check_docs: {len(files)} files, {n_spans} code spans, "
+          f"all symbols resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))

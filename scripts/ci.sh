@@ -24,3 +24,15 @@ JAX_PLATFORMS=cpu python -m pytest -x -q "$@"
 
 # serving acceptance gates (throughput >= 2x, prefill TTFT >= 4x at K=4)
 JAX_PLATFORMS=cpu python benchmarks/serving_bench.py --fast
+
+# mesh stage: rerun the serving tests with a forced 2-device CPU host so
+# the shard_map member-sharding path executes with REAL collectives
+# (single-device runs above exercise it degraded to a 1x1 mesh), then
+# gate per-device cache bytes (<= single-device / member-axis size)
+JAX_PLATFORMS=cpu XLA_FLAGS="--xla_force_host_platform_device_count=2" \
+    python -m pytest -x -q tests/test_serving_mesh.py tests/test_serving.py
+JAX_PLATFORMS=cpu XLA_FLAGS="--xla_force_host_platform_device_count=2" \
+    python benchmarks/serving_bench.py --fast --mesh 2x1 --mesh-only
+
+# docs must not reference symbols that no longer exist
+python scripts/check_docs.py

@@ -16,7 +16,7 @@ ensemble-axis dim on top of that.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any, Optional, Tuple
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -227,6 +227,80 @@ def shard_map(f, mesh, in_specs, out_specs, axis_names=None,
         else frozenset(mesh.axis_names) - set(axis_names)
     return sm04(f, mesh, in_specs=in_specs, out_specs=out_specs,
                 check_rep=check_vma, auto=auto)
+
+
+# ---------------------------------------------------------------------------
+# serving member-axis placement
+# ---------------------------------------------------------------------------
+# The serving engine's unit of parallelism is the ensemble MEMBER (paper
+# Eqn 6: the global model is K independent members, so the member axis is
+# embarrassingly parallel at test time).  Stacked params, the KV cache
+# pool, and the quorum vector all carry a leading (K,) axis; these
+# helpers place that axis over the "member" mesh axis and leave
+# everything else replicated ("data" is reserved for slot/batch
+# sharding, a ROADMAP follow-up).
+
+MEMBER_AXIS = "member"
+DATA_AXIS = "data"
+
+
+def member_pspec(ndim: int, axis: str = MEMBER_AXIS) -> P:
+    """PartitionSpec sharding a leaf's leading member axis, rest replicated."""
+    return P(axis, *([None] * (ndim - 1)))
+
+
+def member_pspecs(tree: Any, axis: str = MEMBER_AXIS) -> Any:
+    """Pytree of PartitionSpecs matching `tree`: every leaf's leading
+    (K,) member axis shards over `axis`, all other dims replicate.
+
+    This is the serving twin of `make_param_pspecs(..., ensemble=True)`:
+    at serving time members never communicate during the forward pass
+    (only fused log-probs cross devices, see core.ensemble
+    .ensemble_log_probs_psum), so intra-member TP/FSDP axes are left
+    unsharded and the member axis carries all the parallelism.
+    """
+    return jax.tree.map(lambda x: member_pspec(x.ndim, axis), tree)
+
+
+def replicated_pspecs(tree: Any) -> Any:
+    """Pytree of all-None PartitionSpecs (fully replicated leaves)."""
+    return jax.tree.map(lambda x: P(*([None] * x.ndim)), tree)
+
+
+def local_mesh(member: int = 1, data: int = 1,
+               axis_names: Tuple[str, str] = (MEMBER_AXIS, DATA_AXIS)):
+    """Build a (member, data) mesh from this process's devices,
+    degrading gracefully to whatever is available.
+
+    Unlike `make_mesh` (which insists the grid uses every device), this
+    takes the FIRST member*data local devices — and when the host has
+    fewer, clamps each axis down (member first) so the same shard_map
+    code path still runs: a 1-CPU CI box asking for `local_mesh(2, 1)`
+    gets a 1x1 mesh and exercises the exact program the 2-device run
+    compiles, psum collectives included.  Force N host devices on CPU
+    with XLA_FLAGS=--xla_force_host_platform_device_count=N (set before
+    jax initializes).
+    """
+    import numpy as np
+    devs = jax.devices()
+    member = max(1, min(int(member), len(devs)))
+    data = max(1, min(int(data), len(devs) // member))
+    grid = np.asarray(devs[: member * data]).reshape(member, data)
+    return jax.sharding.Mesh(grid, axis_names)
+
+
+def parse_mesh_arg(arg: str):
+    """'MxD' CLI string -> local_mesh(M, D); '' / '1x1' -> None (the
+    unsharded single-device reference path)."""
+    if not arg or arg.lower() in ("1x1", "none", "off"):
+        return None
+    try:
+        m, d = (int(x) for x in arg.lower().split("x"))
+    except ValueError:
+        raise ValueError(f"--mesh wants 'MxD' (e.g. 2x1), got {arg!r}")
+    if m * d <= 1:
+        return None
+    return local_mesh(m, d)
 
 
 def axis_size(axis: str) -> int:

@@ -83,6 +83,40 @@ def ensemble_log_probs(member_logits: jax.Array,
     return jax.nn.logsumexp(lp + logw, axis=0)
 
 
+def ensemble_log_probs_psum(member_logits: jax.Array,
+                            weights: Optional[jax.Array] = None,
+                            axis_name: str = "member") -> jax.Array:
+    """Cross-device Eqn-6 fusion for a member-sharded ensemble.
+
+    The shard_map twin of `ensemble_log_probs`: `member_logits` is the
+    LOCAL (K_local, ..., V) shard of the member axis and `weights` the
+    matching local slice of the global (K,) quorum vector.  Each device
+    fuses its own members in log space, then the shards combine with one
+    pmax + one psum over `axis_name` — so only fused (..., V) partials
+    cross devices, never K full distributions:
+
+        log sum_k w_k softmax(z_k)
+          = m + log( psum_d sum_{k in d} exp(log w_k + log p_k - m) ),
+        m = pmax_d max_{k in d} (log w_k + log p_k)
+
+    Weight normalization is global (psum of the local weight mass), so
+    quorum semantics — zero-weight members contribute exactly nothing,
+    survivors renormalize — match the single-device path.  On a 1-device
+    mesh the collectives are identity and this reduces to the
+    logsumexp reference bit-for-bit (tested in tests/test_serving_mesh).
+    """
+    K = member_logits.shape[0]
+    w = jnp.ones((K,), jnp.float32) if weights is None else weights
+    w_sum = jax.lax.psum(w.sum(), axis_name)
+    w = w / jnp.maximum(w_sum, 1e-9)
+    logw = jnp.log(jnp.maximum(w, 1e-30)).reshape(
+        (K,) + (1,) * (member_logits.ndim - 1))
+    lp = member_log_probs(member_logits) + logw
+    m = jax.lax.pmax(lp.max(axis=0), axis_name)
+    s = jax.lax.psum(jnp.exp(lp - m[None]).sum(axis=0), axis_name)
+    return m + jnp.log(s)
+
+
 def ensemble_nll(member_logits: jax.Array, labels: jax.Array,
                  weights: Optional[jax.Array] = None) -> jax.Array:
     """Cross-entropy of the ensemble distribution against int labels."""

@@ -17,6 +17,13 @@ percentiles):
 
 --quorum "1,1,0,1" drops member 2 (straggler policy): the fused
 distribution renormalizes over the survivors, no recompile.
+
+--mesh MxD shards the member axis over M devices (x D data devices,
+reserved) and runs every kernel under shard_map — per-device cache and
+FLOPs scale with K/M.  On CPU, force host devices first:
+  XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+  python -m repro.launch.serve --arch gemma3-1b --reduced --members 4 \
+      --ensemble --mesh 2x1
 """
 from __future__ import annotations
 
@@ -50,6 +57,10 @@ def main():
     ap.add_argument("--eos-id", type=int, default=-1)
     ap.add_argument("--quorum", default="",
                     help="comma 0/1 per member, e.g. 1,1,0,1")
+    ap.add_argument("--mesh", default="",
+                    help="'MxD' member x data device grid (e.g. 2x1): "
+                         "shard the member axis over M devices; empty "
+                         "or 1x1 keeps the single-device path")
     ap.add_argument("--continuous", action="store_true",
                     help="continuous batching under synthetic load")
     ap.add_argument("--requests", type=int, default=32,
@@ -57,6 +68,7 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    from repro.common import sharding as shd
     from repro.configs import registry
     from repro.models import transformer as tf
     from repro.serving import EnsembleEngine, client
@@ -69,15 +81,19 @@ def main():
               if args.quorum else None)
     if quorum is not None and len(quorum) != K:
         raise SystemExit(f"--quorum needs {K} entries, got {len(quorum)}")
+    mesh = shd.parse_mesh_arg(args.mesh)
 
     engine = EnsembleEngine(
         cfg, params, n_slots=args.batch, max_prompt=args.prompt_len,
         max_out=args.steps, prefill_chunk=args.prefill_chunk,
         temperature=args.temperature, top_k=args.top_k,
-        eos_id=args.eos_id, quorum=quorum, seed=args.seed)
+        eos_id=args.eos_id, quorum=quorum, seed=args.seed, mesh=mesh)
+    place = ("single-device" if mesh is None else
+             f"mesh {dict(mesh.shape)} over {mesh.devices.size} devices, "
+             f"{K // engine.member_shards} members/device")
     print(f"engine: K={K} members, {args.batch} slots, "
-          f"prefill chunk {engine.prefill_chunk}, "
-          f"cache pool {engine.cache_bytes() / 2**20:.1f} MiB")
+          f"prefill chunk {engine.prefill_chunk}, {place}, "
+          f"cache pool {engine.cache_bytes() / 2**20:.1f} MiB/device")
 
     if args.continuous:
         reqs = client.make_requests(

@@ -365,6 +365,13 @@ def init_slot_cache(cfg: ModelConfig, batch: int, max_seq: int,
     out by the position bookkeeping, so no reallocation and no zeroing of
     the K/V planes is required — recurrent SSM state DOES need zeroing,
     which repro.serving.kv_cache.reset_slots handles).
+
+    The serving engine stacks one such cache per ensemble member into a
+    leading-(K,) pool (repro.serving.kv_cache.init_pool) and, on a
+    ("member", "data") mesh, shards that axis over "member".  The hooks
+    below never see the member axis: the engine vmaps them over however
+    many members are LOCAL (all K unsharded; K/M inside a shard_map
+    body), so a sharded cache needs no changes here.
     """
     cache = init_cache(cfg, batch, max_seq, enc_len)
     cache["idx"] = jnp.zeros((batch,), jnp.int32)
@@ -391,6 +398,9 @@ def decode_step_slots(params, cfg: ModelConfig, cache: dict,
     -> (logits (B, 1, V), cache).  Implemented as a row-vmap of the
     scalar-position decode_step, so the two paths cannot drift: a batch
     where all rows share one position is bitwise the decode_step batch.
+    Placement-oblivious — the serving engine calls this per member,
+    vmapped over the full (K,) stack or over a member shard's local
+    slice; either way each call sees ONE member's params and cache.
     """
     axes = slot_cache_axes(cache)
 
@@ -507,7 +517,10 @@ def prefill_slots(params, cfg: ModelConfig, cache: dict, tokens: jax.Array,
     -> (last_logits (B, V), cache).  Implemented as a row-vmap of the
     scalar prefill_step (the decode_step_slots trick), so slots with
     n_tok == 0 are bit-exact no-ops and mixed prefill/idle batches reuse
-    one compiled program.
+    one compiled program.  Like decode_step_slots, member-placement-
+    oblivious: the engine hands it one member's cache row at a time,
+    whether that member lives on this device or is one of a shard's
+    local K/M.
     """
     axes = slot_cache_axes(cache)
 

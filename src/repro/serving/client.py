@@ -60,13 +60,13 @@ def build_report(completions: Dict[int, Completion], wall: float,
         "latency_p50_ms": percentile(lat, 50) * 1e3,
         "latency_p95_ms": percentile(lat, 95) * 1e3,
         "latency_p99_ms": percentile(lat, 99) * 1e3,
-        "cache_mb": engine.cache_bytes() / 2**20,
+        "cache_mb": engine.cache_bytes() / 2**20,  # per-device
     }
 
 
 def print_report(r: dict):
     print(f"served {r['n_requests']} requests | K={r['members']} members, "
-          f"{r['slots']} slots, cache pool {r['cache_mb']:.1f} MiB")
+          f"{r['slots']} slots, cache pool {r['cache_mb']:.1f} MiB/device")
     print(f"  {r['gen_tokens']} tokens in {r['wall_s']:.2f}s "
           f"= {r['tok_s']:.1f} tok/s")
     print(f"  ttft    p50 {r['ttft_p50_ms']:.1f} ms   "

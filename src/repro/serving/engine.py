@@ -31,6 +31,25 @@ it replaces:
     original one-token-per-step teacher-forcing path as a reference
     baseline.
 
+Multi-device (mesh=...): the member axis is the unit of parallelism.
+The paper's global model is K INDEPENDENT members (Eqn 6), so at
+serving time nothing crosses members until the final fusion — sharding
+the leading (K,) axis of the stacked params, the cache pool, and the
+quorum vector over the "member" axis of a ("member", "data") mesh
+(common.sharding.local_mesh) makes per-device cache bytes and FLOPs
+scale with K/M instead of K.  Every kernel above then runs under
+shard_map: each device vmaps only its local members and the Eqn-6
+fusion becomes a psum-style cross-member reduction
+(core.ensemble.ensemble_log_probs_psum) — one pmax + one psum of fused
+(B, V) partials is ALL the inter-device traffic per step; K full
+distributions never move.  Slot state and sampling are replicated, the
+quorum stays a traced argument (straggler drop still recompiles and
+reshards nothing, mirroring ring_relabel's local-worker placement
+story), and mesh=None keeps the original single-jit path bit-identical
+as the reference baseline.  A 1-device local_mesh runs the same
+shard_map program (collectives become identity), so CPU CI exercises
+the mesh code path without multiple devices.
+
 Every decode in the repo (launch/serve.py CLI, examples, benchmarks,
 the scheduler) goes through EnsembleEngine.prefill/step — one path.
 """
@@ -41,7 +60,9 @@ from typing import NamedTuple, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.common import sharding as shd
 from repro.common.types import ModelConfig
 from repro.core import ensemble as ens
 from repro.models import transformer as tf
@@ -70,16 +91,39 @@ class EnsembleEngine:
     `jax.vmap(lambda k: tf.init(k, cfg))(keys)` produces and training
     checkpoints store).  K = 1 serves a single/compressed model
     (EC-DNN_L) through the identical path.
+
+    mesh: None (default) runs the single-device reference path — one
+    jit, vmap over all K members.  A ("member", "data") mesh from
+    `common.sharding.local_mesh` shards the leading (K,) member axis of
+    params / cache pool / quorum over "member" (K must divide evenly)
+    and compiles every kernel under shard_map: each device holds and
+    scores K/M members and only fused log-prob partials cross devices
+    (`core.ensemble.ensemble_log_probs_psum`).  Slot state replicates,
+    so the host API is placement-oblivious — same calls, same shapes,
+    same results (token-exact vs mesh=None at float32).
     """
 
     def __init__(self, cfg: ModelConfig, stacked_params, *,
                  n_slots: int = 8, max_prompt: int = 64, max_out: int = 64,
                  prefill_chunk: int = 32, temperature: float = 0.0,
                  top_k: int = 0, eos_id: int = -1,
-                 quorum: Optional[Sequence[float]] = None, seed: int = 0):
+                 quorum: Optional[Sequence[float]] = None, seed: int = 0,
+                 mesh=None):
         self.cfg = cfg
-        self.params = stacked_params
         self.n_members = jax.tree.leaves(stacked_params)[0].shape[0]
+        self.mesh = mesh
+        self.member_shards = (1 if mesh is None
+                              else mesh.shape[shd.MEMBER_AXIS])
+        if self.n_members % self.member_shards:
+            raise ValueError(
+                f"mesh member axis {self.member_shards} does not divide "
+                f"K={self.n_members} members")
+        if mesh is None:
+            self.params = stacked_params
+        else:
+            self.params = jax.device_put(
+                stacked_params,
+                shd.make_shardings(mesh, shd.member_pspecs(stacked_params)))
         self.n_slots = n_slots
         self.max_prompt = max_prompt
         self.max_out = max_out
@@ -94,18 +138,57 @@ class EnsembleEngine:
                        if quorum is None
                        else jnp.asarray(quorum, jnp.float32))
         self.cache = kv_cache.init_pool(cfg, self.n_members, n_slots,
-                                        self.max_seq)
+                                        self.max_seq, mesh=mesh)
         if cfg.enc_dec:
             self.cache["enc"] = self._encode_stub(n_slots)
         self.state = self._blank_state(seed)
         self.steps_run = 0
         self.prefills_run = 0
+        if mesh is not None:
+            self.quorum = jax.device_put(
+                self.quorum, NamedSharding(mesh, P(shd.MEMBER_AXIS)))
         # cache + state are donated: the pool is updated in place across
-        # the server's lifetime, never reallocated.
-        self._step = jax.jit(self._step_impl, donate_argnums=(1, 2))
-        self._prefill = jax.jit(self._prefill_impl, donate_argnums=(1, 2))
-        self._update = jax.jit(self._update_impl, donate_argnums=(0, 1))
-        self._score = jax.jit(self._score_impl, donate_argnums=(1,))
+        # the server's lifetime, never reallocated.  Under a mesh every
+        # kernel wraps in shard_map first (member axis manual, slot
+        # state replicated); in/out shardings match, so donation still
+        # reuses the pool's buffers shard by shard.
+        pspec, cspec = (shd.member_pspecs(self.params),
+                        shd.member_pspecs(self.cache))
+        sspec = shd.replicated_pspecs(self.state)
+        q, s = P(shd.MEMBER_AXIS), P()
+        self._step = self._compile(
+            self._step_impl, donate=(1, 2),
+            in_specs=(pspec, cspec, sspec, q),
+            out_specs=(sspec, cspec))
+        self._prefill = self._compile(
+            self._prefill_impl, donate=(1, 2),
+            in_specs=(pspec, cspec, sspec, q, s),
+            out_specs=(sspec, cspec))
+        self._update = self._compile(
+            self._update_impl, donate=(0, 1),
+            in_specs=(cspec, sspec, s, s, s, s, s),
+            out_specs=(sspec, cspec))
+        self._score = self._compile(
+            self._score_impl, donate=(1,),
+            in_specs=(pspec, cspec, s, s, q),
+            out_specs=(q, s, cspec))
+
+    def _compile(self, fn, donate, in_specs, out_specs):
+        """jit a kernel; under a mesh, wrap it in shard_map first.
+
+        Specs are rank-correct pytrees per argument: the member axis of
+        params/cache/quorum is manual-sharded, slot state and scalars
+        replicate (shorter specs pad with None, so P() on a vector arg
+        means fully replicated).  check_vma stays off: outputs declared
+        replicated ARE replicated by construction — every cross-member
+        quantity goes through a psum/pmax before it reaches them.
+        """
+        if self.mesh is None:
+            return jax.jit(fn, donate_argnums=donate)
+        return jax.jit(
+            shd.shard_map(fn, self.mesh, in_specs=in_specs,
+                          out_specs=out_specs),
+            donate_argnums=donate)
 
     # -- construction -------------------------------------------------------
 
@@ -123,23 +206,46 @@ class EnsembleEngine:
 
         Audio/VLM frontends are stubs repo-wide (DESIGN §4); per-request
         encoder state is a serving follow-up (ROADMAP).  Computed once —
-        the decode loop only reads it.
+        the decode loop only reads it.  Under a mesh the (K, B, S, d)
+        result is pinned member-sharded like the rest of the pool.
         """
         from repro.models.layers import dtype_of
         enc_in = jnp.zeros((batch, self.cfg.enc_max_frames,
                             self.cfg.d_model), dtype_of(self.cfg))
-        return jax.jit(jax.vmap(
+        enc = jax.jit(jax.vmap(
             lambda p: tf.encode(p, self.cfg, enc_in)))(self.params)
+        if self.mesh is not None:
+            enc = jax.device_put(
+                enc, NamedSharding(self.mesh, shd.member_pspec(enc.ndim)))
+        return enc
 
     # -- jitted kernels -----------------------------------------------------
+    # Each kernel body is placement-oblivious: it sees the full (K,) axis
+    # on the reference path and the local (K/M,) shard inside shard_map;
+    # the only cross-member op is _fuse, which switches to the psum-style
+    # reduction on the mesh path.
 
     def _member_logits(self, params, cache, tok) -> Tuple[jax.Array, dict]:
-        """All members score the step in one program. -> ((K,B,V), cache)."""
+        """All (local) members score the step in one program.
+        -> ((K, B, V), cache)."""
         def one(p, c):
             return tf.decode_step_slots(p, self.cfg, c, tok[:, None])
 
         logits, cache = jax.vmap(one)(params, cache)  # (K, B, 1, V)
         return logits[:, :, 0], cache
+
+    def _fuse(self, member_logits, quorum) -> jax.Array:
+        """Eqn-6 log-space fusion under the traced quorum vector.
+
+        Reference path: logsumexp over the full member axis.  Mesh path:
+        each shard fuses its local members, then one pmax + one psum
+        over "member" combine the shards — only fused (..., V) partials
+        cross devices, never K distributions.
+        """
+        if self.mesh is None:
+            return ens.ensemble_log_probs(member_logits, weights=quorum)
+        return ens.ensemble_log_probs_psum(member_logits, quorum,
+                                           axis_name=shd.MEMBER_AXIS)
 
     def _step_impl(self, params, cache, st: SlotState, quorum):
         B = st.tok.shape[0]
@@ -153,7 +259,7 @@ class EnsembleEngine:
         old_cache = cache
         logits, cache = self._member_logits(params, cache, st.tok)
         cache = kv_cache.keep_frozen(cache, old_cache, adv)
-        logp = ens.ensemble_log_probs(logits, weights=quorum)  # (B, V)
+        logp = self._fuse(logits, quorum)  # (B, V)
         key, sub = jax.random.split(st.key)
         sampled = sampling.sample(sub, logp, self.temperature, self.top_k)
 
@@ -225,7 +331,7 @@ class EnsembleEngine:
 
         logits, row = jax.vmap(one)(params, row)  # (K, 1, V)
         cache = kv_cache.write_slot_row(cache, row, slot)
-        logp = ens.ensemble_log_probs(logits[:, 0], weights=quorum)  # (V,)
+        logp = self._fuse(logits[:, 0], quorum)  # (V,)
         key, sub = jax.random.split(st.key)
         sampled = sampling.sample(sub, logp, self.temperature, self.top_k)
 
@@ -248,13 +354,18 @@ class EnsembleEngine:
             out=out, key=key), cache
 
     def _score_impl(self, params, cache, tok_t, gold_t, quorum):
-        """Teacher-forced scoring step: per-member + ensemble NLL."""
+        """Teacher-forced scoring step: per-member + ensemble NLL.
+
+        m_nll is laid out along the member axis ((K/M,) per shard on the
+        mesh path, concatenating back to the global (K,)); e_nll comes
+        out of the fused distribution, so it is replicated.
+        """
         logits, cache = self._member_logits(params, cache, tok_t)  # (K,B,V)
         lp = ens.member_log_probs(logits)
         gold = jnp.broadcast_to(gold_t[None], logits.shape[:-1])
         m_nll = -jnp.take_along_axis(lp, gold[..., None],
                                      axis=-1)[..., 0].mean(-1)  # (K,)
-        e_lp = ens.ensemble_log_probs(logits, weights=quorum)
+        e_lp = self._fuse(logits, quorum)
         e_nll = -jnp.take_along_axis(e_lp, gold_t[:, None],
                                      axis=1)[:, 0].mean()
         return m_nll, e_nll, cache
@@ -275,7 +386,15 @@ class EnsembleEngine:
         return t
 
     def step(self) -> SlotState:
-        """Advance every slot one token (one compiled program)."""
+        """Advance every slot one token (one compiled program).
+
+        All K members score the step — vmapped in one jit on the
+        reference path, K/M members per device under shard_map on the
+        mesh path (fused log-probs are the only cross-device traffic).
+        Returns the replicated SlotState; the cache pool (leading (K,)
+        member axis, sharded over "member" when a mesh is set) advances
+        in place via donation.
+        """
         self.state, self.cache = self._step(self.params, self.cache,
                                             self.state, self.quorum)
         self.steps_run += 1
@@ -310,7 +429,9 @@ class EnsembleEngine:
 
         admits: (slot, prompt_tokens, max_new) triples.  Fixed-shape
         masked updates, so any admission pattern reuses one compiled
-        program.
+        program.  Admission is a slot-axis operation: it touches every
+        member's row of the (K, ...) pool identically, so the mesh path
+        runs it shard-local with zero communication.
         """
         B, P = self.n_slots, self.max_prompt
 
@@ -346,7 +467,10 @@ class EnsembleEngine:
 
         The whole run is dispatch-only (no host sync inside the loop);
         use scheduler.Scheduler for continuous admission instead.
-        Returns one int32 array of generated tokens per prompt.
+        Returns one int32 array of generated tokens per prompt —
+        identical whatever the engine's placement (mesh or not) and,
+        with prefill_chunk=0, via the per-token teacher-forcing
+        reference path every other configuration is tested against.
         """
         if len(prompts) == 0:
             return []
@@ -374,12 +498,17 @@ class EnsembleEngine:
         """Teacher-forced NLL of a (B, T) batch: (per-member (K,), ensemble).
 
         The serving-side face of the Jensen guarantee: the returned
-        ensemble NLL is <= the mean member NLL for any members.
-        Uses a private cache pool; slot state is untouched.
+        ensemble NLL is <= the mean member NLL for any members — and
+        the quorum-weighted subset keeps the bound, so it holds under
+        straggler drop too.  Uses a private cache pool (member-sharded
+        like the serving pool when a mesh is set); slot state is
+        untouched.  The returned per-member vector is always the global
+        (K,), whatever the placement.
         """
         tokens = jnp.asarray(tokens, jnp.int32)
         B, T = tokens.shape
-        cache = kv_cache.init_pool(self.cfg, self.n_members, B, T)
+        cache = kv_cache.init_pool(self.cfg, self.n_members, B, T,
+                                   mesh=self.mesh)
         if self.cfg.enc_dec:
             cache["enc"] = self._encode_stub(B)
         m_tot = jnp.zeros((self.n_members,), jnp.float32)
@@ -391,8 +520,29 @@ class EnsembleEngine:
         return m_tot / T, e_tot / T
 
     def set_quorum(self, mask: Sequence[float]):
-        """0/1 liveness per member; renormalized on-device, no recompile."""
-        self.quorum = ens.quorum_weights(jnp.asarray(mask, jnp.float32))
+        """0/1 liveness per member; renormalized on-device, no recompile.
+
+        The quorum is a traced (K,) argument of every kernel, so
+        dropping a straggler mid-stream recompiles NOTHING and — on the
+        mesh path, where the vector is member-sharded like the params —
+        reshards nothing either: a dead member's shard keeps computing,
+        its vote just carries zero weight in the fused reduction.
+        """
+        q = ens.quorum_weights(jnp.asarray(mask, jnp.float32))
+        if q.shape != (self.n_members,):
+            raise ValueError(f"quorum mask wants {self.n_members} entries, "
+                             f"got {q.shape}")
+        if self.mesh is not None:
+            q = jax.device_put(
+                q, NamedSharding(self.mesh, P(shd.MEMBER_AXIS)))
+        self.quorum = q
 
     def cache_bytes(self) -> int:
-        return kv_cache.pool_bytes(self.cache)
+        """PER-DEVICE bytes of the cache pool (capacity telemetry).
+
+        Under a member-sharded pool each device holds K/M members'
+        planes, so this reports the global figure divided by the mesh
+        member-axis size — the number a chip actually budgets.  On the
+        unsharded reference path per-device == global.
+        """
+        return kv_cache.pool_bytes(self.cache, per_device=True)

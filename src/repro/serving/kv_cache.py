@@ -14,27 +14,50 @@ recurrent planes, and the next request overwrites the attention KV
 in-place as it decodes (stale entries are masked by position bookkeeping,
 see models/attention.gqa_decode).  The engine donates the pool into its
 jitted step so XLA updates it in place.
+
+Placement: on a ("member", "data") mesh (common.sharding.local_mesh)
+the leading (K,) axis shards over "member" — each device holds only its
+K/M members' caches, which is where the engine's per-device memory win
+comes from — and the slot axis replicates ("data" is reserved for slot
+sharding, a ROADMAP follow-up).  Every helper below is placement-
+oblivious: it only touches per-member-independent dims, so the same
+code runs unsharded or inside a shard_map body on the local shard.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.common import sharding as shd
 from repro.common.types import ModelConfig
 from repro.models import transformer as tf
 
 
 def init_pool(cfg: ModelConfig, n_members: int, n_slots: int,
-              max_seq: int) -> dict:
+              max_seq: int, mesh=None) -> dict:
     """Allocate the (K members) x (B slots) cache pool.
+
+    With `mesh` (a ("member", "data") mesh) every leaf is placed with
+    its leading member axis sharded over "member" and everything else
+    replicated; n_members must divide evenly.  mesh=None allocates on
+    the default device (the single-device reference path).
 
     enc-dec archs get a zeroed per-member encoder-output plane; the
     engine fills it once at construction (audio frontends are stubs,
     DESIGN §4 — per-request encoder state is a serving follow-up).
     """
     base = tf.init_slot_cache(cfg, n_slots, max_seq)
-    return jax.tree.map(
+    pool = jax.tree.map(
         lambda x: jnp.broadcast_to(x, (n_members,) + x.shape), base)
+    if mesh is not None:
+        pool = shard_pool(pool, mesh)
+    return pool
+
+
+def shard_pool(pool: dict, mesh) -> dict:
+    """Place a pool (or any leading-(K,) pytree) on a member mesh."""
+    return jax.device_put(
+        pool, shd.make_shardings(mesh, shd.member_pspecs(pool)))
 
 
 # positional cache planes: stale entries are masked by position
@@ -133,6 +156,26 @@ def slot_positions(pool: dict) -> jax.Array:
     return pool["idx"][0]
 
 
-def pool_bytes(pool: dict) -> int:
-    """Total bytes held by the pool (capacity-planning telemetry)."""
-    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(pool))
+def pool_bytes(pool: dict, per_device: bool = True) -> int:
+    """Bytes held by the pool (capacity-planning telemetry).
+
+    per_device=True (the default) reports what ONE device actually
+    holds: under a member-sharded pool each device stores only its
+    K/M members' planes, so the per-device figure is the global one
+    divided by the member-axis size (modulo replicated leaves).  That
+    is the number capacity planning wants — reporting global bytes for
+    a sharded pool would overstate every chip's footprint M-fold.
+    per_device=False sums the global (logical) allocation instead.
+    Unsharded pools return the same value either way.
+    """
+    total = 0
+    for x in jax.tree.leaves(pool):
+        shape = x.shape
+        sh = getattr(x, "sharding", None)
+        if per_device and sh is not None and hasattr(sh, "shard_shape"):
+            shape = sh.shard_shape(x.shape)
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * x.dtype.itemsize
+    return total

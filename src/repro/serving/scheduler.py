@@ -19,6 +19,13 @@ decode kernels each stay a single compiled program.  Admission is
 FIFO; slots are filled greedily; the prefill budget is spent in FIFO
 admission order.  With engines built prefill_chunk=0 the scheduler
 degrades to the per-token teacher-forcing path unchanged.
+
+The scheduler is placement-oblivious: slot state is replicated on
+every mesh device, so admission, harvest, and the prefill budget work
+identically over a single-device engine and a member-sharded
+(mesh=...) one — the member axis is the engine's concern, never the
+queue's.  Straggler handling composes the same way: engine.set_quorum
+drops a member mid-stream with no recompile and no rescheduling.
 """
 from __future__ import annotations
 
@@ -73,6 +80,12 @@ class _SlotMeta:
 
 class Scheduler:
     """FIFO continuous-batching scheduler over one EnsembleEngine.
+
+    submit() queues a request (validated against the engine's budgets
+    at the door); run() drives admit -> decode -> prefill -> harvest
+    until the queue drains, returning {rid: Completion}.  Works
+    unchanged over any engine placement (single-device or mesh) and
+    any prefill_chunk, including the 0 reference baseline.
 
     prefill_budget caps how many prompt tokens may enter prefill
     programs per loop iteration (default: 2 chunks).  One chunk is
