@@ -1,6 +1,7 @@
-"""Serving throughput + TTFT + mesh placement: engine vs baselines.
+"""Serving throughput + TTFT + mesh placement + paged cache: engine vs
+baselines.
 
-Three gates:
+Four gates:
 
   - throughput (ISSUE 1): the vmapped single-program engine vs the
     seed's K-jit-calls-per-token Python loop (kept alive below as the
@@ -17,12 +18,20 @@ Three gates:
     divides exactly), with tokens matching the single-device engine.
     Per-device tok/s is reported for the record — on a forced-host-CPU
     mesh the "devices" share the same silicon, so no speedup gate.
+  - paged cache (ISSUE 4, --paged): (a) the paged engine (paged=True)
+    must emit token-exact output vs the contiguous engine at K=4 on a
+    float32 config, and (b) at EQUAL pool bytes, with short requests
+    against a max_seq-sized budget, the paged scheduler must admit
+    >= 2x the concurrent requests the contiguous engine's slot count
+    allows — the pool serves tokens in flight, not slots x max_seq.
 
   PYTHONPATH=src python benchmarks/serving_bench.py [--fast]
   # mesh stage on a forced 2-device CPU host:
   XLA_FLAGS=--xla_force_host_platform_device_count=2 \
       PYTHONPATH=src python benchmarks/serving_bench.py \
       --fast --mesh 2x1 --mesh-only
+  # paged stage alone:
+  PYTHONPATH=src python benchmarks/serving_bench.py --paged --paged-only
 """
 from __future__ import annotations
 
@@ -37,7 +46,7 @@ from repro.common import sharding as shd
 from repro.configs import registry
 from repro.core import ensemble as ens
 from repro.models import transformer as tf
-from repro.serving import EnsembleEngine
+from repro.serving import EnsembleEngine, client
 
 
 def python_loop_decode(cfg, params, K, prompt, steps):
@@ -183,6 +192,72 @@ def bench_mesh(cfg, mesh_arg, K, batch, plen, steps, repeats, seed=0):
     return gate, lines
 
 
+def bench_paged(K=4, seed=0):
+    """Paged pool acceptance: token-exact vs contiguous, then >= 2x
+    admissible concurrency at equal pool bytes.  -> (ok, lines)."""
+    from repro.serving import Scheduler
+    lines = []
+
+    # (a) token-exact: gemma3's 5:1 ring+paged layer mix at K=4, f32
+    # (greedy argmax must match bit for bit through both prefill paths)
+    cfg = registry.get_config("gemma3-1b", reduced=True).with_(
+        dtype="float32")
+    params = jax.vmap(lambda k: tf.init(k, cfg))(
+        jax.random.split(jax.random.PRNGKey(seed), K))
+    prompts = [np.arange(1, 12) % cfg.vocab_size, np.arange(2, 5),
+               np.arange(3, 10), np.arange(1, 7)]
+    kw = dict(n_slots=4, max_prompt=12, max_out=8, prefill_chunk=4)
+    ref = EnsembleEngine(cfg, params, **kw).generate(prompts, max_new=8)
+    got = EnsembleEngine(cfg, params, paged=True, page_size=4,
+                         **kw).generate(prompts, max_new=8)
+    exact = all(np.array_equal(np.asarray(a), np.asarray(b))
+                for a, b in zip(got, ref))
+    lines.append(f"paged K={K} gemma3 f32: tokens "
+                 f"{'match (exact)' if exact else 'MISMATCH'} vs "
+                 f"contiguous engine")
+
+    # (b) admissible concurrency at equal pool bytes: short requests,
+    # max_seq >> typical length.  The contiguous engine reserves a full
+    # max_seq row per slot, so pool bytes buy exactly n_slots requests;
+    # the paged engine spends the SAME bytes on pages and admits by
+    # tokens in flight.
+    cfg2 = registry.get_config("deepseek-7b", reduced=True).with_(
+        dtype="float32")  # pure full attention: every plane is paged
+    params2 = jax.vmap(lambda k: tf.init(k, cfg2))(
+        jax.random.split(jax.random.PRNGKey(seed), K))
+    page, contig_slots = 16, 4
+    size = dict(max_prompt=96, max_out=32)          # max_seq = 128
+    contig = EnsembleEngine(cfg2, params2, n_slots=contig_slots,
+                            prefill_chunk=16, **size)
+    pages_eq = contig_slots * ((size["max_prompt"] + size["max_out"])
+                               // page)             # equal plane bytes
+    paged = EnsembleEngine(cfg2, params2, n_slots=4 * contig_slots,
+                           prefill_chunk=16, paged=True, page_size=page,
+                           n_pages=pages_eq, **size)
+    b_c, b_p = contig.cache_bytes(), paged.cache_bytes()
+    reqs = client.make_requests(24, cfg2.vocab_size, prompt_len=(4, 8),
+                                max_new=(4, 8), seed=seed)
+    s_c, s_p = Scheduler(contig), Scheduler(paged)
+    rid_c = [s_c.submit(t, m) for t, m in reqs]
+    rid_p = [s_p.submit(t, m) for t, m in reqs]
+    comp_c, comp_p = s_c.run(), s_p.run()
+    match = all(np.array_equal(comp_c[a].tokens, comp_p[b].tokens)
+                for a, b in zip(rid_c, rid_p))
+    conc = s_p.peak_in_flight / max(s_c.peak_in_flight, 1)
+    lines.append(
+        f"paged admission: {b_c / 2**20:.2f} MiB contiguous pool = "
+        f"{contig_slots} slots x max_seq {contig.max_seq} -> "
+        f"{b_p / 2**20:.2f} MiB paged pool ({pages_eq} pages x {page}), "
+        f"short requests: {s_c.peak_in_flight} -> {s_p.peak_in_flight} "
+        f"concurrent ({conc:.2f}x), {s_p.preemptions} preemptions, "
+        f"tokens {'match' if match else 'MISMATCH'}")
+    gate = (exact and match and b_p <= b_c * 1.02
+            and s_p.peak_in_flight >= 2 * s_c.peak_in_flight)
+    lines.append(f"paged acceptance (token-exact, equal bytes, >= 2x "
+                 f"concurrency): {'PASS' if gate else 'FAIL'}")
+    return gate, lines
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="gemma3-1b")
@@ -202,12 +277,22 @@ def main(argv=None):
     ap.add_argument("--mesh-only", action="store_true",
                     help="skip the throughput/TTFT gates (CI runs them "
                          "in the single-device stage already)")
+    ap.add_argument("--paged", action="store_true",
+                    help="also gate the paged KV pool: token-exact vs "
+                         "contiguous + >= 2x admissible concurrency at "
+                         "equal pool bytes")
+    ap.add_argument("--paged-only", action="store_true",
+                    help="run only the paged stage")
     args = ap.parse_args(argv)
     if args.prefill_chunk <= 0:
         ap.error("--prefill-chunk must be >= 1: the TTFT gate measures "
                  "chunked prefill against the per-token baseline")
     if args.mesh_only and not args.mesh:
         ap.error("--mesh-only needs --mesh MxD")
+    if args.paged_only:
+        ok, lines = bench_paged()
+        print("\n".join(lines))
+        return 0 if ok else 1
     if args.fast:
         args.members, args.steps, args.repeats = [1, 4], 8, 1
         args.ttft_prompt = 32
@@ -256,6 +341,11 @@ def main(argv=None):
                                     args.repeats)
         print("\n".join(lines))
         ok &= mesh_ok
+
+    if args.paged:
+        paged_ok, lines = bench_paged()
+        print("\n".join(lines))
+        ok &= paged_ok
     return 0 if ok else 1
 
 

@@ -35,18 +35,29 @@ from repro.serving import EnsembleEngine  # noqa: E402
 
 
 def placement_summary(engine) -> str:
-    """Which members, and how many cache bytes, each device holds."""
+    """Which members, cache bytes — and for a paged engine, how many
+    pages — each device holds, plus the free-list occupancy."""
     mesh = engine.mesh
+    ps = engine.page_stats()
+    paged = (f", {ps['n_pages']} pages x {ps['page_size']} tok"
+             if ps else "")
     if mesh is None:
-        return (f"  single device {jax.devices()[0]}: "
-                f"members 0..{engine.n_members - 1}, "
-                f"{engine.cache_bytes() / 2**20:.2f} MiB cache")
-    per = engine.n_members // engine.member_shards
-    lines = []
-    for i, dev in enumerate(mesh.devices[:, 0]):
-        lines.append(f"  device {dev}: members "
-                     f"{i * per}..{(i + 1) * per - 1}, "
-                     f"{engine.cache_bytes() / 2**20:.2f} MiB cache")
+        lines = [f"  single device {jax.devices()[0]}: "
+                 f"members 0..{engine.n_members - 1}, "
+                 f"{engine.cache_bytes() / 2**20:.2f} MiB cache{paged}"]
+    else:
+        per = engine.n_members // engine.member_shards
+        lines = []
+        for i, dev in enumerate(mesh.devices[:, 0]):
+            lines.append(f"  device {dev}: members "
+                         f"{i * per}..{(i + 1) * per - 1}, "
+                         f"{engine.cache_bytes() / 2**20:.2f} MiB cache"
+                         f"{paged}")
+    if ps:
+        lines.append(f"  free list: {ps['free_pages']}/{ps['n_pages']} "
+                     f"pages free "
+                     f"({ps['used_pages'] / max(ps['n_pages'], 1):.0%} "
+                     f"in use)")
     return "\n".join(lines)
 
 
@@ -58,6 +69,11 @@ def main():
     ap.add_argument("--steps", type=int, default=24)
     ap.add_argument("--mesh", default="2x1",
                     help="'MxD' member x data grid ('' = single device)")
+    ap.add_argument("--paged", action="store_true",
+                    help="also demo the paged KV pool (pages/device + "
+                         "free-list occupancy after a decode)")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="tokens per KV page (--paged)")
     args = ap.parse_args()
 
     cfg = registry.get_config(args.arch, reduced=True)
@@ -92,6 +108,20 @@ def main():
           f"max member delta "
           f"{float(abs(member_nll - m_ref).max()):.2e} — same math, "
           f"1/{sharded.member_shards} the cache per device")
+
+    if args.paged:
+        import numpy as np
+        paged = EnsembleEngine(cfg, params, n_slots=4, max_prompt=16,
+                               max_out=8, mesh=mesh, paged=True,
+                               page_size=args.page_size)
+        prompts = [np.arange(1, 9) % cfg.vocab_size, np.arange(2, 6)]
+        paged.generate(prompts, max_new=8)
+        # mid-flight occupancy: admit without harvesting
+        paged.update_slots(release=range(4),
+                           admits=[(i, p, 8) for i, p in
+                                   enumerate(prompts)])
+        print(f"\npaged placement ({args.mesh}, page_size="
+              f"{args.page_size}):\n{placement_summary(paged)}")
 
 
 if __name__ == "__main__":

@@ -28,11 +28,18 @@ JAX_PLATFORMS=cpu python benchmarks/serving_bench.py --fast
 # mesh stage: rerun the serving tests with a forced 2-device CPU host so
 # the shard_map member-sharding path executes with REAL collectives
 # (single-device runs above exercise it degraded to a 1x1 mesh), then
-# gate per-device cache bytes (<= single-device / member-axis size)
+# gate per-device cache bytes (<= single-device / member-axis size).
+# test_serving_paged.py rides the same stage: the paged pool + page
+# table must shard over a REAL member axis too (member-sharded + paged
+# on every commit), and the paged bench gates token-exactness vs the
+# contiguous engine and >= 2x admissible concurrency at equal bytes.
 JAX_PLATFORMS=cpu XLA_FLAGS="--xla_force_host_platform_device_count=2" \
-    python -m pytest -x -q tests/test_serving_mesh.py tests/test_serving.py
+    python -m pytest -x -q tests/test_serving_mesh.py tests/test_serving.py \
+    tests/test_serving_paged.py
 JAX_PLATFORMS=cpu XLA_FLAGS="--xla_force_host_platform_device_count=2" \
     python benchmarks/serving_bench.py --fast --mesh 2x1 --mesh-only
+JAX_PLATFORMS=cpu XLA_FLAGS="--xla_force_host_platform_device_count=2" \
+    python benchmarks/serving_bench.py --paged --paged-only
 
 # docs must not reference symbols that no longer exist
 python scripts/check_docs.py

@@ -42,6 +42,26 @@ def flash_attention(q, k, v, causal: bool = True, window: int = 0,
     return ref.attention(q, k, v, causal=causal, window=window, scale=scale)
 
 
+def paged_attention(q, k_pages, v_pages, table, lens, window: int = 0,
+                    scale=None):
+    """Decode attention over a paged KV pool (q: one token per slot).
+
+    TPU / REPRO_USE_PALLAS=1: the Pallas kernel walks only each slot's
+    live pages (O(len) reads).  Reference path: gather-all-pages + dense
+    masked softmax (kernels/ref.py) — O(max_seq) reads like the
+    contiguous path, but bit-identical numerics, which is what the
+    paged-vs-contiguous engine equivalence tests pin.
+    """
+    if pallas_enabled():
+        from repro.kernels import paged_attention as pa
+        return pa.paged_attention(q, k_pages, v_pages, table, lens,
+                                  window=window, scale=scale,
+                                  interpret=_interpret())
+    from repro.kernels import ref
+    return ref.paged_attention(q, k_pages, v_pages, table, lens,
+                               window=window, scale=scale)
+
+
 def fused_distill_loss(logits, labels, pseudo, lam):
     if pallas_enabled():
         from repro.kernels import distill_loss as dl

@@ -41,6 +41,51 @@ def attention(q, k, v, causal: bool = True, window: int = 0,
     return o.reshape(B, T, H, v.shape[-1]).astype(q.dtype)
 
 
+def paged_attention(q, k_pages, v_pages, table, lens, window: int = 0,
+                    scale: float | None = None) -> jax.Array:
+    """Decode attention over a paged KV pool (the kernel's oracle).
+
+    q:       (B, H, dk)            one query per slot (the decode step)
+    k_pages: (n_pages, page, Hkv, dk) physical page pool
+    v_pages: (n_pages, page, Hkv, dv)
+    table:   (B, P) int32          per-slot logical->physical page ids;
+                                   entries >= n_pages mean "unallocated"
+    lens:    (B,) int32            valid entries per slot (incl. the
+                                   token written this step)
+    -> (B, H, dv)
+
+    The gather materializes every slot's P*page logical entries —
+    O(max_seq) reads, same as the dense masked decode it replaces; the
+    Pallas kernel (kernels/paged_attention.py) is what cuts reads to
+    O(len) by walking only live pages.  Entries past `lens` (garbage
+    from unallocated / recycled pages) are masked to NEG_INF before the
+    softmax, so they contribute exactly 0 — bit-identical to attending
+    over a contiguous cache row.
+    """
+    B, H, dk = q.shape
+    n_pages, page, Hkv, _ = k_pages.shape
+    dv = v_pages.shape[-1]
+    g = H // Hkv
+    P = table.shape[1]
+    S = P * page
+    scale = scale if scale is not None else dk ** -0.5
+    t = jnp.clip(table, 0, n_pages - 1)
+    # (B, P, page, Hkv, d) -> (B, S, Hkv, d), logical position order
+    k = k_pages[t].reshape(B, S, Hkv, dk)
+    v = v_pages[t].reshape(B, S, Hkv, dv)
+    kp = jnp.arange(S)
+    ok = kp[None, :] < lens[:, None]
+    if window > 0:
+        ok &= kp[None, :] > (lens[:, None] - 1 - window)
+    bias = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)  # (B, S)
+    qf = q.astype(jnp.float32).reshape(B, Hkv, g, dk)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k.astype(jnp.float32)) * scale
+    s = s + bias[:, None, None]
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, dv).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # fused distill loss (Eqn 9) — per-row components
 # ---------------------------------------------------------------------------

@@ -52,6 +52,17 @@ def main():
     ap.add_argument("--prefill-budget", type=int, default=None,
                     help="prompt tokens prefilled per scheduler "
                          "iteration (default: 2 chunks)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV pool: full-attention caches become "
+                         "fixed-size pages behind a per-slot page "
+                         "table; admission bounds by free pages")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (--paged)")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="physical pages in the pool (--paged; default "
+                         "slots x ceil(max_seq/page) = full capacity, "
+                         "smaller oversubscribes and relies on "
+                         "preemption)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--eos-id", type=int, default=-1)
@@ -87,13 +98,20 @@ def main():
         cfg, params, n_slots=args.batch, max_prompt=args.prompt_len,
         max_out=args.steps, prefill_chunk=args.prefill_chunk,
         temperature=args.temperature, top_k=args.top_k,
-        eos_id=args.eos_id, quorum=quorum, seed=args.seed, mesh=mesh)
+        eos_id=args.eos_id, quorum=quorum, seed=args.seed, mesh=mesh,
+        paged=args.paged, page_size=args.page_size, n_pages=args.n_pages)
     place = ("single-device" if mesh is None else
              f"mesh {dict(mesh.shape)} over {mesh.devices.size} devices, "
              f"{K // engine.member_shards} members/device")
     print(f"engine: K={K} members, {args.batch} slots, "
           f"prefill chunk {engine.prefill_chunk}, {place}, "
           f"cache pool {engine.cache_bytes() / 2**20:.1f} MiB/device")
+    if args.paged:
+        ps = engine.page_stats()
+        print(f"paged pool: {ps['n_pages']} pages/device x "
+              f"{ps['page_size']} tok ({ps['pages_per_slot']} pages/slot "
+              f"max), free list {ps['free_pages']}/{ps['n_pages']} "
+              f"({ps['used_pages'] / max(ps['n_pages'], 1):.0%} used)")
 
     if args.continuous:
         reqs = client.make_requests(

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from repro.common.sharding import REP, constrain, mesh_axis_size
 from repro.common.types import AttnConfig, ModelConfig
+from repro.kernels import ops
 from repro.models.layers import apply_rope, dense_init
 
 
@@ -98,7 +99,9 @@ def _mask_bias(q_pos, k_pos, window: int, causal: bool) -> jax.Array:
 
 
 def _attend_dense(q, k, v, bias, scale) -> jax.Array:
-    """q:(B,Tq,H,dh) k/v:(B,Tk,Hkv,dh|dv) bias:(Tq,Tk) -> (B,Tq,H,dv).
+    """q:(B,Tq,H,dh) k/v:(B,Tk,Hkv,dh|dv) bias:(Tq,Tk), or (B,Tq,Tk)
+    for per-row masks (paged decode: every slot at its own position)
+    -> (B,Tq,H,dv).
 
     Same precision convention as the chunked path (operands in input
     dtype, f32 MXU accumulation) so dense/chunked dispatch is a pure
@@ -111,7 +114,8 @@ def _attend_dense(q, k, v, bias, scale) -> jax.Array:
     qg = q.reshape(B, Tq, Hkv, g, dh)
     s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(cdt),
                    preferred_element_type=jnp.float32) * scale
-    s = s + bias[None, None, None]
+    s = s + (bias[:, None, None] if bias.ndim == 3
+             else bias[None, None, None])
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(cdt), v.astype(cdt),
                    preferred_element_type=jnp.float32)
@@ -482,6 +486,263 @@ def mla_prefill(params: dict, x: jax.Array, cache: dict, idx: jax.Array,
                scale=scale)
     o = o.reshape(B, C, -1) @ params["w_o"]
     return o, {"c_kv": cc, "k_r": cr}
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache (serving): fixed-size pages + per-slot page table
+# ---------------------------------------------------------------------------
+# The serving engine's paged pool (serving/kv_cache.py) replaces the
+# per-slot contiguous (B, max_seq, ...) planes of FULL-attention layers
+# with a shared (n_pages, page_size, ...) pool addressed through a
+# per-slot page table: logical position p of slot b lives at
+# (table[b, p // page_size], p % page_size).  Sliding-window layers keep
+# their contiguous rings — they are already O(window), paging buys them
+# nothing.  Unallocated table entries carry a sentinel >= n_pages:
+# writes drop (scatter mode="drop"), reads clamp and are masked by the
+# position bookkeeping — the same stale-entry invariant the contiguous
+# pool relies on.
+
+
+def gqa_paged_cache_init(a: AttnConfig, n_pages: int, page_size: int,
+                         dtype) -> dict:
+    shape = (n_pages, page_size, a.n_kv_heads, a.head_dim)
+    return {"k_pages": jnp.zeros(shape, dtype),
+            "v_pages": jnp.zeros(shape, dtype)}
+
+
+def mla_paged_cache_init(a: AttnConfig, n_pages: int, page_size: int,
+                         dtype) -> dict:
+    # pages hold the latent (MLA's point: r + rope_dim per token)
+    return {"c_kv_pages": jnp.zeros((n_pages, page_size, a.kv_lora_rank),
+                                    dtype),
+            "k_r_pages": jnp.zeros((n_pages, page_size, a.qk_rope_dim),
+                                   dtype)}
+
+
+def _scatter_token(plane: jax.Array, vals: jax.Array, table: jax.Array,
+                   pos: jax.Array) -> jax.Array:
+    """Write one token per slot into a paged plane.
+
+    plane: (n_pages, page, ...); vals: (B, ...); table: (B, P);
+    pos: (B,) logical positions.  Slots whose target page is
+    unallocated (sentinel) drop the write — the engine only lets rows
+    with allocated pages advance, so a dropped write is always a frozen
+    slot's garbage step (same invariant as kv_cache.keep_frozen).
+    """
+    n_pages, page = plane.shape[0], plane.shape[1]
+    P = table.shape[1]
+    l = pos // page
+    off = pos % page
+    phys = jnp.take_along_axis(table, jnp.clip(l, 0, P - 1)[:, None],
+                               axis=1)[:, 0]
+    phys = jnp.where(l < P, phys, n_pages)  # out-of-table -> drop
+    # distinct slots own distinct pages (allocator invariant), so the
+    # scatter indices never collide on valid rows
+    return plane.at[phys, off].set(vals, mode="drop")
+
+
+def _gather_pages(plane: jax.Array, table: jax.Array) -> jax.Array:
+    """(n_pages, page, ...) x (B?, P) -> (B?, P*page, ...) logical view.
+    Unallocated entries clamp to an arbitrary live page; callers mask
+    them by position."""
+    n_pages, page = plane.shape[0], plane.shape[1]
+    t = jnp.clip(table, 0, n_pages - 1)
+    out = plane[t]
+    lead = table.shape[:-1]
+    return out.reshape(lead + (table.shape[-1] * page,) + plane.shape[2:])
+
+
+def chunk_cache_write_paged(plane: jax.Array, chunk: jax.Array,
+                            table: jax.Array, idx: jax.Array,
+                            n_tok: jax.Array) -> jax.Array:
+    """Bulk-write a prompt chunk into a paged plane (one slot).
+
+    plane: (n_pages, page, ...); chunk: (C, ...) entries for positions
+    idx..idx+n_tok-1 (t >= n_tok is padding and is NOT written);
+    table: (P,) the slot's page-table row.  The paged twin of
+    chunk_cache_write — same deterministic single-scatter contract,
+    n_tok == 0 is a bit-exact no-op.  No ring arithmetic: paged layers
+    are full-attention (window 0 or >= max_seq), so positions never
+    wrap inside max_seq.
+    """
+    n_pages, page = plane.shape[0], plane.shape[1]
+    P = table.shape[0]
+    C = chunk.shape[0]
+    t = jnp.arange(C)
+    pos = idx + t
+    l = pos // page
+    off = pos % page
+    phys = table[jnp.clip(l, 0, P - 1)]
+    phys = jnp.where((t < n_tok) & (l < P), phys, n_pages)  # pad -> drop
+    return plane.at[phys, off].set(chunk, mode="drop")
+
+
+def _rows_bias(lens: jax.Array, S: int, window: int) -> jax.Array:
+    """(B, 1, S) additive mask for per-row decode: entries < lens valid,
+    window limits lookback from the query position lens-1."""
+    kp = jnp.arange(S)
+    ok = kp[None, :] < lens[:, None]
+    if window > 0:
+        ok &= kp[None, :] > (lens[:, None] - 1 - window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)[:, None]
+
+
+def gqa_decode_paged(params: dict, x: jax.Array, cache: dict,
+                     pos: jax.Array, table: jax.Array, a: AttnConfig,
+                     cfg: ModelConfig, window: int,
+                     theta: float) -> Tuple[jax.Array, dict]:
+    """One-token decode over a paged pool, every row at its OWN position.
+
+    x: (B, 1, d); pos: (B,) per-row positions; table: (B, P) page table;
+    cache: {"k_pages": (n_pages, page, n_kv, dh), "v_pages": ...}.  The
+    new token's KV scatters into the slot's current page, then attention
+    reads the slot's pages through kernels/ops.paged_attention (Pallas
+    O(len) kernel on TPU, gather reference elsewhere).
+    """
+    B = x.shape[0]
+    kv = _kv_spec(a.n_kv_heads)
+    kf, vf = x @ params["w_k"], x @ params["w_v"]
+    if kv == REP:  # see gqa_apply: keep shards out of head_dim
+        kf = constrain(kf, None, None, REP)
+        vf = constrain(vf, None, None, REP)
+    q = (x @ params["w_q"]).reshape(B, 1, a.n_heads, a.head_dim)
+    k = kf.reshape(B, 1, a.n_kv_heads, a.head_dim)
+    v = vf.reshape(B, 1, a.n_kv_heads, a.head_dim)
+    q, k = _maybe_qknorm(params, q, k, cfg.norm_eps)
+    pos2 = pos[:, None]  # (B, 1) per-row, vs gqa_decode's shared scalar
+    if a.mrope_sections is not None:
+        pos3 = jnp.broadcast_to(pos2, (3,) + pos2.shape)
+        if a.use_rope:
+            q = apply_rope(q, pos3, theta, a.mrope_sections)
+            k = apply_rope(k, pos3, theta, a.mrope_sections)
+    elif a.use_rope:
+        q = apply_rope(q, pos2, theta)
+        k = apply_rope(k, pos2, theta)
+    k = constrain(k, None, None, kv, None)
+    v = constrain(v, None, None, kv, None)
+    ck = _scatter_token(cache["k_pages"], k[:, 0], table, pos)
+    cv = _scatter_token(cache["v_pages"], v[:, 0], table, pos)
+    scale = 1.0 / math.sqrt(a.head_dim)
+    o = ops.paged_attention(q[:, 0], ck, cv, table, pos + 1,
+                            window=window, scale=scale)
+    o = o.reshape(B, 1, -1) @ params["w_o"]
+    return o, {"k_pages": ck, "v_pages": cv}
+
+
+def gqa_prefill_paged(params: dict, x: jax.Array, cache: dict,
+                      idx: jax.Array, n_tok: jax.Array, table: jax.Array,
+                      a: AttnConfig, cfg: ModelConfig, window: int,
+                      theta: float) -> Tuple[jax.Array, dict]:
+    """Multi-token prefill of ONE slot over a paged pool.
+
+    x: (1, C, d) chunk at positions idx..idx+C-1; table: (P,) the slot's
+    page-table row.  Same math as gqa_prefill — queries attend over the
+    gathered pre-existing pages plus the chunk, then the chunk's K/V
+    land in the slot's pages in one scatter.
+    """
+    B, C, _ = x.shape
+    kv = _kv_spec(a.n_kv_heads)
+    kf, vf = x @ params["w_k"], x @ params["w_v"]
+    if kv == REP:
+        kf = constrain(kf, None, None, REP)
+        vf = constrain(vf, None, None, REP)
+    q = (x @ params["w_q"]).reshape(B, C, a.n_heads, a.head_dim)
+    k = kf.reshape(B, C, a.n_kv_heads, a.head_dim)
+    v = vf.reshape(B, C, a.n_kv_heads, a.head_dim)
+    q, k = _maybe_qknorm(params, q, k, cfg.norm_eps)
+    pos = _chunk_q_pos(idx, B, C, a.mrope_sections is not None)
+    if a.use_rope:
+        q = apply_rope(q, pos, theta, a.mrope_sections)
+        k = apply_rope(k, pos, theta, a.mrope_sections)
+    k = constrain(k, None, None, kv, None)
+    v = constrain(v, None, None, kv, None)
+    k_cache = _gather_pages(cache["k_pages"], table[None])  # (1, S, kv, dh)
+    v_cache = _gather_pages(cache["v_pages"], table[None])
+    S = k_cache.shape[1]
+    pos1d = pos if a.mrope_sections is None else pos[0]
+    t = jnp.arange(C)
+    chunk_pos = jnp.where(t < n_tok, idx + t, -(10 ** 9))
+    slot_ids = jnp.arange(S)
+    cache_pos = jnp.where(slot_ids < idx, slot_ids, -(10 ** 9))
+    k_pos = jnp.concatenate([cache_pos, chunk_pos])
+    k_all = jnp.concatenate([k_cache, k], axis=1)
+    v_all = jnp.concatenate([v_cache, v], axis=1)
+    scale = 1.0 / math.sqrt(a.head_dim)
+    o = attend(q, k_all, v_all, pos1d[0], k_pos, window=window, causal=True,
+               scale=scale, force_dense=(S + C) <= ATTN_CHUNK * 4)
+    o = o.reshape(B, C, -1) @ params["w_o"]
+    ck = chunk_cache_write_paged(cache["k_pages"], k[0], table, idx, n_tok)
+    cv = chunk_cache_write_paged(cache["v_pages"], v[0], table, idx, n_tok)
+    return o, {"k_pages": ck, "v_pages": cv}
+
+
+def mla_decode_paged(params: dict, x: jax.Array, cache: dict,
+                     pos: jax.Array, table: jax.Array, a: AttnConfig,
+                     cfg: ModelConfig,
+                     theta: float) -> Tuple[jax.Array, dict]:
+    """MLA one-token decode over paged LATENT planes, per-row positions.
+
+    The pages hold the compressed latent (c_kv, k_r); the step scatters
+    the new token's latent, gathers this batch's pages and expands them
+    on the fly exactly like mla_decode — same math, paged memory.
+    (Routing the expansion through the Pallas kernel needs the absorbed
+    q/out-projection form, which changes numerics — ROADMAP follow-up;
+    the kernel's dk != dv support is tested at MLA shapes directly.)
+    """
+    B = x.shape[0]
+    q, c_kv, k_r = _mla_qkv(params, x, a)
+    pos2 = pos[:, None]
+    q_c, q_r = q[..., :a.qk_nope_dim], q[..., a.qk_nope_dim:]
+    q_r = apply_rope(q_r, pos2, theta)
+    k_r = apply_rope(k_r[..., None, :], pos2, theta)[..., 0, :]
+    cc = _scatter_token(cache["c_kv_pages"], c_kv[:, 0], table, pos)
+    cr = _scatter_token(cache["k_r_pages"], k_r[:, 0], table, pos)
+    lat = _gather_pages(cc, table)   # (B, S, r)
+    rop = _gather_pages(cr, table)   # (B, S, rope)
+    S = lat.shape[1]
+    k_c, v = _mla_expand(params, lat, a)
+    q_full = jnp.concatenate([q_c, q_r], -1)
+    k_full = jnp.concatenate(
+        [k_c, jnp.broadcast_to(rop[..., None, :],
+                               k_c.shape[:-1] + (a.qk_rope_dim,))], -1)
+    scale = 1.0 / math.sqrt(a.qk_nope_dim + a.qk_rope_dim)
+    o = _attend_dense(q_full, k_full, v, _rows_bias(pos + 1, S, 0), scale)
+    o = o.reshape(B, 1, -1) @ params["w_o"]
+    return o, {"c_kv_pages": cc, "k_r_pages": cr}
+
+
+def mla_prefill_paged(params: dict, x: jax.Array, cache: dict,
+                      idx: jax.Array, n_tok: jax.Array, table: jax.Array,
+                      a: AttnConfig, cfg: ModelConfig,
+                      theta: float) -> Tuple[jax.Array, dict]:
+    """Multi-token MLA prefill of ONE slot over paged latent planes:
+    scatter the chunk's latents, gather + expand, attend with entries
+    past idx+n_tok masked — the paged twin of mla_prefill."""
+    B, C, _ = x.shape
+    q, c_kv, k_r = _mla_qkv(params, x, a)
+    pos = _chunk_q_pos(idx, B, C, False)
+    q_c, q_r = q[..., :a.qk_nope_dim], q[..., a.qk_nope_dim:]
+    q_r = apply_rope(q_r, pos, theta)
+    k_r = apply_rope(k_r[..., None, :], pos, theta)[..., 0, :]
+    cc = chunk_cache_write_paged(cache["c_kv_pages"], c_kv[0], table, idx,
+                                 n_tok)
+    cr = chunk_cache_write_paged(cache["k_r_pages"], k_r[0], table, idx,
+                                 n_tok)
+    lat = _gather_pages(cc, table[None])   # (1, S, r)
+    rop = _gather_pages(cr, table[None])
+    S = lat.shape[1]
+    k_c, v = _mla_expand(params, lat, a)
+    slot_ids = jnp.arange(S)
+    k_pos = jnp.where(slot_ids < idx + n_tok, slot_ids, -(10 ** 9))
+    q_full = jnp.concatenate([q_c, q_r], -1)
+    k_full = jnp.concatenate(
+        [k_c, jnp.broadcast_to(rop[..., None, :],
+                               k_c.shape[:-1] + (a.qk_rope_dim,))], -1)
+    scale = 1.0 / math.sqrt(a.qk_nope_dim + a.qk_rope_dim)
+    o = attend(q_full, k_full, v, pos[0], k_pos, window=0, causal=True,
+               scale=scale)
+    o = o.reshape(B, C, -1) @ params["w_o"]
+    return o, {"c_kv_pages": cc, "k_r_pages": cr}
 
 
 # ---------------------------------------------------------------------------

@@ -245,9 +245,33 @@ def loss_and_aux(params, cfg: ModelConfig, batch: dict,
 # KV/state cache
 # ---------------------------------------------------------------------------
 
-def _slot_cache_init(cfg: ModelConfig, spec: LayerSpec, batch, max_seq,
-                     dtype) -> dict:
+def layer_pages(cfg: ModelConfig, spec: LayerSpec, max_seq: int) -> bool:
+    """Does this layer page its positional cache under paged serving?
+
+    Full-attention layers (GQA with window 0 or >= max_seq, and MLA —
+    always full) hold O(max_seq) per slot, which is what paging fixes.
+    Ring-bounded sliding-window layers are already O(window) and keep
+    their contiguous per-slot rings; recurrent (mamba/rwkv) state has
+    no position axis at all.
+    """
     if spec.mixer == "attn":
+        return (cfg.attn.kind == "mla" or cfg.attn.window <= 0
+                or cfg.attn.window >= max_seq)
+    if spec.mixer == "attn_local":
+        return cfg.local_window <= 0 or cfg.local_window >= max_seq
+    return False
+
+
+def _slot_cache_init(cfg: ModelConfig, spec: LayerSpec, batch, max_seq,
+                     dtype, page_size: int = 0, n_pages: int = 0) -> dict:
+    if page_size > 0 and layer_pages(cfg, spec, max_seq):
+        if spec.mixer == "attn" and cfg.attn.kind == "mla":
+            c = attn.mla_paged_cache_init(cfg.attn, n_pages, page_size,
+                                          dtype)
+        else:
+            c = attn.gqa_paged_cache_init(cfg.attn, n_pages, page_size,
+                                          dtype)
+    elif spec.mixer == "attn":
         if cfg.attn.kind == "mla":
             c = attn.mla_cache_init(cfg.attn, batch, max_seq, dtype)
         else:
@@ -268,11 +292,13 @@ def _slot_cache_init(cfg: ModelConfig, spec: LayerSpec, batch, max_seq,
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
-               enc_len: int = 0) -> dict:
+               enc_len: int = 0, page_size: int = 0,
+               n_pages: int = 0) -> dict:
     dtype = dtype_of(cfg)
     segments = []
     for count, specs in cfg.segments():
-        slot = {f"slot_{i}": _slot_cache_init(cfg, s, batch, max_seq, dtype)
+        slot = {f"slot_{i}": _slot_cache_init(cfg, s, batch, max_seq, dtype,
+                                              page_size, n_pages)
                 for i, s in enumerate(specs)}
         segments.append(jax.tree.map(
             lambda x: jnp.broadcast_to(x, (count,) + x.shape), slot))
@@ -356,7 +382,8 @@ def decode_step(params, cfg: ModelConfig, cache: dict,
 
 
 def init_slot_cache(cfg: ModelConfig, batch: int, max_seq: int,
-                    enc_len: int = 0) -> dict:
+                    enc_len: int = 0, page_size: int = 0,
+                    n_pages: int = 0) -> dict:
     """Slot-addressable decode cache: `idx` is a (batch,) position vector.
 
     Each batch row is an independent *slot* at its own sequence position,
@@ -366,6 +393,13 @@ def init_slot_cache(cfg: ModelConfig, batch: int, max_seq: int,
     the K/V planes is required — recurrent SSM state DOES need zeroing,
     which repro.serving.kv_cache.reset_slots handles).
 
+    With page_size > 0 the positional planes of full-attention layers
+    (layer_pages) are allocated as a shared (n_pages, page_size, ...)
+    paged pool instead of per-slot (batch, max_seq, ...) rows, and the
+    cache carries a per-slot "page_table" (batch, ceil(max_seq/page))
+    mapping logical pages to physical ones (sentinel n_pages =
+    unallocated); serving/kv_cache.PageAllocator owns the mapping.
+
     The serving engine stacks one such cache per ensemble member into a
     leading-(K,) pool (repro.serving.kv_cache.init_pool) and, on a
     ("member", "data") mesh, shards that axis over "member".  The hooks
@@ -373,8 +407,12 @@ def init_slot_cache(cfg: ModelConfig, batch: int, max_seq: int,
     many members are LOCAL (all K unsharded; K/M inside a shard_map
     body), so a sharded cache needs no changes here.
     """
-    cache = init_cache(cfg, batch, max_seq, enc_len)
+    cache = init_cache(cfg, batch, max_seq, enc_len, page_size, n_pages)
     cache["idx"] = jnp.zeros((batch,), jnp.int32)
+    if page_size > 0:
+        pages_per_slot = -(-max_seq // page_size)
+        cache["page_table"] = jnp.full((batch, pages_per_slot), n_pages,
+                                       jnp.int32)
     return cache
 
 
@@ -538,6 +576,171 @@ def prefill_slots(params, cfg: ModelConfig, cache: dict, tokens: jax.Array,
 
     step = jax.vmap(one_row, in_axes=(axes, 0, 0), out_axes=(0, axes))
     return step(cache, tokens, n_tok)
+
+
+# ---------------------------------------------------------------------------
+# paged serving entry points
+# ---------------------------------------------------------------------------
+# The paged pool shares its full-attention planes across ALL slots, so
+# the per-row vmap trick of decode_step_slots / prefill_slots cannot
+# carry them (every vmap lane would need the whole plane).  These
+# variants run the batch natively at per-row positions instead:
+# attention layers are either paged (batch-wide scatter/gather through
+# the page table) or ring-bounded (a row-vmap of the scalar-position
+# gqa_decode — the plane still has a slot axis there), and recurrent
+# mixers are position-free and already batched.  Dispatch is structural
+# ("k_pages"/"c_kv_pages" in the layer's cache), so mixed models (jamba,
+# gemma3's 5:1 local:global pattern) page exactly their full layers.
+
+
+def _slot_decode_paged(p, c, x, spec: LayerSpec, cfg: ModelConfig, pos,
+                       table):
+    """Per-row-position block step. x: (B,1,d); pos: (B,); table: (B,P).
+    -> (x, cache)."""
+    h_in = rmsnorm(p["norm_mix"], x, cfg.norm_eps)
+    cs = c_sub(c)
+    if spec.mixer in ("attn", "attn_local"):
+        if spec.mixer == "attn":
+            window, theta = cfg.attn.window, cfg.attn.rope_theta
+        else:
+            window, theta = cfg.local_window, cfg.local_rope_theta
+        if "c_kv_pages" in c:
+            h, c2 = attn.mla_decode_paged(p["attn"], h_in, cs, pos, table,
+                                          cfg.attn, cfg, cfg.attn.rope_theta)
+        elif "k_pages" in c:
+            h, c2 = attn.gqa_decode_paged(p["attn"], h_in, cs, pos, table,
+                                          cfg.attn, cfg, window, theta)
+        else:
+            # ring-bounded sliding-window layer: contiguous per-slot
+            # plane, per-row positions via a row vmap (decode_step_slots'
+            # one-row trick, applied to just this mixer)
+            def one(c_row, x_row, i):
+                cr = jax.tree.map(lambda y: y[None], c_row)
+                h_r, c2_r = attn.gqa_decode(p["attn"], x_row[None], cr, i,
+                                            cfg.attn, cfg, window, theta)
+                return h_r[0], jax.tree.map(lambda y: y[0], c2_r)
+
+            h, c2 = jax.vmap(one)(cs, h_in, pos)
+    elif spec.mixer == "mamba":
+        h, c2 = ssm_mod.mamba_decode(p["mamba"], h_in, cs, cfg)
+    elif spec.mixer == "rwkv":
+        h, c2 = ssm_mod.rwkv_decode(p["rwkv"], h_in, cs, cfg)
+    else:
+        raise ValueError(spec.mixer)
+    x = x + h
+    h_f = rmsnorm(p["norm_ffn"], x, cfg.norm_eps)
+    if spec.ffn == "rwkv_cmix":
+        h = ssm_mod.cmix_apply(p["cmix"], h_f,
+                               c["cmix_shift"].astype(h_f.dtype))
+        c2["cmix_shift"] = h_f
+    else:
+        h, _ = _ffn_apply(p, h_f, spec, cfg)
+    return x + h, c2
+
+
+def decode_step_paged(params, cfg: ModelConfig, cache: dict,
+                      tokens: jax.Array) -> Tuple[jax.Array, dict]:
+    """Per-slot decode step over a paged cache (init_slot_cache with
+    page_size > 0): every row advances at its OWN position, full-
+    attention KV lives in shared pages behind cache["page_table"].
+
+    tokens: (B, 1) -> (logits (B, 1, V), cache).  The page table rides
+    through unchanged — allocation is host policy
+    (serving/kv_cache.PageAllocator), never traced.  enc-dec archs are
+    not served paged (the engine rejects them at construction).
+    """
+    pos = cache["idx"]
+    table = cache["page_table"]
+    x = _embed_in(params, cfg, tokens, None)
+    new_segments = []
+    for seg_params, seg_cache, (count, specs) in zip(
+            params["segments"], cache["segments"], cfg.segments()):
+
+        def body(x, xs):
+            sp, sc = xs
+            new_sc = {}
+            for i, spec in enumerate(specs):
+                x, new_sc[f"slot_{i}"] = _slot_decode_paged(
+                    sp[f"slot_{i}"], sc[f"slot_{i}"], x, spec, cfg, pos,
+                    table)
+            return x, new_sc
+
+        x, new_seg = jax.lax.scan(body, x, (seg_params, seg_cache))
+        new_segments.append(new_seg)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = lm_logits(params, x, cfg)
+    return logits, {"idx": pos + 1, "segments": new_segments,
+                    "page_table": table}
+
+
+def _slot_prefill_paged(p, c, x, spec: LayerSpec, cfg: ModelConfig, idx,
+                        n_tok, table):
+    """Chunk block step over a (possibly) paged layer cache; non-paged
+    layers fall through to _slot_prefill unchanged."""
+    if not ("k_pages" in c or "c_kv_pages" in c):
+        return _slot_prefill(p, c, x, spec, cfg, idx, n_tok, None)
+    h_in = rmsnorm(p["norm_mix"], x, cfg.norm_eps)
+    cs = c_sub(c)
+    if "c_kv_pages" in c:
+        h, c2 = attn.mla_prefill_paged(p["attn"], h_in, cs, idx, n_tok,
+                                       table, cfg.attn, cfg,
+                                       cfg.attn.rope_theta)
+    elif spec.mixer == "attn":
+        h, c2 = attn.gqa_prefill_paged(p["attn"], h_in, cs, idx, n_tok,
+                                       table, cfg.attn, cfg,
+                                       cfg.attn.window, cfg.attn.rope_theta)
+    else:
+        h, c2 = attn.gqa_prefill_paged(p["attn"], h_in, cs, idx, n_tok,
+                                       table, cfg.attn, cfg,
+                                       cfg.local_window,
+                                       cfg.local_rope_theta)
+    x = x + h
+    h_f = rmsnorm(p["norm_ffn"], x, cfg.norm_eps)
+    if spec.ffn == "rwkv_cmix":
+        C = x.shape[1]
+        ctx = jnp.concatenate([c["cmix_shift"].astype(h_f.dtype), h_f], 1)
+        h = ssm_mod.cmix_apply(p["cmix"], h_f, ctx[:, :C])
+        c2["cmix_shift"] = jax.lax.dynamic_slice_in_dim(ctx, n_tok, 1, 1)
+    else:
+        h, _ = _ffn_apply(p, h_f, spec, cfg)
+    return x + h, c2
+
+
+def prefill_step_paged(params, cfg: ModelConfig, cache: dict,
+                       tokens: jax.Array,
+                       n_tok: jax.Array) -> Tuple[jax.Array, dict]:
+    """Consume a whole prompt chunk of ONE slot over a paged cache.
+
+    cache: the slot's row (kv_cache.slot_row of a paged pool): idx (1,),
+    page_table (1, P), per-slot planes sliced to one row, paged planes
+    whole (they are shared — the chunk scatters into this slot's pages
+    in place).  tokens: (1, C); n_tok: () valid tokens.
+    -> (last_logits (1, V), cache), prefill_step's contract.
+    """
+    idx = cache["idx"][0]
+    table = cache["page_table"][0]
+    x = _embed_in(params, cfg, tokens, None)
+    new_segments = []
+    for seg_params, seg_cache, (count, specs) in zip(
+            params["segments"], cache["segments"], cfg.segments()):
+
+        def body(x, xs):
+            sp, sc = xs
+            new_sc = {}
+            for i, spec in enumerate(specs):
+                x, new_sc[f"slot_{i}"] = _slot_prefill_paged(
+                    sp[f"slot_{i}"], sc[f"slot_{i}"], x, spec, cfg, idx,
+                    n_tok, table)
+            return x, new_sc
+
+        x, new_seg = jax.lax.scan(body, x, (seg_params, seg_cache))
+        new_segments.append(new_seg)
+    last = jnp.maximum(n_tok - 1, 0)
+    xl = jax.lax.dynamic_slice_in_dim(x, last, 1, 1)
+    xl = rmsnorm(params["final_norm"], xl, cfg.norm_eps)
+    logits = lm_logits(params, xl, cfg)[:, 0]
+    return logits, {"idx": cache["idx"] + n_tok, "segments": new_segments,
+                    "page_table": cache["page_table"]}
 
 
 def prefill(params, cfg: ModelConfig, tokens=None, embeds=None,

@@ -61,12 +61,17 @@ def build_report(completions: Dict[int, Completion], wall: float,
         "latency_p95_ms": percentile(lat, 95) * 1e3,
         "latency_p99_ms": percentile(lat, 99) * 1e3,
         "cache_mb": engine.cache_bytes() / 2**20,  # per-device
+        "page_stats": engine.page_stats(),         # {} when contiguous
     }
 
 
 def print_report(r: dict):
+    ps = r.get("page_stats") or {}
+    paged = (f", paged {ps['n_pages']}x{ps['page_size']}-tok pages "
+             f"({ps['free_pages']} free)" if ps else "")
     print(f"served {r['n_requests']} requests | K={r['members']} members, "
-          f"{r['slots']} slots, cache pool {r['cache_mb']:.1f} MiB/device")
+          f"{r['slots']} slots, cache pool {r['cache_mb']:.1f} MiB/device"
+          f"{paged}")
     print(f"  {r['gen_tokens']} tokens in {r['wall_s']:.2f}s "
           f"= {r['tok_s']:.1f} tok/s")
     print(f"  ttft    p50 {r['ttft_p50_ms']:.1f} ms   "

@@ -50,6 +50,20 @@ as the reference baseline.  A 1-device local_mesh runs the same
 shard_map program (collectives become identity), so CPU CI exercises
 the mesh code path without multiple devices.
 
+Paged cache (paged=True): the contiguous pool reserves a max_seq KV row
+per member per layer per slot — the ensemble's K-fold model-cost tax
+(paper §1) paid again in cache bytes, however short the requests.  The
+paged pool spends bytes on TOKENS IN FLIGHT instead: full-attention
+planes become fixed-size pages shared by all slots behind a per-slot
+page table (kv_cache.PageAllocator, pure host policy; the table is a
+traced input, so allocation never recompiles), admission bounds by free
+pages rather than free slots, decode grows one page per boundary
+crossing with zero device sync (a host-side position mirror), and the
+Pallas kernel kernels/paged_attention.py reads only a slot's live pages
+— O(len) per step, not O(max_seq).  paged=False keeps the contiguous
+pool bit-identical as the reference baseline; docs/serving.md "Paged
+cache" has the layout diagram and lifecycle.
+
 Every decode in the repo (launch/serve.py CLI, examples, benchmarks,
 the scheduler) goes through EnsembleEngine.prefill/step — one path.
 """
@@ -108,7 +122,8 @@ class EnsembleEngine:
                  prefill_chunk: int = 32, temperature: float = 0.0,
                  top_k: int = 0, eos_id: int = -1,
                  quorum: Optional[Sequence[float]] = None, seed: int = 0,
-                 mesh=None):
+                 mesh=None, paged: bool = False, page_size: int = 16,
+                 n_pages: Optional[int] = None):
         self.cfg = cfg
         self.n_members = jax.tree.leaves(stacked_params)[0].shape[0]
         self.mesh = mesh
@@ -137,8 +152,40 @@ class EnsembleEngine:
         self.quorum = (jnp.ones((self.n_members,), jnp.float32)
                        if quorum is None
                        else jnp.asarray(quorum, jnp.float32))
-        self.cache = kv_cache.init_pool(cfg, self.n_members, n_slots,
-                                        self.max_seq, mesh=mesh)
+        # paged KV pool: full-attention planes become shared fixed-size
+        # pages behind a per-slot page table (kv_cache.PageAllocator);
+        # paged=False keeps the contiguous pool BIT-IDENTICAL (none of
+        # the code below this constructor changes shape or math).
+        self.paged = bool(paged)
+        self.page_size = int(page_size)
+        if self.paged:
+            if cfg.enc_dec:
+                raise ValueError(
+                    "paged serving does not support enc-dec archs yet "
+                    "(stub encoder context is slot-contiguous)")
+            if self.page_size <= 0:
+                raise ValueError(f"page_size must be > 0, got {page_size}")
+            self.pages_per_slot = -(-self.max_seq // self.page_size)
+            # default: full capacity (every slot can reach max_seq) —
+            # equal logical capacity to the contiguous pool; pass a
+            # smaller n_pages to oversubscribe slots against memory
+            # (admission then bounds by free pages, Scheduler preempts)
+            self.n_pages = (n_slots * self.pages_per_slot
+                            if n_pages is None else int(n_pages))
+            self.allocator = kv_cache.PageAllocator(
+                self.n_pages, self.page_size, n_slots, self.pages_per_slot)
+            # host mirror of each slot's request shape: lets the engine
+            # grow pages BEFORE dispatching a step, with zero device sync
+            # (EOS-early finishes overshoot by <= one page until harvest)
+            self._host_pos = np.zeros(n_slots, np.int64)
+            self._host_plen = np.zeros(n_slots, np.int64)
+            self._host_new = np.zeros(n_slots, np.int64)
+            self._host_active = np.zeros(n_slots, bool)
+            self._table_stale = True
+        self.cache = kv_cache.init_pool(
+            cfg, self.n_members, n_slots, self.max_seq, mesh=mesh,
+            page_size=self.page_size if self.paged else 0,
+            n_pages=self.n_pages if self.paged else 0)
         if cfg.enc_dec:
             self.cache["enc"] = self._encode_stub(n_slots)
         self.state = self._blank_state(seed)
@@ -227,9 +274,14 @@ class EnsembleEngine:
 
     def _member_logits(self, params, cache, tok) -> Tuple[jax.Array, dict]:
         """All (local) members score the step in one program.
-        -> ((K, B, V), cache)."""
+        -> ((K, B, V), cache).  Paged engines route through
+        decode_step_paged (same contract; KV reads go through each
+        member's replica of the page table)."""
+        step = (tf.decode_step_paged if self.paged
+                else tf.decode_step_slots)
+
         def one(p, c):
-            return tf.decode_step_slots(p, self.cfg, c, tok[:, None])
+            return step(p, self.cfg, c, tok[:, None])
 
         logits, cache = jax.vmap(one)(params, cache)  # (K, B, 1, V)
         return logits[:, :, 0], cache
@@ -326,8 +378,12 @@ class EnsembleEngine:
         chunk = st.prompt[slot][cols][None]  # (1, C)
         row = kv_cache.slot_row(cache, slot)
 
-        def one(p, c):
-            return tf.prefill_slots(p, self.cfg, c, chunk, n_tok[None])
+        if self.paged:
+            def one(p, c):
+                return tf.prefill_step_paged(p, self.cfg, c, chunk, n_tok)
+        else:
+            def one(p, c):
+                return tf.prefill_slots(p, self.cfg, c, chunk, n_tok[None])
 
         logits, row = jax.vmap(one)(params, row)  # (K, 1, V)
         cache = kv_cache.write_slot_row(cache, row, slot)
@@ -383,7 +439,74 @@ class EnsembleEngine:
         if not 0 < max_new <= self.max_out:
             raise ValueError(f"max_new {max_new} not in "
                              f"[1, {self.max_out}]")
+        if self.paged:
+            need = self.allocator.pages_for(t.size + max_new)
+            if need > self.n_pages:
+                # could never complete even with the whole pool to
+                # itself: preemption would loop forever — reject here
+                raise ValueError(
+                    f"request needs {need} pages ({t.size}+{max_new} "
+                    f"tokens at page_size={self.page_size}) but the pool "
+                    f"holds {self.n_pages}")
         return t
+
+    # -- paged-pool host accounting -----------------------------------------
+
+    def _sync_table(self):
+        """Push the allocator's page table to the device pool (every
+        member carries a replica, so the kernels stay member-vmapped)."""
+        tbl = jnp.asarray(self.allocator.table())
+        arr = jnp.broadcast_to(tbl[None], (self.n_members,) + tbl.shape)
+        if self.mesh is not None:
+            arr = jax.device_put(
+                arr, NamedSharding(self.mesh, shd.member_pspec(arr.ndim)))
+        self.cache["page_table"] = arr
+        self._table_stale = False
+
+    def _host_decoding(self) -> np.ndarray:
+        """(B,) host's view of slots whose NEXT step writes cache at
+        _host_pos — the mirror of _step_impl's `adv` (EOS-early
+        finishes are invisible here; they over-hold <= one page until
+        harvest releases the slot)."""
+        live = self._host_active & (
+            self._host_pos < self._host_plen + self._host_new)
+        if self.prefill_chunk > 0:
+            live &= self._host_pos >= self._host_plen  # prefill owns prompt
+        return live
+
+    def reserve_decode_pages(self) -> list:
+        """Grow each decoding slot's page chain to cover this step's
+        write position; -> slots the dry free list left STARVED (the
+        caller — Scheduler — must preempt or release before step()).
+        No-op list on contiguous engines."""
+        if not self.paged:
+            return []
+        starved = []
+        for b in np.nonzero(self._host_decoding())[0]:
+            pos = int(self._host_pos[b])
+            if self.allocator.holds(b, pos):
+                continue
+            if self.allocator.alloc(b, pos // self.page_size + 1):
+                self._table_stale = True
+            else:
+                starved.append(int(b))
+        if self._table_stale:
+            self._sync_table()
+        return starved
+
+    @property
+    def free_pages(self) -> int:
+        return self.allocator.free_pages if self.paged else -1
+
+    def page_stats(self) -> dict:
+        """Free-list occupancy telemetry (placement summaries, client
+        reports).  Empty on contiguous engines."""
+        if not self.paged:
+            return {}
+        a = self.allocator
+        return {"n_pages": a.n_pages, "page_size": a.page_size,
+                "free_pages": a.free_pages, "used_pages": a.used_pages,
+                "pages_per_slot": a.pages_per_slot}
 
     def step(self) -> SlotState:
         """Advance every slot one token (one compiled program).
@@ -394,10 +517,25 @@ class EnsembleEngine:
         Returns the replicated SlotState; the cache pool (leading (K,)
         member axis, sharded over "member" when a mesh is set) advances
         in place via donation.
+
+        Paged engines grow each decoding slot's page chain first
+        (reserve_decode_pages); a dry free list raises — callers that
+        can preempt (Scheduler) reserve themselves before stepping.
         """
+        if self.paged:
+            starved = self.reserve_decode_pages()
+            if starved:
+                raise RuntimeError(
+                    f"paged pool out of pages for decoding slots "
+                    f"{starved} ({self.allocator.free_pages} free of "
+                    f"{self.n_pages}); release finished slots or preempt "
+                    f"(Scheduler.run does) before stepping")
         self.state, self.cache = self._step(self.params, self.cache,
                                             self.state, self.quorum)
         self.steps_run += 1
+        if self.paged:
+            adv = self._host_decoding()
+            self._host_pos[adv] += 1
         return self.state
 
     def prefill(self, slot: int) -> SlotState:
@@ -417,10 +555,17 @@ class EnsembleEngine:
         if not 0 <= int(slot) < self.n_slots:
             raise ValueError(f"slot {slot} out of range "
                              f"[0, {self.n_slots})")
+        if self.paged and self._table_stale:
+            self._sync_table()
         self.state, self.cache = self._prefill(
             self.params, self.cache, self.state, self.quorum,
             jnp.asarray(slot, jnp.int32))
         self.prefills_run += 1
+        if self.paged:
+            b = int(slot)
+            left = self._host_plen[b] - self._host_pos[b]
+            if self._host_active[b] and left > 0:
+                self._host_pos[b] += min(self.prefill_chunk, int(left))
         return self.state
 
     def update_slots(self, release: Sequence[int] = (),
@@ -457,6 +602,39 @@ class EnsembleEngine:
             prompt[b, :t.size] = t
             plen[b] = t.size
             mnew[b] = max_new
+        if self.paged:
+            # all-or-nothing page accounting BEFORE any state mutates:
+            # released/recycled slots return their chains, admitted
+            # prompts take ceil(plen/page) up front (decode pages grow
+            # step by step via reserve_decode_pages)
+            recycled = [b for b in range(B) if rel[b] or adm[b]]
+            freed = sum(self.allocator.held_pages(b) for b in recycled)
+            need = sum(self.allocator.pages_for(int(plen[b]))
+                       for b in range(B) if adm[b])
+            if need > self.allocator.free_pages + freed:
+                raise RuntimeError(
+                    f"admission needs {need} pages, only "
+                    f"{self.allocator.free_pages + freed} available "
+                    f"(pool {self.n_pages}); queue instead — "
+                    f"Scheduler._fill_slots admits by free pages")
+            for b in recycled:
+                self.allocator.release(b)
+                self._host_active[b] = False
+                self._host_pos[b] = 0
+                self._host_plen[b] = self._host_new[b] = 0
+            for b in range(B):
+                if not adm[b]:
+                    continue
+                if not self.allocator.alloc(
+                        b, self.allocator.pages_for(int(plen[b]))):
+                    raise RuntimeError("page accounting violated its "
+                                       "feasibility check")  # unreachable
+                self._host_active[b] = True
+                self._host_pos[b] = 0
+                self._host_plen[b] = int(plen[b])
+                self._host_new[b] = int(mnew[b])
+            self._table_stale = True
+            self._sync_table()
         self.state, self.cache = self._update(
             self.cache, self.state, jnp.asarray(rel), jnp.asarray(adm),
             jnp.asarray(prompt), jnp.asarray(plen), jnp.asarray(mnew))
@@ -465,8 +643,13 @@ class EnsembleEngine:
                  max_new: int) -> list:
         """Static-batch decode: admit up to n_slots prompts, run to done.
 
-        The whole run is dispatch-only (no host sync inside the loop);
-        use scheduler.Scheduler for continuous admission instead.
+        The whole run is dispatch-only (no host sync inside the loop) —
+        except on an OVERSUBSCRIBED paged pool with EOS enabled, where
+        each step fetches the done flags: the host page mirror cannot
+        see an EOS finish, and without a harvest loop to release the
+        slot it would keep growing pages for it until the free list
+        spuriously ran dry.  Use scheduler.Scheduler for continuous
+        admission instead.
         Returns one int32 array of generated tokens per prompt —
         identical whatever the engine's placement (mesh or not) and,
         with prefill_chunk=0, via the per-token teacher-forcing
@@ -489,8 +672,13 @@ class EnsembleEngine:
             steps = max_new - 1
         else:
             steps = max(plens) + max_new - 1
+        sync_done = (self.paged and self.eos_id >= 0
+                     and self.n_pages < self.n_slots * self.pages_per_slot)
         for _ in range(steps):
             self.step()
+            if sync_done:
+                self._host_active &= ~np.asarray(
+                    jax.device_get(self.state.done))
         st = jax.device_get(self.state)
         return [st.out[i, :st.n_gen[i]] for i in range(len(prompts))]
 

@@ -15,18 +15,37 @@ in-place as it decodes (stale entries are masked by position bookkeeping,
 see models/attention.gqa_decode).  The engine donates the pool into its
 jitted step so XLA updates it in place.
 
+Paged mode (page_size > 0): full-attention layers' positional planes
+swap their per-slot (B, max_seq, ...) rows for a shared page pool —
+
+  paged leaves   (K, count, n_pages, page_size, ...)
+  page_table     (K, B, ceil(max_seq/page_size))  logical -> physical
+
+backed by the host-side PageAllocator below (free list + per-slot page
+chains; sentinel id n_pages = unallocated).  Pool bytes then scale with
+the TOKENS IN FLIGHT instead of K x n_slots x max_seq, admission is
+bounded by free pages rather than free slots, and releasing a slot is a
+free-list push — no zeroing, the same stale-entry invariant as the
+contiguous path.  Ring-bounded sliding-window planes and recurrent
+state stay per-slot (transformer.layer_pages).
+
 Placement: on a ("member", "data") mesh (common.sharding.local_mesh)
 the leading (K,) axis shards over "member" — each device holds only its
 K/M members' caches, which is where the engine's per-device memory win
 comes from — and the slot axis replicates ("data" is reserved for slot
-sharding, a ROADMAP follow-up).  Every helper below is placement-
-oblivious: it only touches per-member-independent dims, so the same
-code runs unsharded or inside a shard_map body on the local shard.
+sharding, a ROADMAP follow-up).  The page table is identical across
+members (carrying the K axis keeps every helper placement-oblivious:
+each member shard reads its own replica).  Every helper below only
+touches per-member-independent dims, so the same code runs unsharded or
+inside a shard_map body on the local shard.
 """
 from __future__ import annotations
 
+from typing import List, Optional
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.common import sharding as shd
 from repro.common.types import ModelConfig
@@ -34,7 +53,8 @@ from repro.models import transformer as tf
 
 
 def init_pool(cfg: ModelConfig, n_members: int, n_slots: int,
-              max_seq: int, mesh=None) -> dict:
+              max_seq: int, mesh=None, page_size: int = 0,
+              n_pages: int = 0) -> dict:
     """Allocate the (K members) x (B slots) cache pool.
 
     With `mesh` (a ("member", "data") mesh) every leaf is placed with
@@ -42,11 +62,16 @@ def init_pool(cfg: ModelConfig, n_members: int, n_slots: int,
     replicated; n_members must divide evenly.  mesh=None allocates on
     the default device (the single-device reference path).
 
+    page_size > 0 allocates the paged layout (n_pages physical pages
+    shared by all slots per full-attention layer, plus the per-slot
+    page table, initially all-sentinel = nothing allocated).
+
     enc-dec archs get a zeroed per-member encoder-output plane; the
     engine fills it once at construction (audio frontends are stubs,
     DESIGN §4 — per-request encoder state is a serving follow-up).
     """
-    base = tf.init_slot_cache(cfg, n_slots, max_seq)
+    base = tf.init_slot_cache(cfg, n_slots, max_seq, page_size=page_size,
+                              n_pages=n_pages)
     pool = jax.tree.map(
         lambda x: jnp.broadcast_to(x, (n_members,) + x.shape), base)
     if mesh is not None:
@@ -61,28 +86,42 @@ def shard_pool(pool: dict, mesh) -> dict:
 
 
 # positional cache planes: stale entries are masked by position
-# bookkeeping, so recycling a slot never needs to touch them
+# bookkeeping, so recycling a slot never needs to touch them.  Paged
+# planes ("*_pages") carry the same invariant and additionally have no
+# slot axis at all — per-slot masked updates must never see them.
 _POSITIONAL = frozenset({"k", "v", "c_kv", "k_r"})
+
+
+def _leaf_name(path) -> str:
+    return next((str(e.key) for e in reversed(path)
+                 if isinstance(e, jax.tree_util.DictKey)), "")
+
+
+def _skip_slot_update(name: str) -> bool:
+    return name in _POSITIONAL or name.endswith("_pages")
 
 
 def reset_slots(pool: dict, mask: jax.Array) -> dict:
     """Recycle slots where mask (B,) is True, across all members.
 
+    A strictly per-slot masked update: rows where the mask is False ride
+    through BIT-IDENTICAL (tests/test_serving_paged.py pins this), so
+    releasing one slot can never perturb the B-1 in-flight neighbors.
     Rewinding idx to 0 is enough for attention state: each KV entry the
     new request can attend to is overwritten before it first becomes
     visible, so the (large) positional planes are left untouched and
     admission cost stays proportional to the (small) recurrent state.
     Recurrent state (mamba conv/ssm planes, rwkv shift/wkv, cmix shift)
     has no position axis, so it IS zeroed explicitly — otherwise the
-    previous occupant leaks into the next request.
+    previous occupant leaks into the next request.  Paged planes have no
+    slot axis (pages are reassigned by the host allocator) and the page
+    table is host-owned — neither is touched here.
     """
     out = dict(pool)
     out["idx"] = jnp.where(mask[None, :], 0, pool["idx"])
 
     def z(path, x):  # leaves are (K, count, B, ...)
-        name = next((str(e.key) for e in reversed(path)
-                     if isinstance(e, jax.tree_util.DictKey)), "")
-        if name in _POSITIONAL:
+        if _skip_slot_update(_leaf_name(path)):
             return x
         m = mask.reshape((1, 1, -1) + (1,) * (x.ndim - 3))
         return jnp.where(m, jnp.zeros_like(x), x)
@@ -97,11 +136,21 @@ def slot_row(pool: dict, b: jax.Array) -> dict:
     """Slice one slot's caches (all members) out of the pool: the B axis
     of every leaf narrows to length 1 at (traced) slot b.  The prefill
     kernel runs the chunk forward on this row only, so its cost scales
-    with the chunk — not with n_slots."""
+    with the chunk — not with n_slots.  Paged planes have no slot axis
+    and pass through whole (the chunk scatters into the slot's pages in
+    place); the slot's page-table row rides along."""
     sl = jax.lax.dynamic_slice_in_dim
+
+    def pick(path, x):
+        if _leaf_name(path).endswith("_pages"):
+            return x
+        return sl(x, b, 1, 2)
+
     out = {"idx": sl(pool["idx"], b, 1, 1),
-           "segments": jax.tree.map(lambda x: sl(x, b, 1, 2),
-                                    pool["segments"])}
+           "segments": jax.tree_util.tree_map_with_path(
+               pick, pool["segments"])}
+    if "page_table" in pool:
+        out["page_table"] = sl(pool["page_table"], b, 1, 1)
     if "enc" in pool:
         out["enc"] = sl(pool["enc"], b, 1, 1)
     return out
@@ -110,12 +159,21 @@ def slot_row(pool: dict, b: jax.Array) -> dict:
 def write_slot_row(pool: dict, row: dict, b: jax.Array) -> dict:
     """Insert a length-1-B row (from slot_row, advanced by prefill) back
     into the pool at slot b — maxtext's prefill-then-insert, as one
-    in-place dynamic-update per leaf on the donated pool."""
+    in-place dynamic-update per leaf on the donated pool.  Paged planes
+    come back whole (already scatter-updated inside the prefill)."""
     up = jax.lax.dynamic_update_slice_in_dim
+
+    def put(path, x, r):
+        if _leaf_name(path).endswith("_pages"):
+            return r
+        return up(x, r, b, 2)
+
     out = dict(pool)
     out["idx"] = up(pool["idx"], row["idx"], b, 1)
-    out["segments"] = jax.tree.map(lambda x, r: up(x, r, b, 2),
-                                   pool["segments"], row["segments"])
+    out["segments"] = jax.tree_util.tree_map_with_path(
+        put, pool["segments"], row["segments"])
+    if "page_table" in pool:
+        out["page_table"] = up(pool["page_table"], row["page_table"], b, 1)
     # "enc" is computed once at construction and never advanced
     return out
 
@@ -133,15 +191,15 @@ def keep_frozen(new: dict, old: dict, advance: jax.Array) -> dict:
     stays invisible under the position bookkeeping, and is overwritten
     before a later occupant can see it — the same invariant reset_slots
     relies on — so the restore cost stays proportional to the (small)
-    recurrent state.
+    recurrent state.  (Paged planes drop a frozen row's write entirely
+    when its page is unallocated — scatter mode="drop" — and otherwise
+    land it in the slot's own page under the same invariant.)
     """
     out = dict(new)
     out["idx"] = jnp.where(advance[None, :], new["idx"], old["idx"])
 
     def sel(path, n, o):  # leaves are (K, count, B, ...)
-        name = next((str(e.key) for e in reversed(path)
-                     if isinstance(e, jax.tree_util.DictKey)), "")
-        if name in _POSITIONAL:
+        if _skip_slot_update(_leaf_name(path)):
             return n
         m = advance.reshape((1, 1, -1) + (1,) * (n.ndim - 3))
         return jnp.where(m, n, o)
@@ -149,6 +207,106 @@ def keep_frozen(new: dict, old: dict, advance: jax.Array) -> dict:
     out["segments"] = jax.tree_util.tree_map_with_path(
         sel, new["segments"], old["segments"])
     return out
+
+
+# ---------------------------------------------------------------------------
+# paged-pool page accounting (host side)
+# ---------------------------------------------------------------------------
+
+
+class PageAllocator:
+    """Free-list allocator behind the paged pool's page table.
+
+    Pure host policy — nothing here is traced.  Physical pages are ids
+    in [0, n_pages); the sentinel id `n_pages` marks an unallocated
+    page-table entry (paged kernels clamp + mask reads through it and
+    drop writes).  Each slot owns a chain of pages, one per logical
+    page, grown strictly in order (sequence positions only ever advance)
+    and returned to the free list in one `release` — no zeroing, the
+    next owner overwrites every entry before the position bookkeeping
+    makes it visible, the same invariant the contiguous pool recycles
+    slots with.
+
+    The same id space addresses every paged layer's plane (each layer
+    has its own (n_pages, page_size, ...) physical pool, all indexed by
+    the one table), so allocating a page buys position capacity in ALL
+    layers at once — vLLM's block-table layout.
+    """
+
+    def __init__(self, n_pages: int, page_size: int, n_slots: int,
+                 pages_per_slot: int):
+        if n_pages <= 0 or page_size <= 0:
+            raise ValueError(f"need n_pages > 0 and page_size > 0, got "
+                             f"{n_pages}, {page_size}")
+        self.n_pages = int(n_pages)
+        self.page_size = int(page_size)
+        self.n_slots = int(n_slots)
+        self.pages_per_slot = int(pages_per_slot)
+        # pop() takes the lowest id first — keeps tables human-readable
+        self._free: List[int] = list(range(self.n_pages - 1, -1, -1))
+        self._chain: List[List[int]] = [[] for _ in range(self.n_slots)]
+        self._dirty = True
+        self._table: Optional[np.ndarray] = None
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages covering n_tokens positions from 0."""
+        return -(-int(n_tokens) // self.page_size)
+
+    def holds(self, slot: int, position: int) -> bool:
+        """Is `position`'s page already allocated to `slot`?"""
+        return position // self.page_size < len(self._chain[slot])
+
+    def held_pages(self, slot: int) -> int:
+        return len(self._chain[slot])
+
+    def alloc(self, slot: int, n_logical: int) -> bool:
+        """Grow `slot` to cover >= n_logical logical pages.
+
+        All-or-nothing: returns False (state untouched) when the free
+        list cannot cover the growth or n_logical exceeds the per-slot
+        table width — the caller (engine/scheduler) then preempts or
+        queues instead of partially admitting.
+        """
+        need = int(n_logical) - len(self._chain[slot])
+        if need <= 0:
+            return True
+        if n_logical > self.pages_per_slot or need > len(self._free):
+            return False
+        for _ in range(need):
+            self._chain[slot].append(self._free.pop())
+        self._dirty = True
+        return True
+
+    def release(self, slot: int) -> int:
+        """Return all of `slot`'s pages to the free list; -> count."""
+        n = len(self._chain[slot])
+        if n:
+            self._free.extend(reversed(self._chain[slot]))
+            self._chain[slot] = []
+            self._dirty = True
+        return n
+
+    def table(self) -> np.ndarray:
+        """(n_slots, pages_per_slot) int32 logical->physical map,
+        sentinel-filled (n_pages) where unallocated.  Cached; rebuilt
+        only after an alloc/release."""
+        if self._dirty or self._table is None:
+            t = np.full((self.n_slots, self.pages_per_slot), self.n_pages,
+                        np.int32)
+            for b, chain in enumerate(self._chain):
+                if chain:
+                    t[b, : len(chain)] = chain
+            self._table = t
+            self._dirty = False
+        return self._table
 
 
 def slot_positions(pool: dict) -> jax.Array:

@@ -26,6 +26,16 @@ identically over a single-device engine and a member-sharded
 (mesh=...) one — the member axis is the engine's concern, never the
 queue's.  Straggler handling composes the same way: engine.set_quorum
 drops a member mid-stream with no recompile and no rescheduling.
+
+Over a PAGED engine (engine.paged) two policies change shape, both
+still host-side: admission bounds by FREE PAGES rather than free slots
+(strictly FIFO — a request that doesn't fit blocks the ones behind it,
+so short requests cannot starve a long one), and when the free list
+runs dry mid-decode the YOUNGEST in-flight request is preempted back
+to the front of the queue (_ensure_decode_pages) — the oldest request
+never loses its pages, so completion order stays FIFO, nothing
+starves, and a preempted request simply regenerates on re-admission
+(bit-identical under greedy sampling).
 """
 from __future__ import annotations
 
@@ -102,6 +112,8 @@ class Scheduler:
         self.completions: Dict[int, Completion] = {}
         self._next_rid = 0
         self._to_release: list = []
+        self.preemptions = 0     # paged: decode-time evictions to queue
+        self.peak_in_flight = 0  # max concurrently admitted requests
 
     # -- submission ---------------------------------------------------------
 
@@ -124,8 +136,26 @@ class Scheduler:
         admits = []
         now = time.time()
         chunked = self.engine.prefill_chunk > 0
+        avail = 0
+        if self.engine.paged:
+            # pages the combined release+admit dispatch below can hand
+            # out: the free list plus the chains of slots being released
+            # in the same call (update_slots recycles before it admits)
+            avail = self.engine.free_pages + sum(
+                self.engine.allocator.held_pages(b)
+                for b in self._to_release)
         for b in range(self.engine.n_slots):
             if self.slots[b] is None and self.pending:
+                nxt = self.pending[0]
+                if self.engine.paged:
+                    # admit by free pages, not free slots — and strictly
+                    # FIFO (no skip-ahead past a request that does not
+                    # fit: that is how short requests would starve a
+                    # long one forever)
+                    need = self.engine.allocator.pages_for(len(nxt.tokens))
+                    if need > avail:
+                        break
+                    avail -= need
                 req = self.pending.popleft()
                 admits.append((b, req.tokens, req.max_new))
                 self.slots[b] = _SlotMeta(
@@ -134,6 +164,37 @@ class Scheduler:
         if admits or self._to_release:
             self.engine.update_slots(release=self._to_release, admits=admits)
             self._to_release = []
+        self.peak_in_flight = max(
+            self.peak_in_flight, sum(m is not None for m in self.slots))
+
+    def _ensure_decode_pages(self):
+        """Grow decoding slots' page chains before the step; when the
+        free list runs dry, PREEMPT the youngest in-flight request
+        (highest rid) back to the front of the queue and retry.
+
+        Preempting youngest-first keeps completion order FIFO and
+        starvation-free: the oldest request never loses its pages to a
+        newer one, so it always progresses (alone, it always fits —
+        submit() rejects requests larger than the whole pool).  A
+        preempted request restarts from scratch on re-admission; with
+        greedy sampling its tokens are bit-identical, it just pays the
+        queue again (counted in .preemptions and its ttft/latency).
+        """
+        if not self.engine.paged:
+            return
+        while True:
+            starved = self.engine.reserve_decode_pages()
+            if not starved:
+                return
+            live = [b for b, m in enumerate(self.slots) if m is not None]
+            victim = max(live, key=lambda b: self.slots[b].req.rid)
+            meta = self.slots[victim]
+            self.engine.update_slots(release=[victim])
+            self.slots[victim] = None
+            # every queued rid is younger than every in-flight rid, so
+            # appendleft re-sorts the queue into submission order
+            self.pending.appendleft(meta.req)
+            self.preemptions += 1
 
     def _run_prefill(self):
         """Spend the iteration's prefill budget in admission (FIFO)
@@ -192,7 +253,9 @@ class Scheduler:
         while self.pending or any(m is not None for m in self.slots):
             self._fill_slots()
             if self._decode_ready():  # skip decode while all mid-prompt
-                self.engine.step()
+                self._ensure_decode_pages()  # paged: grow or preempt
+                if self._decode_ready():     # preemption may empty the set
+                    self.engine.step()
             self._run_prefill()
             self._harvest()
         if self._to_release:
