@@ -1,6 +1,12 @@
 """Run the benchmark suite (fast mode): one per paper table/figure plus
 the framework-level cost/kernel/roofline reports.
 
+The serving stage additionally writes BENCH_serving.json — the
+machine-readable perf trajectory (tok/s, TTFT p50/p99, admissible
+concurrency, per-device cache bytes, gate pass/fail) that CI archives
+as a build artifact so serving performance is comparable across
+commits.
+
   PYTHONPATH=src python -m benchmarks.run          # fast CI subset
   PYTHONPATH=src python -m benchmarks.run --full   # paper-scale settings
 """
@@ -8,6 +14,8 @@ from __future__ import annotations
 
 import sys
 import traceback
+
+SERVING_JSON = "BENCH_serving.json"
 
 
 def main():
@@ -21,7 +29,8 @@ def main():
         ("Aggregation communication cost", aggregation_cost.main, flag),
         ("Kernel structural roofline", kernel_bench.main, flag),
         ("Dry-run roofline table", roofline.main, flag),
-        ("Serving: engine vs member loop", serving_bench.main, flag),
+        ("Serving: engine vs member loop", serving_bench.main,
+         flag + ["--json", SERVING_JSON]),
     ]
     failures = 0
     for name, fn, argv in suite:

@@ -1,7 +1,7 @@
-"""Serving throughput + TTFT + mesh placement + paged cache: engine vs
-baselines.
+"""Serving throughput + TTFT + mesh placement + paged cache + HTTP
+frontend: engine vs baselines.
 
-Four gates:
+Five gates:
 
   - throughput (ISSUE 1): the vmapped single-program engine vs the
     seed's K-jit-calls-per-token Python loop (kept alive below as the
@@ -24,6 +24,18 @@ Four gates:
     against a max_seq-sized budget, the paged scheduler must admit
     >= 2x the concurrent requests the contiguous engine's slot count
     allows — the pool serves tokens in flight, not slots x max_seq.
+  - frontend (ISSUE 5, --frontend): the end-to-end HTTP path must be
+    token-exact vs in-process generate() at K=4, both non-streamed and
+    SSE-streamed, AND a hot-swap rollout under sustained load must
+    complete with zero dropped requests, every completion token-exact
+    vs its old- or new-model offline reference, and zero recompiles of
+    the decode step (same jitted callable, same jit cache size, before
+    and after the swap).
+
+--json PATH writes the machine-readable metrics (tok/s, TTFT p50/p99,
+admissible concurrency, per-device cache bytes, gate results) so the
+perf trajectory accumulates across commits — benchmarks/run.py and
+scripts/ci.sh write BENCH_serving.json.
 
   PYTHONPATH=src python benchmarks/serving_bench.py [--fast]
   # mesh stage on a forced 2-device CPU host:
@@ -32,10 +44,15 @@ Four gates:
       --fast --mesh 2x1 --mesh-only
   # paged stage alone:
   PYTHONPATH=src python benchmarks/serving_bench.py --paged --paged-only
+  # frontend stage alone:
+  PYTHONPATH=src python benchmarks/serving_bench.py \
+      --frontend --frontend-only
 """
 from __future__ import annotations
 
 import argparse
+import json
+import sys
 import time
 
 import jax
@@ -258,6 +275,126 @@ def bench_paged(K=4, seed=0):
     return gate, lines
 
 
+def decode_cache_size(engine):
+    """jit-cache entries of the decode step (private jax API; None when
+    unavailable).  A hot-swap must not grow this."""
+    try:
+        return engine._step._cache_size()
+    except AttributeError:
+        return None
+
+
+def bench_frontend(K=4, seed=0, n_replicas=2, load_requests=12):
+    """Frontend acceptance: HTTP token-exactness (non-streamed + SSE)
+    vs in-process generate() at K=4, then a hot-swap rollout under
+    sustained load with zero drops and zero decode recompiles.
+    -> (ok, lines, metrics)."""
+    import threading
+
+    from repro.serving import client as cl
+    from repro.serving.frontend import FrontendServer, Replica, Router
+
+    lines, metrics = [], {}
+    cfg = registry.get_config("gemma3-1b", reduced=True).with_(
+        dtype="float32")
+    kw = dict(n_slots=4, max_prompt=12, max_out=8, prefill_chunk=4)
+    key = jax.random.PRNGKey(seed)
+    params_old = jax.vmap(lambda k: tf.init(k, cfg))(jax.random.split(key, K))
+    params_new = jax.vmap(lambda k: tf.init(k, cfg))(
+        jax.random.split(jax.random.PRNGKey(seed + 101), K))
+    prompts = [np.arange(1, 12) % cfg.vocab_size, np.arange(2, 5),
+               np.arange(3, 10), np.arange(1, 7)]
+    max_new = 8
+
+    # offline references, one isolated generate() per prompt per model
+    # (row-independent vmap makes isolation == in-batch, tested)
+    ref_old_eng = EnsembleEngine(cfg, params_old, **kw)
+    refs_old = [ref_old_eng.generate([p], max_new=max_new)[0].tolist()
+                for p in prompts]
+    refs_new = [EnsembleEngine(cfg, params_new, **kw)
+                .generate([p], max_new=max_new)[0].tolist()
+                for p in prompts]
+
+    replicas = [Replica(f"r{i}", EnsembleEngine(cfg, params_old, **kw))
+                for i in range(n_replicas)]
+    for r in replicas:
+        # compile BOTH kernels (prefill + decode: max_new=2 forces one
+        # decode step) before any measurement — otherwise a replica the
+        # router happened not to exercise in phase (a) would grow its
+        # jit cache on first use in phase (b) and read as a recompile
+        r.engine.generate([prompts[0]], max_new=2)
+    router = Router(replicas)
+    srv = FrontendServer(router)
+    srv.start()
+    try:
+        # (a) HTTP token-exactness, non-streamed and SSE-streamed
+        exact = True
+        for i, p in enumerate(prompts):
+            plain = cl.http_generate(srv.url, p, max_new, stream=False)
+            sse = cl.http_generate(srv.url, p, max_new, stream=True)
+            exact &= (plain["tokens"] == refs_old[i]
+                      and sse["tokens"] == refs_old[i])
+        lines.append(f"frontend K={K}: HTTP non-streamed + SSE tokens "
+                     f"{'match (exact)' if exact else 'MISMATCH'} vs "
+                     f"in-process generate()")
+
+        # (b) hot-swap rollout under sustained load
+        sizes_before = [decode_cache_size(r.engine) for r in replicas]
+        steps_before = [id(r.engine._step) for r in replicas]
+        results: dict = {}
+        errors: list = []
+
+        def fire(i):
+            try:
+                out = cl.http_generate(srv.url, prompts[i % len(prompts)],
+                                       max_new, stream=(i % 2 == 0))
+                results[i] = out["tokens"]
+            except Exception as e:  # noqa: BLE001 — a drop IS the failure
+                errors.append((i, repr(e)))
+
+        threads = [threading.Thread(target=fire, args=(i,))
+                   for i in range(load_requests)]
+        for i, t in enumerate(threads):
+            t.start()
+            if i == load_requests // 3:
+                router.rollout(params_new)  # mid-load, under traffic
+        for t in threads:
+            t.join()
+
+        dropped = load_requests - len(results)
+        matched = sum(
+            results.get(i) in (refs_old[i % len(prompts)],
+                               refs_new[i % len(prompts)])
+            for i in range(load_requests))
+        sizes_after = [decode_cache_size(r.engine) for r in replicas]
+        steps_after = [id(r.engine._step) for r in replicas]
+        no_recompile = (sizes_before == sizes_after
+                        and steps_before == steps_after)
+        swapped = all(r.engine.swaps_done == 1 for r in replicas)
+        lines.append(
+            f"frontend hot-swap under load: {len(results)}/{load_requests} "
+            f"completed ({dropped} dropped, {len(errors)} errors), "
+            f"{matched}/{load_requests} token-exact vs old/new refs, "
+            f"decode jit cache {sizes_before} -> {sizes_after} "
+            f"({'same callable' if no_recompile else 'RECOMPILED'}), "
+            f"swaps {[r.engine.swaps_done for r in replicas]}")
+        ok = (exact and dropped == 0 and not errors
+              and matched == load_requests and no_recompile and swapped)
+        metrics.update({
+            "frontend_exact": bool(exact),
+            "frontend_dropped": int(dropped),
+            "frontend_recompiled": not no_recompile,
+        })
+        lines.append(f"frontend acceptance (token-exact HTTP+SSE, 0 drops, "
+                     f"0 recompiles across swap): "
+                     f"{'PASS' if ok else 'FAIL'}")
+        if errors:
+            lines.extend(f"  error: req {i}: {e}" for i, e in errors[:4])
+        return ok, lines, metrics
+    finally:
+        srv.shutdown(drain=True, timeout=60.0)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="gemma3-1b")
@@ -283,16 +420,43 @@ def main(argv=None):
                          "equal pool bytes")
     ap.add_argument("--paged-only", action="store_true",
                     help="run only the paged stage")
+    ap.add_argument("--frontend", action="store_true",
+                    help="also gate the HTTP frontend: token-exact "
+                         "non-streamed + SSE vs in-process generate(), "
+                         "and hot-swap under load with zero drops and "
+                         "zero decode recompiles")
+    ap.add_argument("--frontend-only", action="store_true",
+                    help="run only the frontend stage")
+    ap.add_argument("--json", default="",
+                    help="write machine-readable metrics (tok/s, TTFT "
+                         "p50/p99, admissible concurrency, per-device "
+                         "cache bytes, gates) to this path")
     args = ap.parse_args(argv)
     if args.prefill_chunk <= 0:
         ap.error("--prefill-chunk must be >= 1: the TTFT gate measures "
                  "chunked prefill against the per-token baseline")
     if args.mesh_only and not args.mesh:
         ap.error("--mesh-only needs --mesh MxD")
+
+    metrics: dict = {"argv": argv if argv is not None else sys.argv[1:]}
+
+    def finish(ok: bool) -> int:
+        metrics["pass"] = bool(ok)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(metrics, f, indent=2, sort_keys=True)
+            print(f"wrote {args.json}")
+        return 0 if ok else 1
+
     if args.paged_only:
         ok, lines = bench_paged()
         print("\n".join(lines))
-        return 0 if ok else 1
+        return finish(ok)
+    if args.frontend_only:
+        ok, lines, m = bench_frontend()
+        metrics.update(m)
+        print("\n".join(lines))
+        return finish(ok)
     if args.fast:
         args.members, args.steps, args.repeats = [1, 4], 8, 1
         args.ttft_prompt = 32
@@ -302,7 +466,7 @@ def main(argv=None):
         ok, lines = bench_mesh(cfg, args.mesh, 4, args.batch,
                                args.prompt_len, args.steps, args.repeats)
         print("\n".join(lines))
-        return 0 if ok else 1
+        return finish(ok)
     print(f"{args.arch} (reduced) | batch={args.batch} "
           f"prompt={args.prompt_len} steps={args.steps} "
           f"repeats={args.repeats}")
@@ -313,6 +477,8 @@ def main(argv=None):
         loop_s, eng_s, match = bench_k(cfg, K, args.batch, args.prompt_len,
                                        args.steps, args.repeats)
         speedups[K] = eng_s / loop_s
+        metrics[f"tok_s_k{K}"] = eng_s
+        metrics[f"speedup_k{K}"] = speedups[K]
         print(f"{K:>3} {loop_s:>12.1f} {eng_s:>13.1f} "
               f"{speedups[K]:>7.2f}x  {match:>8.1%}")
 
@@ -323,6 +489,36 @@ def main(argv=None):
     print(f"TTFT K=4 prompt={args.ttft_prompt} chunk={args.prefill_chunk}: "
           f"per-token {t_base * 1e3:.1f} ms -> prefill {t_pref * 1e3:.1f} ms "
           f"({ttft_x:.2f}x)")
+    metrics["ttft_speedup"] = ttft_x
+
+    # continuous-batching load report: TTFT/latency percentiles,
+    # admissible concurrency, per-device cache bytes — the trajectory
+    # numbers BENCH_serving.json accumulates
+    K_load = max(args.members)
+    params = jax.vmap(lambda k: tf.init(k, cfg))(
+        jax.random.split(jax.random.PRNGKey(0), K_load))
+    eng = EnsembleEngine(cfg, params, n_slots=args.batch,
+                         max_prompt=args.prompt_len, max_out=args.steps,
+                         prefill_chunk=args.prefill_chunk)
+    reqs = client.make_requests(
+        4 * args.batch, cfg.vocab_size,
+        prompt_len=(max(2, args.prompt_len // 4), args.prompt_len),
+        max_new=(max(1, args.steps // 2), args.steps))
+    eng.generate([reqs[0][0]], max_new=2)  # compile outside the clock
+    report = client.run_load(eng, reqs)
+    metrics.update({
+        "load_k": K_load,
+        "load_tok_s": report["tok_s"],
+        "load_ttft_p50_ms": report["ttft_p50_ms"],
+        "load_ttft_p99_ms": report["ttft_p99_ms"],
+        "load_latency_p99_ms": report["latency_p99_ms"],
+        "admissible_concurrency": report["peak_in_flight"],
+        "cache_bytes_per_device": int(eng.cache_bytes()),
+    })
+    print(f"load K={K_load}: {report['tok_s']:.1f} tok/s, ttft p50 "
+          f"{report['ttft_p50_ms']:.1f} / p99 {report['ttft_p99_ms']:.1f} "
+          f"ms, {report['peak_in_flight']} admissible concurrent, "
+          f"{report['cache_mb']:.2f} MiB/device cache")
 
     ok = True
     if 4 in speedups:
@@ -346,7 +542,13 @@ def main(argv=None):
         paged_ok, lines = bench_paged()
         print("\n".join(lines))
         ok &= paged_ok
-    return 0 if ok else 1
+
+    if args.frontend:
+        fe_ok, lines, m = bench_frontend()
+        metrics.update(m)
+        print("\n".join(lines))
+        ok &= fe_ok
+    return finish(ok)
 
 
 if __name__ == "__main__":

@@ -74,6 +74,10 @@ def main():
                          "free-list occupancy after a decode)")
     ap.add_argument("--page-size", type=int, default=8,
                     help="tokens per KV page (--paged)")
+    ap.add_argument("--frontend", action="store_true",
+                    help="also demo the HTTP frontend: 2 replicas on an "
+                         "ephemeral port, one SSE-streamed request, then "
+                         "a zero-downtime hot-swap rollout")
     args = ap.parse_args()
 
     cfg = registry.get_config(args.arch, reduced=True)
@@ -122,6 +126,45 @@ def main():
                                    enumerate(prompts)])
         print(f"\npaged placement ({args.mesh}, page_size="
               f"{args.page_size}):\n{placement_summary(paged)}")
+
+    if args.frontend:
+        demo_frontend(cfg, params, mesh)
+
+
+def demo_frontend(cfg, params, mesh):
+    """2 replicas behind the HTTP frontend: stream one request over
+    SSE, then roll a fresh member stack through the fleet with zero
+    downtime (drain -> swap_params -> rejoin per replica)."""
+    import numpy as np
+
+    from repro.serving import client
+    from repro.serving.frontend import FrontendServer, Replica, Router
+
+    kw = dict(n_slots=2, max_prompt=16, max_out=8, prefill_chunk=8,
+              mesh=mesh)
+    replicas = [Replica(f"r{i}", EnsembleEngine(cfg, params, **kw))
+                for i in range(2)]
+    router = Router(replicas)
+    srv = FrontendServer(router)
+    srv.start()
+    try:
+        print(f"\nfrontend: {srv.url} (2 replicas, least-loaded routing)")
+        prompt = np.arange(1, 9) % cfg.vocab_size
+        out = client.http_generate(srv.url, prompt, 8, stream=True)
+        print(f"  SSE streamed {out['n_gen']} tokens from replica "
+              f"{out['replica']}: {out['tokens']} "
+              f"(ttft {out['ttft_ms']:.1f} ms)")
+        new_params = jax.vmap(lambda k: tf.init(k, cfg))(
+            jax.random.split(jax.random.PRNGKey(42),
+                             replicas[0].engine.n_members))
+        router.rollout(new_params)
+        out2 = client.http_generate(srv.url, prompt, 8, stream=False)
+        print(f"  rolled out a new member stack with zero downtime "
+              f"(swaps: {[r.engine.swaps_done for r in replicas]}); "
+              f"post-swap tokens: {out2['tokens']}")
+    finally:
+        srv.shutdown()
+        print("  drained and shut down")
 
 
 if __name__ == "__main__":

@@ -22,8 +22,20 @@ rm -f "$pip_log"
 
 JAX_PLATFORMS=cpu python -m pytest -x -q "$@"
 
-# serving acceptance gates (throughput >= 2x, prefill TTFT >= 4x at K=4)
-JAX_PLATFORMS=cpu python benchmarks/serving_bench.py --fast
+# serving acceptance gates (throughput >= 2x, prefill TTFT >= 4x at K=4);
+# BENCH_serving.json is the machine-readable perf-trajectory artifact
+# (tok/s, TTFT p50/p99, admissible concurrency, per-device cache bytes)
+JAX_PLATFORMS=cpu python benchmarks/serving_bench.py --fast \
+    --json BENCH_serving.json
+
+# frontend stage: HTTP/SSE server tests + the end-to-end frontend gate
+# (token-exact HTTP vs in-process, hot-swap with zero drops/recompiles).
+# Both run under a hard wall-clock cap: a hung socket or a deadlocked
+# handler thread must fail the stage, not wedge CI.
+timeout -k 30 900 env JAX_PLATFORMS=cpu \
+    python -m pytest -x -q tests/test_frontend.py
+timeout -k 30 600 env JAX_PLATFORMS=cpu \
+    python benchmarks/serving_bench.py --frontend --frontend-only
 
 # mesh stage: rerun the serving tests with a forced 2-device CPU host so
 # the shard_map member-sharding path executes with REAL collectives
@@ -36,6 +48,12 @@ JAX_PLATFORMS=cpu python benchmarks/serving_bench.py --fast
 JAX_PLATFORMS=cpu XLA_FLAGS="--xla_force_host_platform_device_count=2" \
     python -m pytest -x -q tests/test_serving_mesh.py tests/test_serving.py \
     tests/test_serving_paged.py
+# hot-swap on a REAL mesh: swap_params must re-shard the new stack to
+# the live 2-device member placement without recompiling (single-device
+# runs above exercise the same test degraded to a 1x1 mesh)
+timeout -k 30 600 env JAX_PLATFORMS=cpu \
+    XLA_FLAGS="--xla_force_host_platform_device_count=2" \
+    python -m pytest -x -q tests/test_frontend.py -k hot_swap
 JAX_PLATFORMS=cpu XLA_FLAGS="--xla_force_host_platform_device_count=2" \
     python benchmarks/serving_bench.py --fast --mesh 2x1 --mesh-only
 JAX_PLATFORMS=cpu XLA_FLAGS="--xla_force_host_platform_device_count=2" \

@@ -113,6 +113,16 @@ def restore_checkpoint(root: str, step: int, template: Any) -> Any:
     out = []
     for i, ref in enumerate(leaves):
         arr = arrays[_key_str(i)]
+        if arr.dtype.kind == "V":
+            # npz round-trips ml_dtypes leaves (bfloat16, fp8) as raw
+            # void records; view them back through the template dtype
+            # (same itemsize) — jnp.asarray has no void cast
+            ref_dt = np.dtype(jnp.dtype(ref.dtype))
+            if arr.dtype.itemsize != ref_dt.itemsize:
+                raise ValueError(
+                    f"leaf {i}: stored itemsize {arr.dtype.itemsize} != "
+                    f"template {ref_dt} ({index['dtypes'][i]} on disk)")
+            arr = arr.view(ref_dt)
         out.append(jnp.asarray(arr, dtype=ref.dtype))
     return jax.tree_util.tree_unflatten(treedef, out)
 

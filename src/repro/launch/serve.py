@@ -24,6 +24,16 @@ FLOPs scale with K/M.  On CPU, force host devices first:
   XLA_FLAGS=--xla_force_host_platform_device_count=2 \
   python -m repro.launch.serve --arch gemma3-1b --reduced --members 4 \
       --ensemble --mesh 2x1
+
+HTTP frontend (streaming SSE + /metrics + /healthz, N replicas behind
+a least-loaded router, Ctrl-C drains gracefully):
+  python -m repro.launch.serve --arch gemma3-1b --reduced --members 4 \
+      --ensemble --http --port 8000 --replicas 2
+  curl -s localhost:8000/v1/generate -d '{"tokens":[1,2,3],"max_new":8}'
+--watch-ckpt DIR polls a CheckpointManager root for newly committed
+rounds and hot-swaps each one into the fleet with the zero-downtime
+drain -> swap -> rejoin rollout (the paper's train -> compress -> serve
+loop, closed).
 """
 from __future__ import annotations
 
@@ -32,6 +42,73 @@ import time
 
 import jax
 import numpy as np
+
+
+def serve_http(args, cfg, build_engine):
+    """Mount --replicas engines behind the router + HTTP frontend."""
+    from repro.serving import client
+    from repro.serving.frontend import Replica, Router, serve_frontend
+
+    replicas = [Replica(f"r{i}", build_engine(),
+                        prefill_budget=args.prefill_budget)
+                for i in range(max(1, args.replicas))]
+    router = Router(replicas)
+    srv = serve_frontend(router, host=args.host, port=args.port,
+                         verbose=not args.load)
+    print(f"frontend: {srv.url}  ({len(replicas)} replica(s), "
+          f"K={replicas[0].engine.n_members} members, "
+          f"{replicas[0].engine.n_slots} slots each)")
+    print(f"  POST {srv.url}/v1/generate  "
+          '{"tokens": [...], "max_new": N, "stream": true|false}')
+    print(f"  GET  {srv.url}/healthz   GET  {srv.url}/metrics")
+
+    try:
+        if args.load:
+            reqs = client.make_requests(
+                args.requests, cfg.vocab_size,
+                prompt_len=(max(2, args.prompt_len // 4), args.prompt_len),
+                max_new=(max(1, args.steps // 2), args.steps),
+                seed=args.seed)
+            client.print_report(client.run_http_load(
+                srv.url, reqs, concurrency=2 * len(replicas)))
+            return 0
+        if args.watch_ckpt:
+            watch_checkpoints(args.watch_ckpt, router)
+        else:
+            while True:
+                time.sleep(3600)
+    except KeyboardInterrupt:
+        print("\ndraining ...")
+    finally:
+        srv.shutdown(drain=True)
+    print("drained; bye")
+    return 0
+
+
+def watch_checkpoints(root: str, router, poll_s: float = 5.0):
+    """Poll a CheckpointManager root; hot-swap each newly committed
+    round into the fleet (drain -> swap -> rejoin, zero drops).
+
+    The round already on disk at startup is rolled in FIRST: a
+    restarted server must serve the trained weights, not the random
+    init its engines were constructed with.
+    """
+    from repro.checkpoint.store import latest_step, restore_checkpoint
+
+    served = None
+    print(f"watching {root} "
+          f"(round on disk: {latest_step(root)})")
+    while True:
+        latest = latest_step(root)
+        if latest is not None and latest != served:
+            template = router.replicas[0].engine.params
+            new_params = restore_checkpoint(root, latest, template)
+            router.rollout(new_params)
+            served = latest
+            print(f"rolled out round {served} "
+                  f"(swaps: "
+                  f"{[r.engine.swaps_done for r in router.replicas]})")
+        time.sleep(poll_s)
 
 
 def main():
@@ -75,7 +152,25 @@ def main():
     ap.add_argument("--continuous", action="store_true",
                     help="continuous batching under synthetic load")
     ap.add_argument("--requests", type=int, default=32,
-                    help="synthetic requests (--continuous)")
+                    help="synthetic requests (--continuous / --load)")
+    ap.add_argument("--http", action="store_true",
+                    help="serve over HTTP: POST /v1/generate (SSE "
+                         "streaming), GET /metrics, GET /healthz; "
+                         "Ctrl-C drains gracefully")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8000,
+                    help="HTTP port (--http; 0 picks an ephemeral one)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind the frontend router "
+                         "(--http); each gets its own cache pool")
+    ap.add_argument("--load", action="store_true",
+                    help="with --http: drive the synthetic requests "
+                         "through the HTTP path and print the report "
+                         "instead of serving until Ctrl-C")
+    ap.add_argument("--watch-ckpt", default="",
+                    help="with --http: poll this CheckpointManager "
+                         "root and hot-swap each newly committed round "
+                         "into the fleet (drain -> swap -> rejoin)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -94,12 +189,19 @@ def main():
         raise SystemExit(f"--quorum needs {K} entries, got {len(quorum)}")
     mesh = shd.parse_mesh_arg(args.mesh)
 
-    engine = EnsembleEngine(
-        cfg, params, n_slots=args.batch, max_prompt=args.prompt_len,
-        max_out=args.steps, prefill_chunk=args.prefill_chunk,
-        temperature=args.temperature, top_k=args.top_k,
-        eos_id=args.eos_id, quorum=quorum, seed=args.seed, mesh=mesh,
-        paged=args.paged, page_size=args.page_size, n_pages=args.n_pages)
+    def build_engine():
+        return EnsembleEngine(
+            cfg, params, n_slots=args.batch, max_prompt=args.prompt_len,
+            max_out=args.steps, prefill_chunk=args.prefill_chunk,
+            temperature=args.temperature, top_k=args.top_k,
+            eos_id=args.eos_id, quorum=quorum, seed=args.seed, mesh=mesh,
+            paged=args.paged, page_size=args.page_size,
+            n_pages=args.n_pages)
+
+    if args.http:
+        return serve_http(args, cfg, build_engine)
+
+    engine = build_engine()
     place = ("single-device" if mesh is None else
              f"mesh {dict(mesh.shape)} over {mesh.devices.size} devices, "
              f"{K // engine.member_shards} members/device")

@@ -2,7 +2,10 @@
 
 EnsembleEngine fuses all K members into one jitted decode step over a
 pool of slot-addressable KV caches; Scheduler runs continuous batching
-on top; client drives synthetic load and reports tok/s / TTFT / latency
+on top (batch `run()` or online `serve_forever()` with token
+streaming); the `frontend` subpackage mounts N replicas behind an
+HTTP/SSE server with zero-downtime hot-swap; client drives synthetic
+load — in-process or over HTTP — and reports tok/s / TTFT / latency
 percentiles.  See engine.py for the architecture note.
 """
 from repro.serving.engine import EnsembleEngine, SlotState

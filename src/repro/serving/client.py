@@ -1,14 +1,21 @@
 """Synthetic load driver + latency reporting for the serving engine.
 
 Generates a stream of token-id requests with mixed prompt/output
-lengths, pushes them through a Scheduler, and reports the numbers a
-serving SLO cares about: aggregate tok/s, time-to-first-token, and
-per-request latency percentiles.
+lengths, pushes them through a Scheduler — in-process, or over the
+HTTP frontend (`run_http_load`) — and reports the numbers a serving
+SLO cares about: aggregate tok/s, time-to-first-token, per-request
+latency percentiles, and scheduler health (preemptions, peak live
+slots, paged free-list low-water mark).
 """
 from __future__ import annotations
 
+import json
+import threading
 import time
-from typing import Dict, Sequence
+import urllib.request
+from http.client import HTTPConnection
+from typing import Dict, List, Optional, Sequence, Tuple
+from urllib.parse import urlsplit
 
 import numpy as np
 
@@ -40,14 +47,16 @@ def run_load(engine: EnsembleEngine, requests, prefill_budget=None) -> dict:
     t0 = time.time()
     completions = sched.run()
     wall = time.time() - t0
-    return build_report(completions, wall, engine)
+    return build_report(completions, wall, engine, sched=sched)
 
 
 def build_report(completions: Dict[int, Completion], wall: float,
-                 engine: EnsembleEngine) -> dict:
+                 engine: EnsembleEngine,
+                 sched: Optional[Scheduler] = None) -> dict:
     gen_tokens = sum(len(c.tokens) for c in completions.values())
     ttft = [c.ttft for c in completions.values()]
     lat = [c.latency for c in completions.values()]
+    page_stats = engine.page_stats()
     return {
         "n_requests": len(completions),
         "members": engine.n_members,
@@ -57,11 +66,18 @@ def build_report(completions: Dict[int, Completion], wall: float,
         "tok_s": gen_tokens / max(wall, 1e-9),
         "ttft_p50_ms": percentile(ttft, 50) * 1e3,
         "ttft_p95_ms": percentile(ttft, 95) * 1e3,
+        "ttft_p99_ms": percentile(ttft, 99) * 1e3,
         "latency_p50_ms": percentile(lat, 50) * 1e3,
         "latency_p95_ms": percentile(lat, 95) * 1e3,
         "latency_p99_ms": percentile(lat, 99) * 1e3,
         "cache_mb": engine.cache_bytes() / 2**20,  # per-device
-        "page_stats": engine.page_stats(),         # {} when contiguous
+        "page_stats": page_stats,                  # {} when contiguous
+        # scheduler health — tracked per run, surfaced here instead of
+        # dropped on the floor (preemptions cost re-generation; the
+        # low-water mark says how close the pool came to thrashing)
+        "preemptions": sched.preemptions if sched else None,
+        "peak_in_flight": sched.peak_in_flight if sched else None,
+        "low_water_pages": page_stats.get("low_water_pages"),
     }
 
 
@@ -75,7 +91,170 @@ def print_report(r: dict):
     print(f"  {r['gen_tokens']} tokens in {r['wall_s']:.2f}s "
           f"= {r['tok_s']:.1f} tok/s")
     print(f"  ttft    p50 {r['ttft_p50_ms']:.1f} ms   "
-          f"p95 {r['ttft_p95_ms']:.1f} ms")
+          f"p95 {r['ttft_p95_ms']:.1f} ms   "
+          f"p99 {r['ttft_p99_ms']:.1f} ms")
     print(f"  latency p50 {r['latency_p50_ms']:.1f} ms   "
           f"p95 {r['latency_p95_ms']:.1f} ms   "
           f"p99 {r['latency_p99_ms']:.1f} ms")
+    if r.get("peak_in_flight") is not None:
+        low = (f", free-list low water {r['low_water_pages']}"
+               f"/{ps['n_pages']} pages"
+               if r.get("low_water_pages") is not None else "")
+        print(f"  health  peak {r['peak_in_flight']} in flight, "
+              f"{r['preemptions']} preemptions{low}")
+    if r.get("n_errors"):
+        print(f"  ERRORS  {r['n_errors']} failed requests "
+              f"(first: {r['errors'][0]})")
+
+
+# -- HTTP load mode ----------------------------------------------------------
+#
+# The same reporting over the frontend: requests go through
+# POST /v1/generate (optionally SSE-streamed) against a live
+# FrontendServer, concurrency comes from client threads, and TTFT is
+# stamped at the first streamed token — the number an actual network
+# client would see.
+
+
+def parse_sse(raw: bytes) -> List[Tuple[str, dict]]:
+    """Parse a Server-Sent-Events body -> [(event, data), ...]
+    ("message" for bare data events)."""
+    events = []
+    for block in raw.decode().split("\n\n"):
+        name, data = "message", []
+        for line in block.strip().splitlines():
+            if line.startswith("event:"):
+                name = line[6:].strip()
+            elif line.startswith("data:"):
+                data.append(line[5:].strip())
+        if data:
+            events.append((name, json.loads("\n".join(data))))
+    return events
+
+
+def http_generate(url: str, tokens, max_new: int,
+                  stream: bool = False, timeout: float = 120.0) -> dict:
+    """One POST /v1/generate; -> {"tokens": [...], "ttft": s|None,
+    "latency": s, ...completion fields}.
+
+    stream=True reads the SSE feed incrementally and stamps ttft at
+    the first token event, asserting per-token ids agree with the
+    terminal done event's full sequence.
+    """
+    u = urlsplit(url)
+    body = json.dumps({"tokens": [int(t) for t in np.reshape(tokens, -1)],
+                       "max_new": int(max_new),
+                       "stream": bool(stream)}).encode()
+    conn = HTTPConnection(u.hostname, u.port, timeout=timeout)
+    try:
+        t0 = time.time()
+        conn.request("POST", "/v1/generate", body=body,
+                     headers={"Content-Type": "application/json"})
+        resp = conn.getresponse()
+        if resp.status != 200:
+            err = resp.read().decode()
+            raise RuntimeError(f"HTTP {resp.status}: {err}")
+        if not stream:
+            out = json.loads(resp.read())
+            out["ttft"] = None
+            out["latency"] = time.time() - t0
+            return out
+        # SSE: read incrementally so the first-token stamp is real
+        buf, ttft, streamed = b"", None, []
+        final = None
+        while True:
+            chunk = resp.read1(65536)
+            if chunk:
+                buf += chunk
+            while b"\n\n" in buf:
+                block, buf = buf.split(b"\n\n", 1)
+                for name, data in parse_sse(block + b"\n\n"):
+                    if name == "error":
+                        raise RuntimeError(f"SSE error: {data['error']}")
+                    if name == "done":
+                        final = data
+                    else:
+                        if ttft is None:
+                            ttft = time.time() - t0
+                        streamed.append(int(data["token"]))
+            if final is not None:
+                break
+            if not chunk:
+                raise RuntimeError("SSE stream closed before done event")
+        if streamed != final["tokens"]:
+            raise RuntimeError(
+                f"streamed tokens {streamed} != final {final['tokens']}")
+        final["ttft"] = ttft
+        final["latency"] = time.time() - t0
+        return final
+    finally:
+        conn.close()
+
+
+def http_get_json(url: str, path: str, timeout: float = 10.0) -> dict:
+    with urllib.request.urlopen(url + path, timeout=timeout) as r:
+        return json.loads(r.read())
+
+
+def run_http_load(url: str, requests, concurrency: int = 8,
+                  stream: bool = True) -> dict:
+    """Drive `requests` against a live frontend from `concurrency`
+    client threads; -> the same report dict run_load builds (fleet
+    shape read from /healthz; scheduler health from /metrics is left
+    to the server logs)."""
+    results: List[Optional[dict]] = [None] * len(requests)
+    errors: List[Tuple[int, str]] = []
+    nxt = {"i": 0}
+    lock = threading.Lock()
+
+    def worker():
+        while True:
+            with lock:
+                i = nxt["i"]
+                if i >= len(requests):
+                    return
+                nxt["i"] += 1
+            toks, max_new = requests[i]
+            try:
+                results[i] = http_generate(url, toks, max_new,
+                                           stream=stream)
+            except Exception as e:  # noqa: BLE001 — a failed request
+                # must become a reported error, not a dead worker that
+                # silently halves concurrency and crashes the report
+                with lock:
+                    errors.append((i, repr(e)))
+
+    t0 = time.time()
+    threads = [threading.Thread(target=worker, daemon=True)
+               for _ in range(max(1, concurrency))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.time() - t0
+
+    health = http_get_json(url, "/healthz")
+    reps = health.get("replicas", [])
+    done = [r for r in results if r is not None]
+    gen_tokens = sum(r["n_gen"] for r in done)
+    ttft = [r["ttft"] for r in done if r["ttft"] is not None]
+    lat = [r["latency"] for r in done]
+    return {
+        "n_requests": len(done),
+        "n_errors": len(errors),
+        "errors": errors[:8],
+        "members": reps[0]["members"] if reps else 0,
+        "slots": sum(r["n_slots"] for r in reps),
+        "n_replicas": len(reps),
+        "gen_tokens": gen_tokens,
+        "wall_s": wall,
+        "tok_s": gen_tokens / max(wall, 1e-9),
+        "ttft_p50_ms": percentile(ttft, 50) * 1e3,
+        "ttft_p95_ms": percentile(ttft, 95) * 1e3,
+        "ttft_p99_ms": percentile(ttft, 99) * 1e3,
+        "latency_p50_ms": percentile(lat, 50) * 1e3,
+        "latency_p95_ms": percentile(lat, 95) * 1e3,
+        "latency_p99_ms": percentile(lat, 99) * 1e3,
+        "cache_mb": 0.0,  # engine-side; see /metrics
+        "page_stats": {},
+    }

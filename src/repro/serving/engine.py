@@ -191,6 +191,7 @@ class EnsembleEngine:
         self.state = self._blank_state(seed)
         self.steps_run = 0
         self.prefills_run = 0
+        self.swaps_done = 0
         if mesh is not None:
             self.quorum = jax.device_put(
                 self.quorum, NamedSharding(mesh, P(shd.MEMBER_AXIS)))
@@ -506,7 +507,8 @@ class EnsembleEngine:
         a = self.allocator
         return {"n_pages": a.n_pages, "page_size": a.page_size,
                 "free_pages": a.free_pages, "used_pages": a.used_pages,
-                "pages_per_slot": a.pages_per_slot}
+                "pages_per_slot": a.pages_per_slot,
+                "low_water_pages": a.low_water}
 
     def step(self) -> SlotState:
         """Advance every slot one token (one compiled program).
@@ -706,6 +708,54 @@ class EnsembleEngine:
                                       jnp.asarray(labels[:, t]), self.quorum)
             m_tot, e_tot = m_tot + m, e_tot + e
         return m_tot / T, e_tot / T
+
+    def swap_params(self, new_stacked_params) -> None:
+        """Install a new member stack between iterations — model
+        hot-swap, the serving end of the paper's train -> compress ->
+        serve loop (every aggregation round publishes a new distilled
+        global model; the fleet must pick it up without restarting).
+
+        The new pytree must match the live one exactly (treedef,
+        leaf shapes, dtypes): the jitted decode/prefill/score kernels
+        key their caches on those, so a conforming swap reuses the SAME
+        compiled programs — zero recompiles, gated by
+        `benchmarks/serving_bench.py --frontend`.  Under a mesh the new
+        stack is re-sharded to the live member placement
+        (`member_pspecs`), so the device-side layout is also unchanged.
+
+        The KV pool, page table, and slot state are NOT touched:
+        in-flight requests keep decoding through the swap (their
+        remaining tokens come from the new weights — drain the slots
+        first, e.g. `frontend.Router.rollout`, when each request must
+        be served end-to-end by one model version).  K itself is fixed;
+        grow/shrink the stack with `checkpoint.store.reshard_members`
+        BEFORE swapping.
+        """
+        old_leaves, old_def = jax.tree_util.tree_flatten(self.params)
+        new_leaves, new_def = jax.tree_util.tree_flatten(new_stacked_params)
+        if old_def != new_def:
+            raise ValueError(
+                f"swap_params: new param tree structure {new_def} does not "
+                f"match the live engine's {old_def}")
+        for i, (o, n) in enumerate(zip(old_leaves, new_leaves)):
+            if o.shape != n.shape or o.dtype != n.dtype:
+                raise ValueError(
+                    f"swap_params: leaf {i} is {n.shape}/{n.dtype}, live "
+                    f"engine has {o.shape}/{o.dtype} — a mismatched stack "
+                    f"would recompile every kernel (use "
+                    f"checkpoint.store.reshard_members to change K first)")
+        if self.mesh is None:
+            self.params = jax.tree.map(jnp.asarray, new_stacked_params)
+        else:
+            self.params = jax.device_put(
+                new_stacked_params,
+                shd.make_shardings(self.mesh,
+                                   shd.member_pspecs(new_stacked_params)))
+        if self.cfg.enc_dec:
+            # the stub encoder context is a function of the params;
+            # recompute it so decode reads the new model's encodings
+            self.cache["enc"] = self._encode_stub(self.n_slots)
+        self.swaps_done += 1
 
     def set_quorum(self, mask: Sequence[float]):
         """0/1 liveness per member; renormalized on-device, no recompile.

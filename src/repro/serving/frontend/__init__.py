@@ -1,0 +1,16 @@
+"""repro.serving.frontend — the network tier over the ensemble engine.
+
+Three layers, each usable alone:
+
+  - `scheduler.Scheduler.serve_forever` (one module down): the online
+    admit/prefill/decode/harvest loop with streaming callbacks;
+  - `frontend.router.Router`: N engine replicas behind one least-loaded
+    submit() door, with per-replica draining and the zero-downtime
+    drain -> swap_params -> rejoin rollout;
+  - `frontend.server.FrontendServer`: the stdlib HTTP/SSE face
+    (POST /v1/generate, GET /metrics, GET /healthz, graceful drain).
+"""
+from repro.serving.frontend.router import Replica, Router
+from repro.serving.frontend.server import FrontendServer, serve_frontend
+
+__all__ = ["Replica", "Router", "FrontendServer", "serve_frontend"]

@@ -1,0 +1,325 @@
+"""Multi-replica router: N engine replicas behind one submit() door.
+
+One EnsembleEngine is bounded by its slot pool (and, paged, its page
+pool).  The router scales PAST one engine by running N independent
+replicas — each with its own mesh placement, cache pool, and online
+scheduler loop on its own thread — and routing every request to the
+least-loaded live replica.  Replicas never talk to each other: an
+EC-DNN global model is K independent members (paper Eqn 6), so a
+replica is a complete serving unit and capacity scales by just adding
+more — the same embarrassing parallelism the member axis gives inside
+one engine, applied one level up.
+
+Routing policy (`Router.submit`): among non-draining replicas, pick
+the one with the fewest in-flight requests (live slots + its own
+queue), breaking ties toward the most free pages (from
+`EnsembleEngine.page_stats`; contiguous engines tie on free slots).
+All policy is host-side and O(N) per request.
+
+Draining (`Router.drain`): a draining replica accepts no new routes
+but keeps ticking until its queue and slots empty — in-flight requests
+finish normally.  That is the unit step of the zero-downtime rollout:
+
+    rollout(new_stacked_params):
+        for each replica, one at a time:
+            drain -> wait idle -> engine.swap_params -> rejoin
+
+At most one replica is out of rotation at any moment, every request is
+served end-to-end by exactly one model version, and nothing is dropped
+— a CheckpointManager round directory published by runtime/trainer.py
+reaches a serving fleet mid-traffic this way (launch/serve.py wires
+the flag).  With a single replica the router parks incoming requests
+in a backlog while it drains and flushes them to the swapped replica
+on rejoin: still zero drops, at the cost of queueing delay.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import List, Optional, Sequence, Tuple
+
+from repro.serving.engine import EnsembleEngine
+from repro.serving.scheduler import (Completion, DoneCallback, Scheduler,
+                                     TokenCallback)
+
+
+class Replica:
+    """One engine + its online scheduler loop, on its own thread."""
+
+    def __init__(self, name: str, engine: EnsembleEngine,
+                 prefill_budget: Optional[int] = None):
+        self.name = name
+        self.engine = engine
+        # never retain completions: a replica loop lives for the
+        # process lifetime and delivers results via on_done — keeping
+        # every token array in .completions would leak without bound
+        self.scheduler = Scheduler(engine, prefill_budget=prefill_budget,
+                                   retain_completions=False)
+        self.draining = False
+        self.failed: Optional[str] = None  # loop-thread crash, if any
+        self._thread: Optional[threading.Thread] = None
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def _loop(self):
+        """serve_forever with a crash latch: an exception out of tick()
+        (engine bug, transient XLA failure) must take this replica OUT
+        of rotation — a silently dead loop would keep receiving routes
+        and hang every handler parked on its callbacks."""
+        try:
+            self.scheduler.serve_forever()
+        except BaseException as e:  # noqa: BLE001 — latch, then re-raise
+            self.failed = repr(e)
+            self.draining = True
+            raise
+
+    def start(self):
+        if self._thread is not None and self._thread.is_alive():
+            return
+        self.scheduler.clear_stop()  # re-arm BEFORE the thread exists:
+        # a stop() from here on must win the race, not be erased
+        self._thread = threading.Thread(
+            target=self._loop, name=f"replica-{self.name}", daemon=True)
+        self._thread.start()
+
+    def stop(self, timeout: float = 30.0):
+        self.scheduler.stop()
+        if self._thread is not None:
+            self._thread.join(timeout)
+            self._thread = None
+
+    # -- load telemetry -----------------------------------------------------
+
+    @property
+    def in_flight(self) -> int:
+        s = self.scheduler
+        return s.live_slots + len(s.pending)
+
+    @property
+    def idle(self) -> bool:
+        return not self.scheduler.has_work
+
+    @property
+    def routable(self) -> bool:
+        """Eligible for new requests: not draining, not crashed, and
+        its loop thread is actually running."""
+        return (not self.draining and self.failed is None
+                and self._thread is not None and self._thread.is_alive())
+
+    def load_key(self) -> Tuple[int, int]:
+        """Least-loaded sort key: fewest in-flight first, then the
+        scarcer capacity signal — free pages on a paged engine, free
+        slots otherwise (both negated: more free sorts first)."""
+        e = self.engine
+        free = (e.free_pages if e.paged
+                else e.n_slots - self.scheduler.live_slots)
+        return (self.in_flight, -free)
+
+    def stats(self) -> dict:
+        s, e = self.scheduler, self.engine
+        return {
+            "name": self.name,
+            "draining": self.draining,
+            "failed": self.failed,
+            "live_slots": s.live_slots,
+            "pending": len(s.pending),
+            "completed": s.n_completed,
+            "preemptions": s.preemptions,
+            "peak_in_flight": s.peak_in_flight,
+            "streamed_tokens": s.n_streamed,
+            "steps_run": e.steps_run,
+            "prefills_run": e.prefills_run,
+            "swaps_done": e.swaps_done,
+            "members": e.n_members,
+            "n_slots": e.n_slots,
+            "cache_bytes_per_device": e.cache_bytes(),
+            "page_stats": e.page_stats(),
+        }
+
+
+class Router:
+    """Fan N replicas behind one thread-safe submit()/stream door."""
+
+    def __init__(self, replicas: Sequence[Replica]):
+        if not replicas:
+            raise ValueError("router needs at least one replica")
+        names = [r.name for r in replicas]
+        if len(set(names)) != len(names):
+            raise ValueError(f"replica names must be unique: {names}")
+        self.replicas: List[Replica] = list(replicas)
+        self._by_name = {r.name: r for r in self.replicas}
+        self._lock = threading.Lock()
+        # requests that arrived while every replica was draining park
+        # here and flush on the next rejoin — drained, never dropped
+        self._backlog: deque = deque()
+        self.n_submitted = 0
+        self.n_completed = 0
+        self.n_rejected = 0
+        self._started = False
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self):
+        for r in self.replicas:
+            r.start()
+        self._started = True
+
+    def stop(self, drain: bool = True, timeout: float = 60.0):
+        """Stop the fleet; drain=True serves out every queued and
+        in-flight request first (graceful shutdown), drain=False stops
+        after the current tick (in-flight state is abandoned)."""
+        if drain:
+            self.wait_idle(timeout=timeout)
+        for r in self.replicas:
+            r.stop()
+        self._started = False
+
+    # -- routing ------------------------------------------------------------
+
+    def _route(self) -> Optional[Replica]:
+        live = [r for r in self.replicas if r.routable]
+        if not live:
+            return None
+        return min(live, key=Replica.load_key)
+
+    def submit(self, tokens, max_new: int,
+               on_token: Optional[TokenCallback] = None,
+               on_done: Optional[DoneCallback] = None) -> Tuple[str, int]:
+        """Route one request to the least-loaded live replica;
+        -> (replica name, rid on that replica).  Thread-safe.
+
+        When every replica is draining (single-replica rollout) the
+        request parks in the router backlog and is assigned on the next
+        rejoin — the returned name is then "backlog" and the rid is a
+        router-level ticket (on_done/on_token still fire normally once
+        a replica picks it up).
+        """
+        with self._lock:
+            rep = self._route()
+            if rep is None:
+                # validate at the door even while parked, so a bad
+                # request is rejected now, not after the rollout
+                self.replicas[0].engine.validate_request(tokens, max_new)
+                ticket = self.n_submitted
+                self.n_submitted += 1
+                done = self._count_done(on_done)
+                self._backlog.append((tokens, max_new, on_token, done))
+                return ("backlog", ticket)
+            # count only after validation inside submit() passes —
+            # door-rejected requests must not inflate the counter (the
+            # backlog branch above validates before ticketing too)
+            rid = rep.scheduler.submit(tokens, max_new, on_token=on_token,
+                                       on_done=self._count_done(on_done))
+            self.n_submitted += 1
+            return (rep.name, rid)
+
+    def count_rejected(self):
+        """Door-rejection counter bump, under the router lock (handler
+        threads race on it)."""
+        with self._lock:
+            self.n_rejected += 1
+
+    def replica_dead(self, name: str) -> bool:
+        """Can `name` still deliver callbacks?  True once its loop
+        thread has crashed or exited — waiters must give up instead of
+        parking forever.  "backlog" tickets are router-owned (False)."""
+        rep = self._by_name.get(name)
+        if rep is None:
+            return False
+        t = rep._thread
+        return rep.failed is not None or (t is not None and not t.is_alive())
+
+    def _count_done(self, on_done: Optional[DoneCallback]) -> DoneCallback:
+        def counting(comp: Completion):
+            with self._lock:  # loop threads race on the counter
+                self.n_completed += 1
+            if on_done is not None:
+                on_done(comp)
+        return counting
+
+    def _flush_backlog_locked(self):
+        while self._backlog:
+            rep = self._route()
+            if rep is None:
+                return
+            tokens, max_new, on_token, done = self._backlog.popleft()
+            rep.scheduler.submit(tokens, max_new, on_token=on_token,
+                                 on_done=done)
+
+    # -- draining + rollout -------------------------------------------------
+
+    def drain(self, name: str):
+        """Take one replica out of rotation; its in-flight and queued
+        requests keep running to completion.  Taken under the router
+        lock so a submit that already routed here finishes enqueueing
+        first — wait_drained then cannot observe a falsely-idle
+        replica."""
+        with self._lock:
+            self._by_name[name].draining = True
+
+    def rejoin(self, name: str):
+        """Put a drained replica back in rotation and hand it any
+        backlogged requests."""
+        with self._lock:
+            self._by_name[name].draining = False
+            self._flush_backlog_locked()
+
+    def wait_drained(self, name: str, timeout: float = 120.0,
+                     poll: float = 0.005) -> bool:
+        """Block until a draining replica has no queued or live work."""
+        rep = self._by_name[name]
+        deadline = time.time() + timeout
+        while not rep.idle:
+            if time.time() > deadline:
+                return False
+            time.sleep(poll)
+        return True
+
+    def wait_idle(self, timeout: float = 120.0, poll: float = 0.005) -> bool:
+        """Block until every replica (and the backlog) is quiet."""
+        deadline = time.time() + timeout
+        while (self._backlog
+               or any(not r.idle for r in self.replicas)):
+            if time.time() > deadline:
+                return False
+            time.sleep(poll)
+        return True
+
+    def rollout(self, new_stacked_params, timeout: float = 120.0):
+        """Zero-downtime model rollout: drain -> swap -> rejoin, one
+        replica at a time, under live traffic.
+
+        Every request is served end-to-end by exactly one model
+        version (the drain barrier guarantees no slot is live at swap
+        time) and none are dropped (the rest of the fleet — or the
+        backlog, for a single replica — absorbs arrivals).  The swap
+        itself reuses the replica's compiled kernels: same shapes, same
+        jitted callables, zero recompiles.
+        """
+        for rep in self.replicas:
+            self.drain(rep.name)
+            try:
+                if not self.wait_drained(rep.name, timeout=timeout):
+                    raise TimeoutError(
+                        f"replica {rep.name} did not drain within "
+                        f"{timeout}s ({rep.in_flight} in flight)")
+                rep.engine.swap_params(new_stacked_params)
+            finally:
+                self.rejoin(rep.name)
+
+    # -- telemetry ----------------------------------------------------------
+
+    def stats(self) -> dict:
+        reps = [r.stats() for r in self.replicas]
+        return {
+            "replicas": reps,
+            "n_replicas": len(reps),
+            "submitted": self.n_submitted,
+            "completed": self.n_completed,
+            "rejected": self.n_rejected,
+            "backlog": len(self._backlog),
+            "live_slots": sum(r["live_slots"] for r in reps),
+            "pending": sum(r["pending"] for r in reps),
+            "streamed_tokens": sum(r["streamed_tokens"] for r in reps),
+        }

@@ -1,0 +1,300 @@
+"""Streaming HTTP frontend over the replica router — stdlib only.
+
+Endpoints (token-id API; tokenizers are out of scope repo-wide):
+
+  POST /v1/generate     body {"tokens": [1,2,3], "max_new": 8,
+                              "stream": false}
+      stream=false -> one JSON document when the request completes:
+          {"tokens": [...], "n_gen": n, "prompt_len": p,
+           "replica": name, "rid": i, "ttft_ms": t, "latency_ms": l}
+      stream=true  -> Server-Sent Events, one event per generated
+          token AS IT IS SAMPLED (the scheduler's harvest phase fires
+          the per-token callback straight into the handler's queue):
+              data: {"index": 0, "token": 1234}
+          then a terminal event carrying the full completion:
+              event: done
+              data: {"tokens": [...], "n_gen": ..., ...}
+  GET /healthz          liveness + per-replica drain state (200, or
+                        503 once shutdown begins)
+  GET /metrics          Prometheus-style text: requests, tokens,
+                        live slots, free pages, preemptions, ...
+
+Built on http.server.ThreadingHTTPServer: one handler thread per
+connection parks on a queue.Queue that the scheduler loop feeds via
+on_token/on_done — the decode path never blocks on a slow client
+beyond queue puts, and the server needs no dependency the repo does
+not already carry.  SSE responses are close-delimited (Connection:
+close) so any HTTP/1.x client can read them without chunked-decoding
+support.
+
+Shutdown (`FrontendServer.shutdown`) is a graceful drain by default:
+stop accepting new connections, serve out every queued and in-flight
+request (handler threads unblock as their completions fire), then stop
+the replica loops.  `/healthz` flips to 503 the moment the drain
+starts so external load balancers stop sending traffic.
+"""
+from __future__ import annotations
+
+import json
+import queue
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Optional
+
+from repro.serving.frontend.router import Router
+
+_DONE = object()  # queue sentinel: completion follows no more tokens
+
+
+def _completion_payload(comp, replica: str, rid: int) -> dict:
+    return {
+        "tokens": [int(t) for t in comp.tokens],
+        "n_gen": int(len(comp.tokens)),
+        "prompt_len": int(comp.prompt_len),
+        "replica": replica,
+        "rid": int(rid),
+        "ttft_ms": round(comp.ttft * 1e3, 3),
+        "latency_ms": round(comp.latency * 1e3, 3),
+    }
+
+
+class _Handler(BaseHTTPRequestHandler):
+    """One instance per request; the server wires .router in."""
+
+    protocol_version = "HTTP/1.1"
+    server_version = "repro-serving"
+
+    # the ThreadingHTTPServer subclass below carries these
+    router: Router
+    frontend: "FrontendServer"
+
+    def log_message(self, fmt, *args):  # quiet by default
+        if self.frontend.verbose:
+            super().log_message(fmt, *args)
+
+    # -- plumbing -----------------------------------------------------------
+
+    def _send_json(self, code: int, payload: dict):
+        body = json.dumps(payload).encode()
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _read_body(self) -> Optional[dict]:
+        try:
+            n = int(self.headers.get("Content-Length", 0))
+            return json.loads(self.rfile.read(n) or b"{}")
+        except (ValueError, json.JSONDecodeError):
+            return None
+
+    # -- routes -------------------------------------------------------------
+
+    def do_GET(self):
+        if self.path == "/healthz":
+            stats = self.router.stats()
+            alive = not self.frontend.draining
+            payload = {
+                "ok": alive,
+                "draining": self.frontend.draining,
+                "replicas": [
+                    {"name": r["name"], "draining": r["draining"],
+                     "failed": r["failed"],
+                     "live_slots": r["live_slots"], "pending": r["pending"],
+                     "members": r["members"], "n_slots": r["n_slots"],
+                     "swaps_done": r["swaps_done"]}
+                    for r in stats["replicas"]],
+            }
+            self._send_json(200 if alive else 503, payload)
+        elif self.path == "/metrics":
+            body = self.frontend.metrics_text().encode()
+            self.send_response(200)
+            self.send_header("Content-Type", "text/plain; version=0.0.4")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+        else:
+            self._send_json(404, {"error": f"no route {self.path}"})
+
+    def do_POST(self):
+        if self.path != "/v1/generate":
+            self._send_json(404, {"error": f"no route {self.path}"})
+            return
+        if self.frontend.draining:
+            self._send_json(503, {"error": "server is draining"})
+            return
+        body = self._read_body()
+        if body is None:
+            self._send_json(400, {"error": "body must be JSON"})
+            return
+        tokens = body.get("tokens")
+        max_new = body.get("max_new")
+        if not isinstance(tokens, list) or not isinstance(max_new, int):
+            self._send_json(400, {"error": "need tokens: [int] and "
+                                           "max_new: int"})
+            return
+        stream = bool(body.get("stream", False))
+        q: "queue.Queue" = queue.Queue()
+        try:
+            replica, rid = self.router.submit(
+                tokens, max_new,
+                on_token=(lambda _rid, i, tok: q.put((i, tok)))
+                if stream else None,
+                on_done=lambda comp: q.put((_DONE, comp)))
+        except ValueError as e:  # validate_request rejected at the door
+            self.router.count_rejected()
+            self._send_json(400, {"error": str(e)})
+            return
+
+        def next_event():
+            """q.get with a liveness poll: if the replica's loop thread
+            dies (crash latch) this request's callbacks will never
+            fire — answer an error instead of parking forever."""
+            while True:
+                try:
+                    return q.get(timeout=1.0)
+                except queue.Empty:
+                    if self.router.replica_dead(replica):
+                        raise RuntimeError(
+                            f"replica {replica} failed mid-request")
+
+        if not stream:
+            try:
+                item = next_event()
+                while item[0] is not _DONE:  # only done without stream
+                    item = next_event()
+            except RuntimeError as e:
+                self._send_json(500, {"error": str(e)})
+                return
+            self._send_json(200, _completion_payload(item[1], replica, rid))
+            return
+
+        # SSE: close-delimited so plain HTTP/1.x clients can read it
+        self.send_response(200)
+        self.send_header("Content-Type", "text/event-stream")
+        self.send_header("Cache-Control", "no-cache")
+        self.send_header("Connection", "close")
+        self.end_headers()
+        self.close_connection = True
+        try:
+            while True:
+                try:
+                    kind, val = next_event()
+                except RuntimeError as e:
+                    self.wfile.write(
+                        b"event: error\ndata: "
+                        + json.dumps({"error": str(e)}).encode() + b"\n\n")
+                    self.wfile.flush()
+                    return
+                if kind is _DONE:
+                    payload = _completion_payload(val, replica, rid)
+                    self.wfile.write(
+                        b"event: done\ndata: "
+                        + json.dumps(payload).encode() + b"\n\n")
+                    self.wfile.flush()
+                    return
+                self.wfile.write(
+                    b"data: " + json.dumps(
+                        {"index": int(kind), "token": int(val)}).encode()
+                    + b"\n\n")
+                self.wfile.flush()
+        except (BrokenPipeError, ConnectionResetError):
+            return  # client went away; the request still completes
+
+
+class _Server(ThreadingHTTPServer):
+    daemon_threads = True
+    allow_reuse_address = True
+
+
+class FrontendServer:
+    """HTTP frontend lifecycle: bind -> start -> (serve) -> shutdown.
+
+    port=0 binds an ephemeral port (tests/benchmarks); .port reports
+    the bound one.  start() returns immediately (the accept loop and
+    every replica loop run on daemon threads); shutdown(drain=True)
+    performs the graceful drain described in the module docstring.
+    """
+
+    def __init__(self, router: Router, host: str = "127.0.0.1",
+                 port: int = 0, verbose: bool = False):
+        self.router = router
+        self.verbose = verbose
+        self.draining = False
+        handler = type("BoundHandler", (_Handler,),
+                       {"router": router, "frontend": self})
+        self.httpd = _Server((host, port), handler)
+        self.host, self.port = self.httpd.server_address[:2]
+        self._thread: Optional[threading.Thread] = None
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def start(self):
+        self.router.start()
+        self._thread = threading.Thread(
+            target=self.httpd.serve_forever, name="frontend-http",
+            kwargs={"poll_interval": 0.05}, daemon=True)
+        self._thread.start()
+
+    def shutdown(self, drain: bool = True, timeout: float = 120.0):
+        """Graceful by default: flip /healthz to 503 and refuse new
+        generate() calls, serve out everything in flight, then stop
+        the accept loop and the replica loops."""
+        self.draining = True
+        if drain:
+            self.router.wait_idle(timeout=timeout)
+        self.httpd.shutdown()
+        self.httpd.server_close()
+        if self._thread is not None:
+            self._thread.join(timeout=10.0)
+            self._thread = None
+        self.router.stop(drain=drain, timeout=timeout)
+
+    def metrics_text(self) -> str:
+        """Prometheus-style exposition of fleet + per-replica health."""
+        s = self.router.stats()
+        lines = [
+            "# TYPE repro_serving_requests_submitted counter",
+            f"repro_serving_requests_submitted {s['submitted']}",
+            "# TYPE repro_serving_requests_completed counter",
+            f"repro_serving_requests_completed {s['completed']}",
+            "# TYPE repro_serving_requests_rejected counter",
+            f"repro_serving_requests_rejected {s['rejected']}",
+            "# TYPE repro_serving_backlog gauge",
+            f"repro_serving_backlog {s['backlog']}",
+            "# TYPE repro_serving_streamed_tokens counter",
+            f"repro_serving_streamed_tokens {s['streamed_tokens']}",
+        ]
+        for r in s["replicas"]:
+            lab = f'{{replica="{r["name"]}"}}'
+            lines += [
+                f"repro_serving_live_slots{lab} {r['live_slots']}",
+                f"repro_serving_pending{lab} {r['pending']}",
+                f"repro_serving_peak_in_flight{lab} {r['peak_in_flight']}",
+                f"repro_serving_preemptions{lab} {r['preemptions']}",
+                f"repro_serving_steps_run{lab} {r['steps_run']}",
+                f"repro_serving_swaps_done{lab} {r['swaps_done']}",
+                f"repro_serving_draining{lab} {int(r['draining'])}",
+                f"repro_serving_cache_bytes_per_device{lab} "
+                f"{r['cache_bytes_per_device']}",
+            ]
+            ps = r["page_stats"]
+            if ps:
+                lines += [
+                    f"repro_serving_free_pages{lab} {ps['free_pages']}",
+                    f"repro_serving_low_water_pages{lab} "
+                    f"{ps['low_water_pages']}",
+                ]
+        return "\n".join(lines) + "\n"
+
+
+def serve_frontend(router: Router, host: str = "127.0.0.1",
+                   port: int = 8000, verbose: bool = True) -> FrontendServer:
+    """Convenience: build + start a FrontendServer; caller owns
+    shutdown()."""
+    srv = FrontendServer(router, host=host, port=port, verbose=verbose)
+    srv.start()
+    return srv

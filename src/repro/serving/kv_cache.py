@@ -247,6 +247,10 @@ class PageAllocator:
         self._chain: List[List[int]] = [[] for _ in range(self.n_slots)]
         self._dirty = True
         self._table: Optional[np.ndarray] = None
+        # fewest free pages ever observed after an alloc — how close
+        # the pool came to preemption over its lifetime (capacity
+        # telemetry; client.print_report surfaces it)
+        self.low_water = self.n_pages
 
     @property
     def free_pages(self) -> int:
@@ -283,6 +287,7 @@ class PageAllocator:
         for _ in range(need):
             self._chain[slot].append(self._free.pop())
         self._dirty = True
+        self.low_water = min(self.low_water, len(self._free))
         return True
 
     def release(self, slot: int) -> int:

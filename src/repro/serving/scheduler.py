@@ -1,18 +1,34 @@
 """Continuous batching: a request queue over the engine's slot pool.
 
 The engine decodes a fixed batch of B slots every step; the scheduler
-keeps those slots full.  Each loop iteration it (1) admits queued
-requests into free slots, (2) runs one engine decode step for the
-slots already past their prompt, (3) prefills admitted prompts in
-chunks — one compiled multi-token program per selected slot (slot
-index traced, so all slots share the program), under a per-iteration
-prompt-token budget so one long prompt cannot starve decode latency
-for in-flight slots — and (4) harvests slots whose request hit EOS or
-its generation budget, freeing them for the next admission.  Requests of different prompt/output lengths
-therefore interleave in the same decode batch instead of padding to a
-common length — the classic continuous-batching win — and a newly
-admitted request reaches its first token after ceil(prompt/chunk)
-prefill programs instead of `prompt` engine steps.
+keeps those slots full.  Each loop iteration — one `tick()` — it
+(1) admits queued requests into free slots, (2) runs one engine decode
+step for the slots already past their prompt, (3) prefills admitted
+prompts in chunks — one compiled multi-token program per selected slot
+(slot index traced, so all slots share the program), under a
+per-iteration prompt-token budget so one long prompt cannot starve
+decode latency for in-flight slots — and (4) harvests slots whose
+request hit EOS or its generation budget, freeing them for the next
+admission.  Requests of different prompt/output lengths therefore
+interleave in the same decode batch instead of padding to a common
+length — the classic continuous-batching win — and a newly admitted
+request reaches its first token after ceil(prompt/chunk) prefill
+programs instead of `prompt` engine steps.
+
+Two drivers share that iteration:
+
+  - `run()` — the batch API: drive tick() until the queue drains and
+    every slot is idle, then return {rid: Completion}.  This is the
+    original blocking loop, byte for byte — tick() is the refactored
+    body, not a new policy.
+  - `serve_forever()` — the online API: a long-lived loop for a server
+    frontend.  submit() is thread-safe, so requests can arrive from
+    HTTP handler threads WHILE decode is running; each request may
+    carry a per-token `on_token` callback, so tokens stream out of the
+    harvest phase as they are sampled instead of only at completion;
+    and when no slot is live the loop parks on an event (woken by the
+    next submit) instead of spinning — an idle server burns no CPU
+    dispatching no-op steps.
 
 All policy lives host-side in this module; the engine's prefill and
 decode kernels each stay a single compiled program.  Admission is
@@ -35,19 +51,37 @@ runs dry mid-decode the YOUNGEST in-flight request is preempted back
 to the front of the queue (_ensure_decode_pages) — the oldest request
 never loses its pages, so completion order stays FIFO, nothing
 starves, and a preempted request simply regenerates on re-admission
-(bit-identical under greedy sampling).
+(bit-identical under greedy sampling).  A preempted STREAMING request
+does not re-emit: the per-request streamed counter survives
+preemption, so re-generated tokens are skipped until the stream's
+high-water mark and on_token sees each index exactly once (exactly the
+greedy-regeneration contract; with temperature > 0 a preempted stream
+may diverge from its already-emitted prefix — prefer temperature=0 for
+streaming under memory pressure).
+
+Threading contract: ONE thread drives tick()/run()/serve_forever();
+any number of threads may call submit()/stop().  Slot state,
+completions, and the engine are touched only by the driving thread;
+callbacks (on_token/on_done) fire on the driving thread, so they must
+be quick and non-blocking (push to a queue, set an event).
 """
 from __future__ import annotations
 
+import threading
 import time
 from collections import deque
-from dataclasses import dataclass
-from typing import Dict, Optional
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
 
 import jax
 import numpy as np
 
 from repro.serving.engine import EnsembleEngine
+
+# on_token(rid, index, token_id) — fired per generated token, in order
+TokenCallback = Callable[[int, int, int], None]
+# on_done(completion) — fired once, after the last on_token
+DoneCallback = Callable[["Completion"], None]
 
 
 @dataclass
@@ -56,6 +90,8 @@ class Request:
     tokens: np.ndarray
     max_new: int
     submit_t: float
+    on_token: Optional[TokenCallback] = field(default=None, repr=False)
+    on_done: Optional[DoneCallback] = field(default=None, repr=False)
 
 
 @dataclass
@@ -92,42 +128,76 @@ class Scheduler:
     """FIFO continuous-batching scheduler over one EnsembleEngine.
 
     submit() queues a request (validated against the engine's budgets
-    at the door); run() drives admit -> decode -> prefill -> harvest
-    until the queue drains, returning {rid: Completion}.  Works
-    unchanged over any engine placement (single-device or mesh) and
-    any prefill_chunk, including the 0 reference baseline.
+    at the door; thread-safe); one tick() runs a single
+    admit -> decode -> prefill -> harvest iteration.  run() drives
+    tick() until the queue drains, returning {rid: Completion} — the
+    batch API.  serve_forever() drives tick() until stop(), idling on
+    an event while no work is live — the online API a server frontend
+    mounts.  Both work unchanged over any engine placement
+    (single-device or mesh) and any prefill_chunk, including the 0
+    reference baseline.
 
     prefill_budget caps how many prompt tokens may enter prefill
     programs per loop iteration (default: 2 chunks).  One chunk is
     always allowed, so a single over-budget prompt still progresses.
+
+    retain_completions=False drops each Completion after its on_done
+    fires instead of keeping it in .completions — REQUIRED for a
+    long-lived serve_forever loop, where retaining every token array
+    forever is an unbounded leak.  The batch run() contract (read
+    results out of .completions) needs the default True.
     """
 
     def __init__(self, engine: EnsembleEngine,
-                 prefill_budget: Optional[int] = None):
+                 prefill_budget: Optional[int] = None,
+                 retain_completions: bool = True):
         self.engine = engine
         self.prefill_budget = (2 * engine.prefill_chunk
                                if prefill_budget is None else prefill_budget)
+        self.retain_completions = retain_completions
         self.pending: deque = deque()
         self.slots: list = [None] * engine.n_slots  # Optional[_SlotMeta]
         self.completions: Dict[int, Completion] = {}
+        self.n_completed = 0  # lifetime count (survives non-retention)
         self._next_rid = 0
         self._to_release: list = []
         self.preemptions = 0     # paged: decode-time evictions to queue
         self.peak_in_flight = 0  # max concurrently admitted requests
+        self.n_streamed = 0      # tokens delivered through on_token
+        # per-rid stream high-water mark: survives preemption so a
+        # re-generated (greedy-identical) prefix is never re-emitted
+        self._streamed: Dict[int, int] = {}
+        # submit() may be called from any thread while ONE loop thread
+        # drives tick(); the lock guards rid allocation + enqueue, the
+        # event wakes an idle serve_forever out of its park
+        self._lock = threading.Lock()
+        self._wake = threading.Event()
+        self._stop = threading.Event()
 
     # -- submission ---------------------------------------------------------
 
-    def submit(self, tokens, max_new: int) -> int:
+    def submit(self, tokens, max_new: int,
+               on_token: Optional[TokenCallback] = None,
+               on_done: Optional[DoneCallback] = None) -> int:
         """Queue a request; returns its id (keyed in .completions).
 
         Validates against the engine's budgets HERE so one oversized
-        request is rejected at the door instead of crashing run() and
-        taking every in-flight request down with it.
+        request is rejected at the door instead of crashing the loop
+        and taking every in-flight request down with it.  Thread-safe:
+        HTTP handler threads submit while serve_forever decodes.
+
+        on_token(rid, index, token_id) streams each generated token
+        from the harvest that first observes it; on_done(completion)
+        fires once after the last token.  Both run on the loop thread —
+        keep them non-blocking.
         """
         t = self.engine.validate_request(tokens, max_new)
-        rid = self._next_rid
-        self._next_rid += 1
-        self.pending.append(Request(rid, t, int(max_new), time.time()))
+        with self._lock:
+            rid = self._next_rid
+            self._next_rid += 1
+            self.pending.append(Request(rid, t, int(max_new), time.time(),
+                                        on_token=on_token, on_done=on_done))
+        self._wake.set()
         return rid
 
     # -- scheduling loop ----------------------------------------------------
@@ -164,8 +234,7 @@ class Scheduler:
         if admits or self._to_release:
             self.engine.update_slots(release=self._to_release, admits=admits)
             self._to_release = []
-        self.peak_in_flight = max(
-            self.peak_in_flight, sum(m is not None for m in self.slots))
+        self.peak_in_flight = max(self.peak_in_flight, self.live_slots)
 
     def _ensure_decode_pages(self):
         """Grow decoding slots' page chains before the step; when the
@@ -196,13 +265,13 @@ class Scheduler:
             self.pending.appendleft(meta.req)
             self.preemptions += 1
 
-    def _run_prefill(self):
+    def _run_prefill(self) -> int:
         """Spend the iteration's prefill budget in admission (FIFO)
-        order — one chunk program per selected slot."""
+        order — one chunk program per selected slot.  -> programs run."""
         chunk = self.engine.prefill_chunk
         if chunk <= 0:
-            return
-        spent = 0
+            return 0
+        spent = ran = 0
         waiting = sorted(
             (b for b, m in enumerate(self.slots)
              if m is not None and m.prefill_left > 0),
@@ -214,11 +283,25 @@ class Scheduler:
                 break  # over budget; first selection always proceeds
             self.engine.prefill(b)
             spent += take
+            ran += 1
             meta.prefill_left -= take
+        return ran
 
     def _decode_ready(self) -> bool:
         return any(m is not None and m.prefill_left == 0
                    for m in self.slots)
+
+    def _stream(self, meta: _SlotMeta, n_gen: int, out_row: np.ndarray):
+        """Emit tokens [high-water, n_gen) of one live slot through the
+        request's on_token, in order.  The per-rid counter survives
+        preemption, so a re-generated prefix is skipped, not re-sent."""
+        req = meta.req
+        seen = self._streamed.get(req.rid, 0)
+        for i in range(seen, int(n_gen)):
+            req.on_token(req.rid, i, int(out_row[i]))
+        if n_gen > seen:
+            self._streamed[req.rid] = int(n_gen)
+            self.n_streamed += int(n_gen) - seen
 
     def _harvest(self):
         st = self.engine.state
@@ -231,34 +314,108 @@ class Scheduler:
                 continue
             if meta.first_token_t is None and n_gen[b] > 0:
                 meta.first_token_t = now
+            if meta.req.on_token is not None and n_gen[b] > 0:
+                self._stream(meta, n_gen[b], out[b])
             if done[b]:
                 req = meta.req
-                self.completions[req.rid] = Completion(
+                comp = Completion(
                     rid=req.rid,
                     tokens=out[b, :n_gen[b]].copy(),
                     prompt_len=len(req.tokens),
                     submit_t=req.submit_t, admit_t=meta.admit_t,
                     first_token_t=meta.first_token_t, finish_t=now)
+                if self.retain_completions:
+                    self.completions[req.rid] = comp
+                self.n_completed += 1
                 self.slots[b] = None
                 self._to_release.append(b)
+                self._streamed.pop(req.rid, None)
+                if req.on_done is not None:
+                    req.on_done(comp)
+
+    # -- drivers ------------------------------------------------------------
+
+    @property
+    def live_slots(self) -> int:
+        """Slots currently holding an admitted request."""
+        return sum(m is not None for m in self.slots)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.pending) or self.live_slots > 0
+
+    def _flush_release(self):
+        """Return harvested slots' pages/slots without waiting for the
+        next admission to batch the dispatch — an idle or draining
+        server must not sit on freed capacity."""
+        if self._to_release:
+            self.engine.update_slots(release=self._to_release)
+            self._to_release = []
+
+    def tick(self) -> bool:
+        """One admit -> decode -> prefill -> harvest iteration — the
+        body run() always looped over, now reentrant so a long-lived
+        server loop can interleave it with submits from other threads.
+        Returns whether any engine program was dispatched (False means
+        the caller may idle).
+        """
+        self._fill_slots()
+        stepped = False
+        if self._decode_ready():  # skip decode while all mid-prompt
+            self._ensure_decode_pages()  # paged: grow or preempt
+            if self._decode_ready():     # preemption may empty the set
+                self.engine.step()
+                stepped = True
+        prefilled = self._run_prefill()
+        self._harvest()
+        return stepped or prefilled > 0
 
     def run(self) -> Dict[int, Completion]:
-        """Drive until the queue drains and every slot is idle.
+        """Drive until the queue drains and every slot is idle — the
+        batch API, a thin wrapper over tick().
 
-        Decode runs BEFORE prefill each iteration: the harvest stamp
+        Within a tick, decode runs BEFORE prefill: the harvest stamp
         then directly follows any first token a prefill program just
         produced, so reported TTFT is not inflated by an unrelated
         decode step dispatched after it.
         """
-        while self.pending or any(m is not None for m in self.slots):
-            self._fill_slots()
-            if self._decode_ready():  # skip decode while all mid-prompt
-                self._ensure_decode_pages()  # paged: grow or preempt
-                if self._decode_ready():     # preemption may empty the set
-                    self.engine.step()
-            self._run_prefill()
-            self._harvest()
-        if self._to_release:
-            self.engine.update_slots(release=self._to_release)
-            self._to_release = []
+        while self.has_work:
+            self.tick()
+        self._flush_release()
         return self.completions
+
+    def serve_forever(self, idle_wait: float = 0.05):
+        """Drive tick() until stop(): the online loop a server frontend
+        runs on its own thread.  While no request is queued or live the
+        loop flushes releases and parks on an event — submit() wakes it
+        — so an idle server dispatches nothing and burns no CPU
+        (idle_wait bounds the park so stop() is always honored).
+
+        The stop latch is NOT cleared here: a stop() that races thread
+        startup must win, not be erased by the loop's first line.  To
+        restart a stopped scheduler, clear the latch first
+        (`clear_stop`) — Replica.start does.
+        """
+        while not self._stop.is_set():
+            if self.has_work:
+                self.tick()
+            else:
+                self._flush_release()
+                self._wake.wait(idle_wait)
+                self._wake.clear()
+        self._flush_release()
+
+    def stop(self):
+        """Ask serve_forever to exit after its current iteration.
+        In-flight slot state is left intact (drain first to finish it:
+        wait for has_work to clear while the loop still runs).  The
+        latch persists: a serve_forever entered AFTER stop() exits
+        immediately, so stopping can never lose the race with a
+        starting loop thread."""
+        self._stop.set()
+        self._wake.set()
+
+    def clear_stop(self):
+        """Re-arm a stopped scheduler so serve_forever runs again.
+        Call strictly BEFORE spawning the new loop thread."""
+        self._stop.clear()

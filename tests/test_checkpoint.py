@@ -28,6 +28,24 @@ def test_save_restore_roundtrip(tmp_path):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b))
 
 
+def test_save_restore_roundtrip_bf16(tmp_path):
+    """ml_dtypes leaves (bfloat16 — the default serving dtype) survive
+    the npz round-trip: np.load hands them back as raw |V2 void
+    records, and restore must view them through the template dtype
+    instead of asking jnp.asarray for a cast it does not have.  This
+    is the exact path `launch/serve.py --watch-ckpt` hot-swaps
+    through."""
+    root = str(tmp_path)
+    t = {"w": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3) / 3,
+         "b": jnp.ones((4,), jnp.float32)}
+    save_checkpoint(root, 1, t)
+    got = restore_checkpoint(root, 1, jax.tree.map(jnp.zeros_like, t))
+    assert got["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(got["w"], np.float32),
+                                  np.asarray(t["w"], np.float32))
+    np.testing.assert_array_equal(np.asarray(got["b"]), np.asarray(t["b"]))
+
+
 def test_crash_before_commit_is_invisible(tmp_path):
     root = str(tmp_path)
     save_checkpoint(root, 1, _tree(1))

@@ -1,0 +1,469 @@
+"""repro.serving.frontend: online loop, HTTP/SSE, router, hot-swap.
+
+Equivalence strategy mirrors tests/test_serving.py: float32 config so
+greedy argmax cannot fork on near-ties, references produced by the
+same engine class through the batch `generate()` path (row-independent
+vmap makes isolated == in-batch results).  The HTTP layer must be a
+transparent transport: every token that crosses the socket is compared
+against the in-process reference.
+"""
+import json
+import threading
+import time
+import urllib.request
+
+import jax
+import numpy as np
+import pytest
+
+from repro.common import sharding as shd
+from repro.configs import registry
+from repro.models import transformer as tf
+from repro.serving import EnsembleEngine, Scheduler, client
+from repro.serving.frontend import FrontendServer, Replica, Router
+
+CFG = registry.get_config("gemma3-1b", reduced=True).with_(dtype="float32")
+
+
+def _params(K, seed=0, cfg=CFG):
+    return jax.vmap(lambda k: tf.init(k, cfg))(
+        jax.random.split(jax.random.PRNGKey(seed), K))
+
+
+def _mk_engine(params, **over):
+    kw = dict(n_slots=2, max_prompt=8, max_out=6, prefill_chunk=4)
+    kw.update(over)
+    return EnsembleEngine(CFG, params, **kw)
+
+
+@pytest.fixture(scope="module")
+def params_k2():
+    return _params(2)
+
+
+@pytest.fixture(scope="module")
+def params_k4():
+    return _params(4)
+
+
+# -- online scheduler loop ---------------------------------------------------
+
+
+def test_tick_loop_matches_batch_run(params_k2):
+    """Driving tick() by hand == run(): the batch API is a wrapper,
+    not a second policy."""
+    reqs = [(np.arange(1, 6), 4), (np.arange(2, 4), 3), (np.arange(3, 8), 5)]
+    e1 = _mk_engine(params_k2)
+    s1 = Scheduler(e1)
+    rids1 = [s1.submit(t, m) for t, m in reqs]
+    ref = s1.run()
+
+    e2 = _mk_engine(params_k2)
+    s2 = Scheduler(e2)
+    rids2 = [s2.submit(t, m) for t, m in reqs]
+    for _ in range(1000):
+        if not s2.has_work:
+            break
+        s2.tick()
+    s2._flush_release()
+    assert set(s2.completions) == set(rids2)
+    for a, b in zip(rids1, rids2):
+        np.testing.assert_array_equal(ref[a].tokens, s2.completions[b].tokens)
+
+
+def test_streaming_callbacks_in_order_and_complete(params_k2):
+    """on_token fires once per generated token, in index order, and the
+    streamed sequence equals the completion; on_done fires after the
+    last token."""
+    eng = _mk_engine(params_k2)
+    sched = Scheduler(eng)
+    events = {}
+
+    def on_token(rid, i, tok):
+        events.setdefault(rid, []).append(("tok", i, tok))
+
+    def on_done(comp):
+        events.setdefault(comp.rid, []).append(("done", comp))
+
+    reqs = [(np.arange(1, 6), 4), (np.arange(2, 4), 5)]
+    rids = [sched.submit(t, m, on_token=on_token, on_done=on_done)
+            for t, m in reqs]
+    comps = sched.run()
+    assert sched.n_streamed == sum(len(c.tokens) for c in comps.values())
+    for rid in rids:
+        ev = events[rid]
+        assert ev[-1][0] == "done" and ev[-1][1] is comps[rid]
+        toks = [rest[1] for kind, *rest in ev if kind == "tok"]
+        idxs = [rest[0] for kind, *rest in ev if kind == "tok"]
+        assert idxs == list(range(len(comps[rid].tokens)))
+        np.testing.assert_array_equal(toks, comps[rid].tokens)
+
+
+def test_submit_while_serve_forever_runs(params_k2):
+    """The online loop accepts requests from another thread mid-decode
+    and parks when idle (no busy-spinning: steps stop advancing)."""
+    eng = _mk_engine(params_k2)
+    sched = Scheduler(eng)
+    t = threading.Thread(target=sched.serve_forever, daemon=True)
+    t.start()
+    try:
+        done = threading.Event()
+        out = {}
+        ref = _mk_engine(params_k2).generate([np.arange(1, 6)], max_new=4)[0]
+        sched.submit(np.arange(1, 6), 4,
+                     on_done=lambda c: (out.setdefault("c", c), done.set()))
+        assert done.wait(60.0)
+        np.testing.assert_array_equal(out["c"].tokens, ref)
+        # idle loop must not dispatch: step counter freezes
+        deadline = time.time() + 5.0
+        while sched.has_work and time.time() < deadline:
+            time.sleep(0.01)
+        steps = eng.steps_run
+        time.sleep(0.2)
+        assert eng.steps_run == steps
+    finally:
+        sched.stop()
+        t.join(10.0)
+
+
+def test_streaming_survives_preemption_without_duplicates(params_k2):
+    """A preempted streaming request regenerates greedily but must not
+    re-emit: every rid's streamed indices stay 0..n-1 exactly once."""
+    eng = _mk_engine(params_k2, n_slots=4, paged=True, page_size=2,
+                     n_pages=10)  # tight pool: preemption under load
+    sched = Scheduler(eng)
+    seen = {}
+
+    def on_token(rid, i, tok):
+        seen.setdefault(rid, []).append((i, tok))
+
+    reqs = [(np.arange(1, 7), 6) for _ in range(5)]
+    rids = [sched.submit(t, m, on_token=on_token) for t, m in reqs]
+    comps = sched.run()
+    assert sched.preemptions > 0  # the scenario actually exercised it
+    for rid in rids:
+        idxs = [i for i, _ in seen[rid]]
+        assert idxs == list(range(len(comps[rid].tokens)))  # no dupes
+        np.testing.assert_array_equal([t for _, t in seen[rid]],
+                                      comps[rid].tokens)
+
+
+# -- HTTP server -------------------------------------------------------------
+
+
+def _start_frontend(engines, **kw):
+    reps = [Replica(f"r{i}", e, **kw) for i, e in enumerate(engines)]
+    router = Router(reps)
+    srv = FrontendServer(router)
+    srv.start()
+    return srv, router, reps
+
+
+def test_http_sse_token_exact_vs_generate_k4(params_k4):
+    """ISSUE 5 satellite: SSE stream token-exact vs in-process
+    generate() at K=4 — and the non-streamed variant too."""
+    prompts = [np.arange(1, 8), np.arange(2, 5), np.arange(3, 9)]
+    refs = [_mk_engine(params_k4).generate([p], max_new=5)[0].tolist()
+            for p in prompts]
+    srv, router, _ = _start_frontend([_mk_engine(params_k4)])
+    try:
+        for p, ref in zip(prompts, refs):
+            sse = client.http_generate(srv.url, p, 5, stream=True)
+            plain = client.http_generate(srv.url, p, 5, stream=False)
+            assert sse["tokens"] == ref      # http_generate also asserts
+            assert plain["tokens"] == ref    # stream == done payload
+            assert sse["ttft_ms"] >= 0 and plain["latency_ms"] >= 0
+    finally:
+        srv.shutdown()
+
+
+def test_http_concurrent_submits_from_threads(params_k2):
+    """Concurrent client threads over 2 replicas: every response is
+    token-exact; the fleet actually spread the load."""
+    prompts = [np.arange(1, 6), np.arange(2, 8), np.arange(3, 5),
+               np.arange(4, 9)]
+    refs = [_mk_engine(params_k2).generate([p], max_new=4)[0].tolist()
+            for p in prompts]
+    srv, router, reps = _start_frontend(
+        [_mk_engine(params_k2), _mk_engine(params_k2)])
+    results, errors = {}, []
+
+    def fire(i):
+        try:
+            results[i] = client.http_generate(
+                srv.url, prompts[i % 4], 4, stream=(i % 2 == 0))["tokens"]
+        except Exception as e:  # noqa: BLE001
+            errors.append(repr(e))
+
+    try:
+        threads = [threading.Thread(target=fire, args=(i,))
+                   for i in range(12)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(120.0)
+        assert not errors
+        assert len(results) == 12
+        for i, toks in results.items():
+            assert toks == refs[i % 4], i
+        stats = router.stats()
+        assert stats["completed"] == 12
+        assert sum(r["completed"] for r in stats["replicas"]) == 12
+        # least-loaded routing used both replicas
+        assert all(r["completed"] > 0 for r in stats["replicas"])
+    finally:
+        srv.shutdown()
+
+
+def test_http_rejects_bad_requests(params_k2):
+    """Every malformed/oversized request is a clean 400 with the
+    validation message — the loop and its in-flight work are untouched."""
+    srv, router, _ = _start_frontend([_mk_engine(params_k2)])
+    try:
+        for body, frag in [
+                ({"tokens": [], "max_new": 4}, "prompt len"),
+                ({"tokens": [1, 2], "max_new": 0}, "max_new"),
+                ({"tokens": [1, 2], "max_new": -3}, "max_new"),
+                ({"tokens": list(range(99)), "max_new": 4}, "prompt len"),
+                ({"tokens": "nope", "max_new": 4}, "tokens"),
+                ({"max_new": 4}, "tokens"),
+        ]:
+            req = urllib.request.Request(
+                srv.url + "/v1/generate", data=json.dumps(body).encode(),
+                headers={"Content-Type": "application/json"})
+            with pytest.raises(urllib.error.HTTPError) as ei:
+                urllib.request.urlopen(req)
+            assert ei.value.code == 400, body
+            assert frag in json.loads(ei.value.read())["error"], body
+        # a good request still serves after all those rejects
+        out = client.http_generate(srv.url, np.arange(1, 5), 3)
+        assert len(out["tokens"]) == 3
+    finally:
+        srv.shutdown()
+
+
+def test_healthz_and_metrics_shape(params_k2):
+    srv, router, _ = _start_frontend([_mk_engine(params_k2, paged=True,
+                                                 page_size=2)])
+    try:
+        h = client.http_get_json(srv.url, "/healthz")
+        assert h["ok"] and not h["draining"]
+        assert h["replicas"][0]["members"] == 2
+        m = urllib.request.urlopen(srv.url + "/metrics").read().decode()
+        for key in ("repro_serving_requests_submitted",
+                    "repro_serving_live_slots", "repro_serving_free_pages",
+                    "repro_serving_low_water_pages",
+                    "repro_serving_swaps_done"):
+            assert key in m, key
+    finally:
+        srv.shutdown()
+
+
+# -- hot-swap + rollout ------------------------------------------------------
+
+
+def _mesh_or_none():
+    """A real ("member", "data") mesh when >1 device is present (the
+    forced-2-device CI stage), else the 1x1 degradation — either way
+    the shard_map path + re-sharding swap is exercised."""
+    return shd.local_mesh(member=min(2, len(jax.devices())), data=1)
+
+
+def test_swap_params_rejects_mismatched_stack(params_k2, params_k4):
+    eng = _mk_engine(params_k2)
+    with pytest.raises(ValueError, match="swap_params"):
+        eng.swap_params(jax.tree.map(lambda x: x[:1], params_k4))
+
+
+def test_hot_swap_under_load_token_exact_and_no_recompile(params_k2):
+    """ISSUE 5 satellite: hot-swap under load on a REAL mesh when the
+    host has one (CI's forced-2-device stage): old-model and new-model
+    completions both token-exact vs their offline references, zero
+    dropped requests, zero decode recompiles (same jitted callable)."""
+    mesh = _mesh_or_none()
+    params_new = _params(2, seed=11)
+    kw = dict(n_slots=2, max_prompt=8, max_out=6, prefill_chunk=4,
+              mesh=mesh)
+    prompts = [np.arange(1, 7), np.arange(2, 6), np.arange(3, 8)]
+    refs_old = [EnsembleEngine(CFG, params_k2, **kw)
+                .generate([p], max_new=4)[0].tolist() for p in prompts]
+    refs_new = [EnsembleEngine(CFG, params_new, **kw)
+                .generate([p], max_new=4)[0].tolist() for p in prompts]
+    assert refs_old != refs_new  # the swap must be observable
+
+    engines = [EnsembleEngine(CFG, params_k2, **kw) for _ in range(2)]
+    for e in engines:
+        e.generate([prompts[0]], max_new=2)  # compile both kernels
+    srv, router, reps = _start_frontend(engines)
+    results, errors = {}, []
+
+    def fire(i):
+        try:
+            results[i] = client.http_generate(
+                srv.url, prompts[i % 3], 4, stream=(i % 2 == 0))["tokens"]
+        except Exception as e:  # noqa: BLE001
+            errors.append(repr(e))
+
+    try:
+        step_ids = [id(e._step) for e in engines]
+        sizes = [e._step._cache_size() for e in engines]
+        threads = [threading.Thread(target=fire, args=(i,))
+                   for i in range(9)]
+        for i, t in enumerate(threads):
+            t.start()
+            if i == 3:
+                router.rollout(params_new)
+        for t in threads:
+            t.join(120.0)
+        assert not errors and len(results) == 9  # zero dropped
+        n_new = 0
+        for i, toks in results.items():
+            ok_old = toks == refs_old[i % 3]
+            ok_new = toks == refs_new[i % 3]
+            assert ok_old or ok_new, (i, toks)
+            n_new += ok_new
+        assert n_new > 0  # some requests actually hit the new model
+        assert all(e.swaps_done == 1 for e in engines)
+        assert [id(e._step) for e in engines] == step_ids
+        assert [e._step._cache_size() for e in engines] == sizes
+        # post-rollout requests serve the new model exclusively
+        post = client.http_generate(srv.url, prompts[0], 4, stream=True)
+        assert post["tokens"] == refs_new[0]
+    finally:
+        srv.shutdown()
+
+
+def test_single_replica_rollout_backlogs_without_drops(params_k2):
+    """With one replica, requests arriving mid-rollout park in the
+    router backlog and serve on the swapped model — delayed, never
+    dropped."""
+    params_new = _params(2, seed=11)
+    prompt = np.arange(1, 7)
+    ref_new = _mk_engine(params_new).generate([prompt], max_new=4)[0]
+    eng = _mk_engine(params_k2)
+    eng.generate([prompt], max_new=2)
+    srv, router, reps = _start_frontend([eng])
+    try:
+        router.drain("r0")
+        assert router.wait_drained("r0", timeout=60.0)
+        done = threading.Event()
+        got = {}
+        name, rid = router.submit(
+            prompt, 4, on_done=lambda c: (got.setdefault("c", c),
+                                          done.set()))
+        assert name == "backlog"  # parked, not dropped
+        eng.swap_params(params_new)
+        router.rejoin("r0")
+        assert done.wait(60.0)
+        np.testing.assert_array_equal(got["c"].tokens, ref_new)
+    finally:
+        srv.shutdown()
+
+
+# -- drain hygiene -----------------------------------------------------------
+
+
+def test_router_drain_leaves_zero_orphaned_pages(params_k2):
+    """ISSUE 5 satellite: after a drain completes, a paged replica's
+    free list is whole again — no page leaks from the online loop's
+    flush-on-idle release path."""
+    engines = [_mk_engine(params_k2, n_slots=4, paged=True, page_size=2,
+                          n_pages=16) for _ in range(2)]
+    srv, router, reps = _start_frontend(engines)
+    try:
+        reqs = [(np.arange(1, 7), 4) for _ in range(10)]
+        done = threading.Semaphore(0)
+        for t, m in reqs:
+            router.submit(t, m, on_done=lambda c: done.release())
+        for _ in reqs:
+            assert done.acquire(timeout=60.0)
+        for name in ("r0", "r1"):
+            router.drain(name)
+            assert router.wait_drained(name, timeout=60.0)
+        # the loops flush releases when idle; poll for the last one
+        deadline = time.time() + 30.0
+        while (any(e.free_pages != e.n_pages for e in engines)
+               and time.time() < deadline):
+            time.sleep(0.01)
+        for e in engines:
+            assert e.free_pages == e.n_pages  # zero orphaned pages
+            assert all(e.allocator.held_pages(b) == 0
+                       for b in range(e.n_slots))
+    finally:
+        srv.shutdown()
+
+
+def test_replica_loop_crash_leaves_rotation(params_k2):
+    """A crashed replica loop (engine exception out of tick) must latch
+    failed + draining so the router stops routing to it — not hang
+    every subsequent request on a dead thread."""
+    engines = [_mk_engine(params_k2), _mk_engine(params_k2)]
+    srv, router, reps = _start_frontend(engines)
+    try:
+        def boom():
+            raise RuntimeError("injected engine failure")
+
+        reps[0].engine.step = boom  # next decode on r0 dies
+        # this request is routed to r0 (both idle) and dies with it —
+        # its handler must answer 500, not park on the queue forever
+        wedged = {}
+
+        def fire_wedged():
+            try:
+                client.http_generate(srv.url, np.arange(1, 5), 3)
+                wedged["outcome"] = "completed"
+            except RuntimeError as e:
+                wedged["outcome"] = str(e)
+
+        t = threading.Thread(target=fire_wedged, daemon=True)
+        t.start()
+        deadline = time.time() + 30.0
+        while reps[0].failed is None and time.time() < deadline:
+            time.sleep(0.01)
+        assert reps[0].failed is not None and not reps[0].routable
+        t.join(30.0)
+        assert "HTTP 500" in wedged.get("outcome", "still hanging")
+        # the fleet still serves: everything routes to r1
+        out = client.http_generate(srv.url, np.arange(1, 5), 3)
+        assert out["replica"] == "r1" and len(out["tokens"]) == 3
+        h = client.http_get_json(srv.url, "/healthz")
+        by_name = {r["name"]: r for r in h["replicas"]}
+        assert by_name["r0"]["failed"] and by_name["r1"]["failed"] is None
+    finally:
+        srv.shutdown(drain=False)  # r0's lost request cannot drain
+
+
+def test_replica_scheduler_does_not_retain_completions(params_k2):
+    """The online loop delivers via on_done and must not grow
+    .completions forever (unbounded leak on a long-lived server); the
+    lifetime counter still advances."""
+    srv, router, reps = _start_frontend([_mk_engine(params_k2)])
+    try:
+        for _ in range(3):
+            client.http_generate(srv.url, np.arange(1, 5), 3)
+        sched = reps[0].scheduler
+        assert sched.n_completed == 3
+        assert sched.completions == {}  # dropped after on_done
+        assert router.stats()["replicas"][0]["completed"] == 3
+    finally:
+        srv.shutdown()
+
+
+def test_graceful_shutdown_drains_in_flight(params_k2):
+    """shutdown(drain=True) serves out queued work before stopping;
+    while draining, /healthz flips to 503 (load balancers stop
+    routing) and new generate() calls are refused."""
+    eng = _mk_engine(params_k2)
+    srv, router, _ = _start_frontend([eng])
+    comps = []
+    for _ in range(4):
+        router.submit(np.arange(1, 6), 4, on_done=comps.append)
+    srv.draining = True  # what shutdown() flips first
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        urllib.request.urlopen(srv.url + "/healthz")
+    assert ei.value.code == 503
+    with pytest.raises(RuntimeError, match="HTTP 503"):
+        client.http_generate(srv.url, np.arange(1, 4), 2)
+    srv.shutdown(drain=True)
+    assert len(comps) == 4
+    assert all(len(c.tokens) == 4 for c in comps)

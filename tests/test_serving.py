@@ -387,6 +387,92 @@ def test_harvest_fetches_state_in_one_transfer(monkeypatch):
     assert calls["n"] <= eng.steps_run + eng.prefills_run + 1
 
 
+# -- request-validation edge cases (ISSUE 5 satellites) ---------------------
+
+
+@pytest.mark.parametrize("bad_new", [0, -1, -17])
+def test_validate_rejects_nonpositive_max_new(bad_new):
+    """max_new <= 0 is a clear door-time error — not a silent clamp
+    that would admit a request which can never emit or finish."""
+    params = _params(CFG, 1)
+    eng = EnsembleEngine(CFG, params, n_slots=2, max_prompt=4, max_out=4)
+    with pytest.raises(ValueError, match="max_new"):
+        eng.validate_request(np.arange(1, 3), bad_new)
+    with pytest.raises(ValueError, match="max_new"):
+        Scheduler(eng).submit(np.arange(1, 3), bad_new)
+
+
+def test_validate_rejects_empty_prompt():
+    """An empty prompt has no token to seed decode with; it must be
+    rejected at the door, in both the engine and the scheduler."""
+    params = _params(CFG, 1)
+    eng = EnsembleEngine(CFG, params, n_slots=2, max_prompt=4, max_out=4)
+    for empty in ([], np.zeros((0,), np.int32)):
+        with pytest.raises(ValueError, match="prompt len"):
+            eng.validate_request(empty, 2)
+        with pytest.raises(ValueError, match="prompt len"):
+            Scheduler(eng).submit(empty, 2)
+        with pytest.raises(ValueError, match="prompt len"):
+            eng.generate([empty], max_new=2)
+
+
+def test_prompt_exactly_max_prompt_serves_full_budget():
+    """A prompt of exactly max_prompt tokens with the full max_out
+    budget (total == max_seq) serves correctly: positions stop at
+    max_seq - 1, no clamp, no OOB — through both prefill paths and the
+    paged pool."""
+    params = _params(CFG, 2)
+    P, G = 6, 4
+    prompt = np.arange(1, P + 1)
+    outs = {}
+    for name, kw in [("per-token", dict(prefill_chunk=0)),
+                     ("chunked", dict(prefill_chunk=4)),
+                     ("paged", dict(prefill_chunk=4, paged=True,
+                                    page_size=2))]:
+        eng = EnsembleEngine(CFG, params, n_slots=2, max_prompt=P,
+                             max_out=G, **kw)
+        sched = Scheduler(eng)
+        rid = sched.submit(prompt, G)  # boundary case must pass the door
+        comps = sched.run()
+        outs[name] = comps[rid].tokens
+        assert len(outs[name]) == G
+        st = jax.device_get(eng.state)
+        assert st.pos.max() <= eng.max_seq  # never walked past the cache
+    np.testing.assert_array_equal(outs["per-token"], outs["chunked"])
+    np.testing.assert_array_equal(outs["per-token"], outs["paged"])
+
+
+def test_prompt_of_max_seq_fails_with_clear_error():
+    """One token over max_prompt — and the max_seq boundary itself —
+    raise a message naming the limit, instead of silently truncating
+    the prompt buffer."""
+    params = _params(CFG, 1)
+    eng = EnsembleEngine(CFG, params, n_slots=2, max_prompt=4, max_out=4)
+    for plen in (eng.max_prompt + 1, eng.max_seq):
+        with pytest.raises(ValueError, match=r"prompt len .* \[1, 4\]"):
+            eng.validate_request(np.arange(plen), 2)
+        with pytest.raises(ValueError, match="prompt len"):
+            Scheduler(eng).submit(np.arange(plen), 2)
+
+
+def test_report_surfaces_scheduler_health():
+    """build_report/print_report carry preemptions, peak live slots,
+    and the paged free-list low-water mark (ISSUE 5 satellite)."""
+    from repro.serving import client
+    params = _params(CFG, 2)
+    eng = EnsembleEngine(CFG, params, n_slots=4, max_prompt=8, max_out=6,
+                         prefill_chunk=4, paged=True, page_size=2,
+                         n_pages=12)  # tight: force preemption
+    reqs = [(np.arange(1, 7), 6) for _ in range(5)]
+    rep = client.run_load(eng, reqs)
+    assert rep["n_requests"] == 5
+    assert rep["peak_in_flight"] >= 1
+    assert rep["preemptions"] >= 1          # the tight pool thrashed
+    assert 0 <= rep["low_water_pages"] < 12  # and the mark recorded it
+    assert rep["ttft_p99_ms"] >= rep["ttft_p50_ms"]
+    client.print_report(rep)  # smoke: the health line renders
+
+
 def test_score_carries_jensen_guarantee():
     """Engine scoring: ensemble NLL <= mean member NLL (Eqn 4-5)."""
     K, B, T = 3, 4, 6
