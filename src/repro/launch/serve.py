@@ -140,6 +140,19 @@ def main():
                          "slots x ceil(max_seq/page) = full capacity, "
                          "smaller oversubscribes and relies on "
                          "preemption)")
+    ap.add_argument("--draft-ckpt", default="",
+                    help="speculative decoding: serve the compressed "
+                         "student at this CheckpointManager root as the "
+                         "draft model for the ensemble (EC-DNN_L "
+                         "drafting for EC-DNN_G); 'member0' drafts with "
+                         "member 0's weights (demo without a ckpt)")
+    ap.add_argument("--gamma", type=int, default=4,
+                    help="draft tokens proposed per speculative "
+                         "iteration (--draft-ckpt)")
+    ap.add_argument("--spec-sampling", action="store_true",
+                    help="stochastic speculative decoding (rejection "
+                         "sampling against the fused distribution) "
+                         "instead of greedy exact-match accept")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--eos-id", type=int, default=-1)
@@ -189,14 +202,37 @@ def main():
         raise SystemExit(f"--quorum needs {K} entries, got {len(quorum)}")
     mesh = shd.parse_mesh_arg(args.mesh)
 
+    draft_params = None
+    if args.draft_ckpt:
+        if args.draft_ckpt == "member0":
+            draft_params = jax.tree.map(lambda x: x[0], params)
+        else:
+            from repro.checkpoint.store import (latest_step,
+                                                restore_checkpoint)
+            step = latest_step(args.draft_ckpt)
+            if step is None:
+                raise SystemExit(
+                    f"--draft-ckpt {args.draft_ckpt}: no committed round")
+            template = tf.init(jax.random.PRNGKey(0), cfg)
+            draft_params = restore_checkpoint(args.draft_ckpt, step,
+                                              template)
+            print(f"draft model: round {step} from {args.draft_ckpt}")
+
     def build_engine():
-        return EnsembleEngine(
-            cfg, params, n_slots=args.batch, max_prompt=args.prompt_len,
+        kw = dict(
+            n_slots=args.batch, max_prompt=args.prompt_len,
             max_out=args.steps, prefill_chunk=args.prefill_chunk,
             temperature=args.temperature, top_k=args.top_k,
             eos_id=args.eos_id, quorum=quorum, seed=args.seed, mesh=mesh,
             paged=args.paged, page_size=args.page_size,
             n_pages=args.n_pages)
+        if draft_params is not None:
+            from repro.serving import SpeculativeEngine
+            return SpeculativeEngine(cfg, params, draft_params,
+                                     gamma=args.gamma,
+                                     spec_sampling=args.spec_sampling,
+                                     **kw)
+        return EnsembleEngine(cfg, params, **kw)
 
     if args.http:
         return serve_http(args, cfg, build_engine)
@@ -238,6 +274,12 @@ def main():
     n_tok = sum(len(o) for o in outs)
     print(f"served batch={B} members={K} steps={args.steps}: "
           f"{n_tok} tokens in {dt:.2f}s ({n_tok / dt:.1f} tok/s)")
+    if hasattr(engine, "spec_stats"):
+        sp = engine.spec_stats()
+        print(f"speculation: gamma={sp['gamma']}, "
+              f"acceptance {sp['acceptance_rate']:.1%}, "
+              f"mean accepted {sp['mean_accepted_len']:.2f} tok/step "
+              f"(p50 {sp['accepted_len_p50']:.0f})")
     print("sample:", outs[0][:16].tolist())
     return 0
 

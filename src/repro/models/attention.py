@@ -746,6 +746,129 @@ def mla_prefill_paged(params: dict, x: jax.Array, cache: dict,
 
 
 # ---------------------------------------------------------------------------
+# paged speculative verify: batched multi-token scoring at per-row positions
+# ---------------------------------------------------------------------------
+# Speculative decoding scores a (gamma+1)-token draft chunk for EVERY
+# slot in one call.  The per-slot prefill entry points above handle one
+# slot at a time (their tables are (P,)), and the row-vmap trick cannot
+# carry the shared paged planes, so these batched siblings scatter the
+# whole batch's chunks through (B, P) tables and attend densely with a
+# per-row (B, C, S) bias.  Full-attention only (the paged invariant):
+# positions never wrap, so stale entries past each row's position are
+# masked by causality alone.
+
+
+def chunk_scatter_batch(plane: jax.Array, chunk: jax.Array,
+                        table: jax.Array, pos: jax.Array,
+                        n_tok: jax.Array) -> jax.Array:
+    """Bulk-write per-slot chunks into a paged plane, ALL slots at once.
+
+    plane: (n_pages, page, ...); chunk: (B, C, ...) entries for row b's
+    positions pos[b]..pos[b]+n_tok[b]-1 (the tail is padding and is NOT
+    written); table: (B, P); pos/n_tok: (B,).  The batched twin of
+    chunk_cache_write_paged: out-of-table or padded targets map to the
+    dropped sentinel, distinct slots own distinct pages (allocator
+    invariant), so the scatter never races.  n_tok[b] == 0 rows are
+    bit-exact no-ops.
+    """
+    n_pages, page = plane.shape[0], plane.shape[1]
+    P = table.shape[1]
+    C = chunk.shape[1]
+    t = jnp.arange(C)[None, :]
+    p = pos[:, None] + t                    # (B, C) logical positions
+    l = p // page
+    off = p % page
+    phys = jnp.take_along_axis(table, jnp.clip(l, 0, P - 1), axis=1)
+    phys = jnp.where((t < n_tok[:, None]) & (l < P), phys, n_pages)
+    return plane.at[phys, off].set(chunk, mode="drop")
+
+
+def _verify_bias(pos: jax.Array, S: int, C: int, window: int) -> jax.Array:
+    """(B, C, S) additive mask for batched chunk verify: row b's query i
+    sits at position pos[b]+i and sees cache entries at positions
+    <= pos[b]+i (stale/padded entries live past that, so causality masks
+    them); window > 0 limits lookback."""
+    q_pos = pos[:, None] + jnp.arange(C)[None, :]       # (B, C)
+    kp = jnp.arange(S)[None, None, :]
+    ok = kp <= q_pos[:, :, None]
+    if window > 0:
+        ok &= kp > q_pos[:, :, None] - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def gqa_verify_paged(params: dict, x: jax.Array, cache: dict,
+                     pos: jax.Array, n_tok: jax.Array, table: jax.Array,
+                     a: AttnConfig, cfg: ModelConfig, window: int,
+                     theta: float) -> Tuple[jax.Array, dict]:
+    """Score a C-token chunk for every slot over a paged pool.
+
+    x: (B, C, d) draft chunks at positions pos..pos+C-1; n_tok: (B,)
+    valid tokens per row (0 freezes the row bit-exactly); table: (B, P).
+    Scatter-then-gather: the chunk's K/V land in each slot's pages
+    first, then every query attends over the gathered logical view with
+    a per-row causal bias — same math as gqa_prefill_paged, batched.
+    -> (out (B, C, d), cache).
+    """
+    B, C, _ = x.shape
+    kv = _kv_spec(a.n_kv_heads)
+    kf, vf = x @ params["w_k"], x @ params["w_v"]
+    if kv == REP:  # see gqa_apply: keep shards out of head_dim
+        kf = constrain(kf, None, None, REP)
+        vf = constrain(vf, None, None, REP)
+    q = (x @ params["w_q"]).reshape(B, C, a.n_heads, a.head_dim)
+    k = kf.reshape(B, C, a.n_kv_heads, a.head_dim)
+    v = vf.reshape(B, C, a.n_kv_heads, a.head_dim)
+    q, k = _maybe_qknorm(params, q, k, cfg.norm_eps)
+    p2 = pos[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]  # (B, C)
+    rp = (jnp.broadcast_to(p2, (3,) + p2.shape)
+          if a.mrope_sections is not None else p2)
+    if a.use_rope:
+        q = apply_rope(q, rp, theta, a.mrope_sections)
+        k = apply_rope(k, rp, theta, a.mrope_sections)
+    k = constrain(k, None, None, kv, None)
+    v = constrain(v, None, None, kv, None)
+    ck = chunk_scatter_batch(cache["k_pages"], k, table, pos, n_tok)
+    cv = chunk_scatter_batch(cache["v_pages"], v, table, pos, n_tok)
+    kk = _gather_pages(ck, table)           # (B, S, n_kv, dh)
+    vv = _gather_pages(cv, table)
+    scale = 1.0 / math.sqrt(a.head_dim)
+    o = _attend_dense(q, kk, vv, _verify_bias(pos, kk.shape[1], C, window),
+                      scale)
+    o = o.reshape(B, C, -1) @ params["w_o"]
+    return o, {"k_pages": ck, "v_pages": cv}
+
+
+def mla_verify_paged(params: dict, x: jax.Array, cache: dict,
+                     pos: jax.Array, n_tok: jax.Array, table: jax.Array,
+                     a: AttnConfig, cfg: ModelConfig,
+                     theta: float) -> Tuple[jax.Array, dict]:
+    """MLA chunk verify over paged latent planes, all slots at once:
+    scatter the chunks' latents, gather + expand each row's logical
+    view, attend with the per-row causal bias — mla_prefill_paged's
+    math, batched over slots.  -> (out (B, C, d), cache)."""
+    B, C, _ = x.shape
+    q, c_kv, k_r = _mla_qkv(params, x, a)
+    p2 = pos[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    q_c, q_r = q[..., :a.qk_nope_dim], q[..., a.qk_nope_dim:]
+    q_r = apply_rope(q_r, p2, theta)
+    k_r = apply_rope(k_r[..., None, :], p2, theta)[..., 0, :]
+    cc = chunk_scatter_batch(cache["c_kv_pages"], c_kv, table, pos, n_tok)
+    cr = chunk_scatter_batch(cache["k_r_pages"], k_r, table, pos, n_tok)
+    lat = _gather_pages(cc, table)          # (B, S, r)
+    rop = _gather_pages(cr, table)          # (B, S, rope)
+    S = lat.shape[1]
+    k_c, v = _mla_expand(params, lat, a)
+    q_full = jnp.concatenate([q_c, q_r], -1)
+    k_full = jnp.concatenate(
+        [k_c, jnp.broadcast_to(rop[..., None, :],
+                               k_c.shape[:-1] + (a.qk_rope_dim,))], -1)
+    scale = 1.0 / math.sqrt(a.qk_nope_dim + a.qk_rope_dim)
+    o = _attend_dense(q_full, k_full, v, _verify_bias(pos, S, C, 0), scale)
+    o = o.reshape(B, C, -1) @ params["w_o"]
+    return o, {"c_kv_pages": cc, "k_r_pages": cr}
+
+
+# ---------------------------------------------------------------------------
 # cross-attention (whisper decoder)
 # ---------------------------------------------------------------------------
 

@@ -578,6 +578,80 @@ def prefill_slots(params, cfg: ModelConfig, cache: dict, tokens: jax.Array,
     return step(cache, tokens, n_tok)
 
 
+def verify_step(params, cfg: ModelConfig, cache: dict, tokens: jax.Array,
+                n_tok: jax.Array) -> Tuple[jax.Array, dict]:
+    """Score a whole chunk in one forward pass: prefill_step's twin that
+    keeps logits for ALL C positions instead of just the last one.
+
+    tokens: (B, C) chunk at positions idx..idx+C-1; n_tok: () how many
+    are real (the padded tail is masked to a state/cache no-op).
+    -> (logits (B, C, V), cache): logits[:, j] is the next-token
+    distribution AFTER consuming tokens[:, j] — exactly what speculative
+    verify needs to check every drafted position in one call.  The
+    chunk's KV is materialized into the cache (positions past the
+    accepted prefix are rolled back by the caller, see
+    serving.kv_cache.restore_positions).
+    """
+    idx = cache["idx"]
+    x = _embed_in(params, cfg, tokens, None)
+    C = x.shape[1]
+    if cfg.enc_dec and not cfg.attn.use_rope:
+        pe = sinusoidal_positions(cfg.max_seq, cfg.d_model)
+        x = x + jax.lax.dynamic_slice_in_dim(pe, idx, C, 0)[None].astype(
+            x.dtype)
+    enc = cache.get("enc")
+    new_segments = []
+    for seg_params, seg_cache, (count, specs) in zip(
+            params["segments"], cache["segments"], cfg.segments()):
+
+        def body(x, xs):
+            sp, sc = xs
+            new_sc = {}
+            for i, spec in enumerate(specs):
+                x, new_sc[f"slot_{i}"] = _slot_prefill(
+                    sp[f"slot_{i}"], sc[f"slot_{i}"], x, spec, cfg, idx,
+                    n_tok, enc)
+            return x, new_sc
+
+        x, new_seg = jax.lax.scan(body, x, (seg_params, seg_cache))
+        new_segments.append(new_seg)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = lm_logits(params, x, cfg)      # (B, C, V): every position
+    new_cache = {"idx": idx + n_tok, "segments": new_segments}
+    if enc is not None:
+        new_cache["enc"] = enc
+    return logits, new_cache
+
+
+def verify_slots(params, cfg: ModelConfig, cache: dict, tokens: jax.Array,
+                 n_tok: jax.Array) -> Tuple[jax.Array, dict]:
+    """Per-slot chunk verify: every row scores its OWN n_tok chunk
+    tokens starting at its OWN cache position, logits at every position.
+
+    tokens: (B, C); n_tok: (B,); cache from init_slot_cache (idx (B,)).
+    -> (logits (B, C, V), cache).  Row-vmap of the scalar verify_step
+    (the prefill_slots trick): n_tok == 0 rows are bit-exact no-ops, so
+    a speculative batch mixing draft-on, draft-off, and idle slots runs
+    one compiled program.
+    """
+    axes = slot_cache_axes(cache)
+
+    def one_row(c, t, n):
+        cb = {"idx": c["idx"],
+              "segments": jax.tree.map(lambda x: x[:, None], c["segments"])}
+        if "enc" in c:
+            cb["enc"] = c["enc"][None]
+        logits, nc = verify_step(params, cfg, cb, t[None], n)
+        out = {"idx": nc["idx"],
+               "segments": jax.tree.map(lambda x: x[:, 0], nc["segments"])}
+        if "enc" in nc:
+            out["enc"] = nc["enc"][0]
+        return logits[0], out
+
+    step = jax.vmap(one_row, in_axes=(axes, 0, 0), out_axes=(0, axes))
+    return step(cache, tokens, n_tok)
+
+
 # ---------------------------------------------------------------------------
 # paged serving entry points
 # ---------------------------------------------------------------------------
@@ -741,6 +815,87 @@ def prefill_step_paged(params, cfg: ModelConfig, cache: dict,
     logits = lm_logits(params, xl, cfg)[:, 0]
     return logits, {"idx": cache["idx"] + n_tok, "segments": new_segments,
                     "page_table": cache["page_table"]}
+
+
+def _slot_verify_paged(p, c, x, spec: LayerSpec, cfg: ModelConfig, pos,
+                       n_tok, table):
+    """Chunk block step for batched verify over a (possibly) paged layer
+    cache: paged layers use the batched scatter/gather verify attention,
+    ring layers row-vmap the scalar chunk prefill.  Recurrent mixers
+    cannot roll back a partially-accepted draft (their state has no
+    positional axis), so speculative serving gates them out upstream."""
+    h_in = rmsnorm(p["norm_mix"], x, cfg.norm_eps)
+    cs = c_sub(c)
+    if spec.mixer in ("attn", "attn_local"):
+        if spec.mixer == "attn":
+            window, theta = cfg.attn.window, cfg.attn.rope_theta
+        else:
+            window, theta = cfg.local_window, cfg.local_rope_theta
+        if "c_kv_pages" in c:
+            h, c2 = attn.mla_verify_paged(p["attn"], h_in, cs, pos, n_tok,
+                                          table, cfg.attn, cfg,
+                                          cfg.attn.rope_theta)
+        elif "k_pages" in c:
+            h, c2 = attn.gqa_verify_paged(p["attn"], h_in, cs, pos, n_tok,
+                                          table, cfg.attn, cfg, window,
+                                          theta)
+        else:
+            # ring-bounded sliding-window layer: contiguous per-slot
+            # plane, per-row positions via a row vmap of the scalar
+            # chunk prefill (the _slot_decode_paged one-row trick)
+            def one(c_row, x_row, i, n):
+                cr = jax.tree.map(lambda y: y[None], c_row)
+                h_r, c2_r = attn.gqa_prefill(p["attn"], x_row[None], cr, i,
+                                             n, cfg.attn, cfg, window, theta)
+                return h_r[0], jax.tree.map(lambda y: y[0], c2_r)
+
+            h, c2 = jax.vmap(one)(cs, h_in, pos, n_tok)
+    else:
+        raise ValueError(f"speculative verify needs attention-only "
+                         f"layers, got mixer {spec.mixer!r}")
+    x = x + h
+    h_f = rmsnorm(p["norm_ffn"], x, cfg.norm_eps)
+    h, _ = _ffn_apply(p, h_f, spec, cfg)
+    return x + h, c2
+
+
+def verify_step_paged(params, cfg: ModelConfig, cache: dict,
+                      tokens: jax.Array,
+                      n_tok: jax.Array) -> Tuple[jax.Array, dict]:
+    """Score a C-token chunk for EVERY slot at per-row positions over a
+    paged cache — the speculative-verify entry point.
+
+    Unlike prefill_step_paged (one slot, (P,) table) this runs the whole
+    batch natively: paged planes are shared, so the row-vmap trick
+    cannot carry them, and verify must score all slots' drafts in ONE
+    call to keep speculative decoding a single jitted program.
+
+    tokens: (B, C) per-slot draft chunks at each row's own position;
+    n_tok: (B,) valid tokens per row (0 = frozen no-op row).
+    -> (logits (B, C, V), cache), verify_step's all-positions contract.
+    """
+    pos = cache["idx"]
+    table = cache["page_table"]
+    x = _embed_in(params, cfg, tokens, None)
+    new_segments = []
+    for seg_params, seg_cache, (count, specs) in zip(
+            params["segments"], cache["segments"], cfg.segments()):
+
+        def body(x, xs):
+            sp, sc = xs
+            new_sc = {}
+            for i, spec in enumerate(specs):
+                x, new_sc[f"slot_{i}"] = _slot_verify_paged(
+                    sp[f"slot_{i}"], sc[f"slot_{i}"], x, spec, cfg, pos,
+                    n_tok, table)
+            return x, new_sc
+
+        x, new_seg = jax.lax.scan(body, x, (seg_params, seg_cache))
+        new_segments.append(new_seg)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = lm_logits(params, x, cfg)
+    return logits, {"idx": pos + n_tok, "segments": new_segments,
+                    "page_table": table}
 
 
 def prefill(params, cfg: ModelConfig, tokens=None, embeds=None,

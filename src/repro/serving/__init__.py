@@ -10,6 +10,7 @@ percentiles.  See engine.py for the architecture note.
 """
 from repro.serving.engine import EnsembleEngine, SlotState
 from repro.serving.scheduler import Completion, Request, Scheduler
+from repro.serving.spec import DraftEngine, SpeculativeEngine
 
 __all__ = ["EnsembleEngine", "SlotState", "Scheduler", "Request",
-           "Completion"]
+           "Completion", "SpeculativeEngine", "DraftEngine"]

@@ -133,18 +133,28 @@ def parse_sse(raw: bytes) -> List[Tuple[str, dict]]:
 
 
 def http_generate(url: str, tokens, max_new: int,
-                  stream: bool = False, timeout: float = 120.0) -> dict:
+                  stream: bool = False, timeout: float = 120.0,
+                  temperature: Optional[float] = None,
+                  top_k: Optional[int] = None, seed: Optional[int] = None,
+                  draft: Optional[bool] = None) -> dict:
     """One POST /v1/generate; -> {"tokens": [...], "ttft": s|None,
     "latency": s, ...completion fields}.
+
+    temperature/top_k/seed/draft ride in the JSON body as per-request
+    overrides (omitted when None: the engine defaults apply).
 
     stream=True reads the SSE feed incrementally and stamps ttft at
     the first token event, asserting per-token ids agree with the
     terminal done event's full sequence.
     """
     u = urlsplit(url)
-    body = json.dumps({"tokens": [int(t) for t in np.reshape(tokens, -1)],
-                       "max_new": int(max_new),
-                       "stream": bool(stream)}).encode()
+    payload = {"tokens": [int(t) for t in np.reshape(tokens, -1)],
+               "max_new": int(max_new), "stream": bool(stream)}
+    for key, val in (("temperature", temperature), ("top_k", top_k),
+                     ("seed", seed), ("draft", draft)):
+        if val is not None:
+            payload[key] = val
+    body = json.dumps(payload).encode()
     conn = HTTPConnection(u.hostname, u.port, timeout=timeout)
     try:
         t0 = time.time()

@@ -96,6 +96,10 @@ class SlotState(NamedTuple):
     done: jax.Array        # (B,)   finished, awaiting host harvest
     out: jax.Array         # (B,G)  emitted tokens
     key: jax.Array         # PRNG carried across steps
+    temp: jax.Array        # (B,)   per-request sampling temperature
+    topk: jax.Array        # (B,)   per-request top-k (0 = full vocab)
+    skey: jax.Array        # (B,2)  per-request base PRNG key
+    draft: jax.Array       # (B,)   speculative drafting enabled
 
 
 class EnsembleEngine:
@@ -189,6 +193,11 @@ class EnsembleEngine:
         if cfg.enc_dec:
             self.cache["enc"] = self._encode_stub(n_slots)
         self.state = self._blank_state(seed)
+        # per-request sampling: requests that do not pin a seed draw
+        # their base key from fold_in(engine key, admission counter) —
+        # deterministic for a given admission order, distinct per request
+        self._req_base_key = jax.random.PRNGKey(seed)
+        self._admitted = 0
         self.steps_run = 0
         self.prefills_run = 0
         self.swaps_done = 0
@@ -214,7 +223,7 @@ class EnsembleEngine:
             out_specs=(sspec, cspec))
         self._update = self._compile(
             self._update_impl, donate=(0, 1),
-            in_specs=(cspec, sspec, s, s, s, s, s),
+            in_specs=(cspec, sspec, s, s, s, s, s, s, s, s, s),
             out_specs=(sspec, cspec))
         self._score = self._compile(
             self._score_impl, donate=(1,),
@@ -247,7 +256,9 @@ class EnsembleEngine:
         return SlotState(tok=zi(B), pos=zi(B), prompt=zi(B, P),
                          prompt_len=zi(B), max_new=zi(B), n_gen=zi(B),
                          active=zb(B), done=zb(B), out=zi(B, G),
-                         key=jax.random.PRNGKey(seed))
+                         key=jax.random.PRNGKey(seed),
+                         temp=jnp.zeros((B,), jnp.float32), topk=zi(B),
+                         skey=jnp.zeros((B, 2), jnp.uint32), draft=zb(B))
 
     def _encode_stub(self, batch: int) -> jax.Array:
         """Per-member encoder outputs over stub frame embeddings.
@@ -313,8 +324,11 @@ class EnsembleEngine:
         logits, cache = self._member_logits(params, cache, st.tok)
         cache = kv_cache.keep_frozen(cache, old_cache, adv)
         logp = self._fuse(logits, quorum)  # (B, V)
-        key, sub = jax.random.split(st.key)
-        sampled = sampling.sample(sub, logp, self.temperature, self.top_k)
+        # per-request sampling params; the key for emission i is
+        # fold_in(request base key, i), so a preempted-and-resumed
+        # request regenerates token-identically
+        keys = jax.vmap(jax.random.fold_in)(st.skey, st.n_gen)
+        sampled = sampling.sample_slots(keys, logp, st.temp, st.topk)
 
         pos1 = st.pos + adv.astype(jnp.int32)
         in_prompt = pos1 < st.prompt_len  # next input is teacher-forced
@@ -334,13 +348,11 @@ class EnsembleEngine:
         done = st.done | finished
         tok = jnp.where(adv, jnp.where(in_prompt, nxt_prompt, sampled),
                         st.tok)
-        return SlotState(tok=tok, pos=pos1, prompt=st.prompt,
-                         prompt_len=st.prompt_len, max_new=st.max_new,
-                         n_gen=n_gen, active=st.active, done=done,
-                         out=out, key=key), cache
+        return st._replace(tok=tok, pos=pos1, n_gen=n_gen, done=done,
+                           out=out), cache
 
     def _update_impl(self, cache, st: SlotState, release, admit,
-                     prompt, plen, max_new):
+                     prompt, plen, max_new, temp, topk, skey, draft):
         """Evict `release` slots, (re)fill `admit` slots with new requests."""
         cache = kv_cache.reset_slots(cache, admit)
         a2 = admit[:, None]
@@ -354,7 +366,11 @@ class EnsembleEngine:
             active=(st.active & ~release) | admit,
             done=st.done & ~release & ~admit,
             out=jnp.where(a2, 0, st.out),
-            key=st.key), cache
+            key=st.key,
+            temp=jnp.where(admit, temp, st.temp),
+            topk=jnp.where(admit, topk, st.topk),
+            skey=jnp.where(a2, skey, st.skey),
+            draft=jnp.where(admit, draft, st.draft)), cache
 
     def _prefill_impl(self, params, cache, st: SlotState, quorum, slot):
         """Consume up to prefill_chunk prompt tokens of ONE slot in one
@@ -389,8 +405,10 @@ class EnsembleEngine:
         logits, row = jax.vmap(one)(params, row)  # (K, 1, V)
         cache = kv_cache.write_slot_row(cache, row, slot)
         logp = self._fuse(logits[:, 0], quorum)  # (V,)
-        key, sub = jax.random.split(st.key)
-        sampled = sampling.sample(sub, logp, self.temperature, self.top_k)
+        kb = jax.random.fold_in(st.skey[slot], st.n_gen[slot])
+        sampled = sampling.sample_slots(
+            kb[None], logp[None], st.temp[slot][None],
+            st.topk[slot][None])[0]
 
         pos1 = pos + n_tok
         completed = need & (pos1 >= plen)
@@ -401,14 +419,12 @@ class EnsembleEngine:
         finished = completed & (st.n_gen[slot] + 1 >= st.max_new[slot])
         if self.eos_id >= 0:
             finished |= completed & (sampled == self.eos_id)
-        return SlotState(
+        return st._replace(
             tok=st.tok.at[slot].set(jnp.where(completed, sampled,
                                               st.tok[slot])),
-            pos=st.pos.at[slot].set(pos1), prompt=st.prompt,
-            prompt_len=st.prompt_len, max_new=st.max_new, n_gen=n_gen,
-            active=st.active, done=st.done.at[slot].set(st.done[slot]
-                                                        | finished),
-            out=out, key=key), cache
+            pos=st.pos.at[slot].set(pos1), n_gen=n_gen,
+            done=st.done.at[slot].set(st.done[slot] | finished),
+            out=out), cache
 
     def _score_impl(self, params, cache, tok_t, gold_t, quorum):
         """Teacher-forced scoring step: per-member + ensemble NLL.
@@ -429,10 +445,17 @@ class EnsembleEngine:
 
     # -- host API -----------------------------------------------------------
 
-    def validate_request(self, tokens, max_new: int) -> np.ndarray:
+    def validate_request(self, tokens, max_new: int,
+                         temperature: Optional[float] = None,
+                         top_k: Optional[int] = None,
+                         seed: Optional[int] = None) -> np.ndarray:
         """Check a request against the engine's budgets; -> 1-D int32
         prompt.  The single source of truth for admission limits, used
-        by update_slots and by Scheduler.submit (reject at the door)."""
+        by update_slots and by Scheduler.submit (reject at the door).
+        Per-request sampling params are optional (None = engine
+        default); out-of-range values raise against the NAMED limits in
+        serving/sampling.py (temperature/seed) and the model's
+        vocab_size (top_k)."""
         t = np.asarray(tokens, np.int32).reshape(-1)
         if not 0 < t.size <= self.max_prompt:
             raise ValueError(f"prompt len {t.size} not in "
@@ -440,6 +463,23 @@ class EnsembleEngine:
         if not 0 < max_new <= self.max_out:
             raise ValueError(f"max_new {max_new} not in "
                              f"[1, {self.max_out}]")
+        if temperature is not None and not (
+                sampling.MIN_TEMPERATURE <= float(temperature)
+                <= sampling.MAX_TEMPERATURE):
+            raise ValueError(
+                f"temperature {temperature} not in [MIN_TEMPERATURE="
+                f"{sampling.MIN_TEMPERATURE}, MAX_TEMPERATURE="
+                f"{sampling.MAX_TEMPERATURE}]")
+        if top_k is not None and not (
+                0 <= int(top_k) <= self.cfg.vocab_size):
+            raise ValueError(
+                f"top_k {top_k} not in [0, vocab_size="
+                f"{self.cfg.vocab_size}]")
+        if seed is not None and not (
+                sampling.MIN_SEED <= int(seed) <= sampling.MAX_SEED):
+            raise ValueError(
+                f"seed {seed} not in [MIN_SEED={sampling.MIN_SEED}, "
+                f"MAX_SEED={sampling.MAX_SEED}]")
         if self.paged:
             need = self.allocator.pages_for(t.size + max_new)
             if need > self.n_pages:
@@ -571,10 +611,15 @@ class EnsembleEngine:
         return self.state
 
     def update_slots(self, release: Sequence[int] = (),
-                     admits: Sequence[Tuple[int, np.ndarray, int]] = ()):
+                     admits: Sequence[tuple] = ()):
         """Evict finished slots and admit new requests.
 
-        admits: (slot, prompt_tokens, max_new) triples.  Fixed-shape
+        admits: (slot, prompt_tokens, max_new) triples, or 4-tuples
+        whose last element is an options dict with any of
+        {"temperature", "top_k", "seed", "draft"} — per-request
+        sampling/speculation overrides (None/missing = engine default;
+        a request with no seed gets fold_in(engine key, admission
+        counter), so admission order fixes its draws).  Fixed-shape
         masked updates, so any admission pattern reuses one compiled
         program.  Admission is a slot-axis operation: it touches every
         member's row of the (K, ...) pool identically, so the mesh path
@@ -595,15 +640,35 @@ class EnsembleEngine:
         prompt = np.zeros((B, P), np.int32)
         plen = np.zeros((B,), np.int32)
         mnew = np.zeros((B,), np.int32)
+        temp = np.full((B,), self.temperature, np.float32)
+        topk = np.full((B,), self.top_k, np.int32)
+        skey = np.zeros((B, 2), np.uint32)
+        draft = np.zeros((B,), bool)
         for b in release:
             rel[check_slot(b)] = True
-        for b, toks, max_new in admits:
+        for entry in admits:
+            b, toks, max_new = entry[0], entry[1], entry[2]
+            opts = dict(entry[3]) if len(entry) > 3 and entry[3] else {}
             b = check_slot(b)
-            t = self.validate_request(toks, max_new)
+            t = self.validate_request(
+                toks, max_new, temperature=opts.get("temperature"),
+                top_k=opts.get("top_k"), seed=opts.get("seed"))
             adm[b] = True
             prompt[b, :t.size] = t
             plen[b] = t.size
             mnew[b] = max_new
+            if opts.get("temperature") is not None:
+                temp[b] = float(opts["temperature"])
+            if opts.get("top_k") is not None:
+                topk[b] = int(opts["top_k"])
+            if opts.get("seed") is not None:
+                skey[b] = np.asarray(
+                    jax.random.PRNGKey(int(opts["seed"])), np.uint32)
+            else:
+                skey[b] = np.asarray(jax.random.fold_in(
+                    self._req_base_key, self._admitted), np.uint32)
+            draft[b] = bool(opts.get("draft", self._default_draft()))
+            self._admitted += 1
         if self.paged:
             # all-or-nothing page accounting BEFORE any state mutates:
             # released/recycled slots return their chains, admitted
@@ -639,7 +704,26 @@ class EnsembleEngine:
             self._sync_table()
         self.state, self.cache = self._update(
             self.cache, self.state, jnp.asarray(rel), jnp.asarray(adm),
-            jnp.asarray(prompt), jnp.asarray(plen), jnp.asarray(mnew))
+            jnp.asarray(prompt), jnp.asarray(plen), jnp.asarray(mnew),
+            jnp.asarray(temp), jnp.asarray(topk), jnp.asarray(skey),
+            jnp.asarray(draft))
+
+    def _default_draft(self) -> bool:
+        """Whether an admission with no explicit `draft` option drafts
+        speculatively.  The base engine has no draft model; the
+        speculative subclass flips this to True."""
+        return False
+
+    def _sync_each_step(self) -> bool:
+        """generate(): fetch the done flags after every step and exit
+        the loop early.  False here — the base engine emits exactly one
+        token per live row per step, so the fixed step count is already
+        tight and the static-batch loop stays dispatch-only.  The
+        speculative subclass returns True: its per-row stride is
+        variable (1..gamma+1 tokens per iteration), so without the
+        fetch the loop would keep dispatching full speculative programs
+        long after every row finished."""
+        return False
 
     def generate(self, prompts: Sequence[np.ndarray],
                  max_new: int) -> list:
@@ -676,11 +760,17 @@ class EnsembleEngine:
             steps = max(plens) + max_new - 1
         sync_done = (self.paged and self.eos_id >= 0
                      and self.n_pages < self.n_slots * self.pages_per_slot)
+        early = self._sync_each_step()
         for _ in range(steps):
             self.step()
             if sync_done:
                 self._host_active &= ~np.asarray(
                     jax.device_get(self.state.done))
+            if early:
+                act, done = jax.device_get((self.state.active,
+                                            self.state.done))
+                if not np.any(np.asarray(act) & ~np.asarray(done)):
+                    break
         st = jax.device_get(self.state)
         return [st.out[i, :st.n_gen[i]] for i in range(len(prompts))]
 

@@ -107,14 +107,18 @@ class Replica:
         return (not self.draining and self.failed is None
                 and self._thread is not None and self._thread.is_alive())
 
-    def load_key(self) -> Tuple[int, int]:
-        """Least-loaded sort key: fewest in-flight first, then the
-        scarcer capacity signal — free pages on a paged engine, free
-        slots otherwise (both negated: more free sorts first)."""
+    def load_key(self) -> Tuple[int, int, int]:
+        """Least-loaded sort key: routable replicas first (a draining
+        or crashed replica sorts as infinitely loaded — `_route`
+        filters them, but drain() can race the filter, and the key must
+        hold on its own), then fewest in-flight, then the scarcer
+        capacity signal — free pages on a paged engine, free slots
+        otherwise (both negated: more free sorts first)."""
         e = self.engine
         free = (e.free_pages if e.paged
                 else e.n_slots - self.scheduler.live_slots)
-        return (self.in_flight, -free)
+        return (int(self.draining or self.failed is not None),
+                self.in_flight, -free)
 
     def stats(self) -> dict:
         s, e = self.scheduler, self.engine
@@ -135,6 +139,10 @@ class Replica:
             "n_slots": e.n_slots,
             "cache_bytes_per_device": e.cache_bytes(),
             "page_stats": e.page_stats(),
+            # duck-typed: only a SpeculativeEngine carries acceptance
+            # telemetry; plain engines report an empty dict
+            "spec_stats": (e.spec_stats()
+                           if hasattr(e, "spec_stats") else {}),
         }
 
 
@@ -185,9 +193,15 @@ class Router:
 
     def submit(self, tokens, max_new: int,
                on_token: Optional[TokenCallback] = None,
-               on_done: Optional[DoneCallback] = None) -> Tuple[str, int]:
+               on_done: Optional[DoneCallback] = None,
+               temperature: Optional[float] = None,
+               top_k: Optional[int] = None,
+               seed: Optional[int] = None,
+               draft: Optional[bool] = None) -> Tuple[str, int]:
         """Route one request to the least-loaded live replica;
         -> (replica name, rid on that replica).  Thread-safe.
+        temperature/top_k/seed/draft are per-request overrides handed
+        through to Scheduler.submit (None = engine default).
 
         When every replica is draining (single-replica rollout) the
         request parks in the router backlog and is assigned on the next
@@ -195,22 +209,28 @@ class Router:
         router-level ticket (on_done/on_token still fire normally once
         a replica picks it up).
         """
+        sample_kw = dict(temperature=temperature, top_k=top_k,
+                         seed=seed, draft=draft)
         with self._lock:
             rep = self._route()
             if rep is None:
                 # validate at the door even while parked, so a bad
                 # request is rejected now, not after the rollout
-                self.replicas[0].engine.validate_request(tokens, max_new)
+                self.replicas[0].engine.validate_request(
+                    tokens, max_new, temperature=temperature,
+                    top_k=top_k, seed=seed)
                 ticket = self.n_submitted
                 self.n_submitted += 1
                 done = self._count_done(on_done)
-                self._backlog.append((tokens, max_new, on_token, done))
+                self._backlog.append(
+                    (tokens, max_new, on_token, done, sample_kw))
                 return ("backlog", ticket)
             # count only after validation inside submit() passes —
             # door-rejected requests must not inflate the counter (the
             # backlog branch above validates before ticketing too)
             rid = rep.scheduler.submit(tokens, max_new, on_token=on_token,
-                                       on_done=self._count_done(on_done))
+                                       on_done=self._count_done(on_done),
+                                       **sample_kw)
             self.n_submitted += 1
             return (rep.name, rid)
 
@@ -243,9 +263,10 @@ class Router:
             rep = self._route()
             if rep is None:
                 return
-            tokens, max_new, on_token, done = self._backlog.popleft()
+            (tokens, max_new, on_token, done,
+             sample_kw) = self._backlog.popleft()
             rep.scheduler.submit(tokens, max_new, on_token=on_token,
-                                 on_done=done)
+                                 on_done=done, **sample_kw)
 
     # -- draining + rollout -------------------------------------------------
 

@@ -135,13 +135,32 @@ class _Handler(BaseHTTPRequestHandler):
                                            "max_new: int"})
             return
         stream = bool(body.get("stream", False))
+        # per-request sampling / speculation overrides (absent = engine
+        # default); types are checked here, RANGES by validate_request
+        # at the router door so the error quotes the named limits
+        sample_kw = {}
+        for key, types in (("temperature", (int, float)),
+                           ("top_k", (int,)), ("seed", (int,))):
+            if key in body and body[key] is not None:
+                if not isinstance(body[key], types) \
+                        or isinstance(body[key], bool):
+                    self._send_json(
+                        400, {"error": f"{key} must be a number"})
+                    return
+                sample_kw[key] = body[key]
+        if "draft" in body and body["draft"] is not None:
+            if not isinstance(body["draft"], bool):
+                self._send_json(400, {"error": "draft must be a bool"})
+                return
+            sample_kw["draft"] = body["draft"]
         q: "queue.Queue" = queue.Queue()
         try:
             replica, rid = self.router.submit(
                 tokens, max_new,
                 on_token=(lambda _rid, i, tok: q.put((i, tok)))
                 if stream else None,
-                on_done=lambda comp: q.put((_DONE, comp)))
+                on_done=lambda comp: q.put((_DONE, comp)),
+                **sample_kw)
         except ValueError as e:  # validate_request rejected at the door
             self.router.count_rejected()
             self._send_json(400, {"error": str(e)})
@@ -287,6 +306,21 @@ class FrontendServer:
                     f"repro_serving_free_pages{lab} {ps['free_pages']}",
                     f"repro_serving_low_water_pages{lab} "
                     f"{ps['low_water_pages']}",
+                ]
+            sp = r.get("spec_stats") or {}
+            if sp:
+                lines += [
+                    f"repro_serving_spec_steps{lab} {sp['spec_steps']}",
+                    f"repro_serving_spec_proposed{lab} {sp['proposed']}",
+                    f"repro_serving_spec_accepted{lab} {sp['accepted']}",
+                    f"repro_serving_spec_acceptance_rate{lab} "
+                    f"{sp['acceptance_rate']:.6f}",
+                    f"repro_serving_spec_mean_accepted_len{lab} "
+                    f"{sp['mean_accepted_len']:.6f}",
+                    f"repro_serving_spec_accepted_len_p50{lab} "
+                    f"{sp['accepted_len_p50']:.6f}",
+                    f"repro_serving_spec_pruned_frac{lab} "
+                    f"{sp['pruned_frac']:.6f}",
                 ]
         return "\n".join(lines) + "\n"
 

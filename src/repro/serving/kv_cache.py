@@ -210,6 +210,78 @@ def keep_frozen(new: dict, old: dict, advance: jax.Array) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# speculative rollback: snapshot/restore a window of ring positions
+# ---------------------------------------------------------------------------
+# A speculative step writes a (gamma+1)-token chunk at positions
+# pos..pos+C-1 and then keeps only the accepted prefix.  For FULL
+# positional planes rewinding idx is enough (entries past idx are
+# stale-masked, exactly the reset_slots invariant), but sliding-window
+# RING planes reuse slot p % S: the rejected tail's writes LAND ON live
+# history (position p - S), which no mask can bring back.  So the engine
+# snapshots the C ring entries a chunk will overwrite before the step
+# and scatters the rejected tail's originals back after acceptance.
+# Both helpers are applied uniformly to every positional leaf — on full
+# planes the restore re-writes stale entries, a masked no-op — and are
+# traced (they run inside the one jitted speculative step).
+
+
+def snapshot_positions(pool: dict, start: jax.Array, length: int) -> dict:
+    """Copy the pool entries C positions ahead of each slot.
+
+    start: (B,) per-slot first position; length: static C.  For every
+    positional leaf (K, count, B, S, ...) gathers the ring slots
+    (start+t) % S, t in [0, C) -> (K, count, B, C, ...).  Paged planes
+    need no rollback (rejected writes are stale-masked and their pages
+    are reclaimed by the host allocator) and are skipped, as are idx /
+    page_table / recurrent leaves.
+    """
+    t = jnp.arange(length)
+
+    def grab(path, x):
+        if _leaf_name(path) not in _POSITIONAL:
+            # zero-size placeholder keeps the snapshot's tree structure
+            # congruent with the pool's (restore skips it by name)
+            return jnp.zeros((0,), x.dtype)
+        S = x.shape[3]
+        bb = jnp.arange(x.shape[2])[:, None]            # (B, 1)
+        tt = (start[:, None] + t[None, :]) % S          # (B, C)
+        return x[:, :, bb, tt]                          # (K, count, B, C, ..)
+
+    return {"segments": jax.tree_util.tree_map_with_path(
+        grab, pool["segments"])}
+
+
+def restore_positions(pool: dict, snap: dict, start: jax.Array,
+                      keep: jax.Array) -> dict:
+    """Scatter a snapshot's rejected tail back into the pool.
+
+    start: (B,) the snapshot's first position; keep: (B,) how many of
+    the C snapshot entries now hold ACCEPTED tokens (those stay as the
+    verify pass wrote them); entries t in [keep, C) are restored to
+    their pre-step contents.  keep == C is a full no-op, keep == 0 a
+    full rewind.  idx is NOT touched — the caller owns position
+    bookkeeping (the speculative kernel sets idx = start + keep for
+    advanced rows directly).
+    """
+    out = dict(pool)
+
+    def put(path, x, s):
+        if _leaf_name(path) not in _POSITIONAL:
+            return x
+        C = s.shape[3]
+        S = x.shape[3]
+        bb = jnp.arange(x.shape[2])[:, None]            # (B, 1)
+        t = jnp.arange(C)[None, :]
+        tt = (start[:, None] + t) % S
+        tgt = jnp.where(t >= keep[:, None], tt, S)      # kept -> dropped
+        return x.at[:, :, bb, tgt].set(s, mode="drop")
+
+    out["segments"] = jax.tree_util.tree_map_with_path(
+        put, pool["segments"], snap["segments"])
+    return out
+
+
+# ---------------------------------------------------------------------------
 # paged-pool page accounting (host side)
 # ---------------------------------------------------------------------------
 
@@ -289,6 +361,25 @@ class PageAllocator:
         self._dirty = True
         self.low_water = min(self.low_water, len(self._free))
         return True
+
+    def truncate(self, slot: int, n_logical: int) -> int:
+        """Shrink `slot` back to n_logical pages; -> pages reclaimed.
+
+        The speculative engine reserves pages for the full gamma-token
+        lookahead before a step; a short accepted prefix leaves the tail
+        pages holding only rejected (stale-masked) writes, so the
+        scheduler hands them back here after harvest.  Chains only ever
+        shrink from the tail (positions are append-only), and already-
+        short chains are a no-op.
+        """
+        n = len(self._chain[slot]) - max(int(n_logical), 0)
+        if n <= 0:
+            return 0
+        tail = self._chain[slot][-n:]
+        self._chain[slot] = self._chain[slot][:-n]
+        self._free.extend(reversed(tail))
+        self._dirty = True
+        return n
 
     def release(self, slot: int) -> int:
         """Return all of `slot`'s pages to the free list; -> count."""

@@ -3,8 +3,17 @@
 Operates in LOG space (the engine fuses members with
 core.ensemble.ensemble_log_probs) so greedy/temperature/top-k all work
 off one numerically-stable array with no probs->log round trip.
-temperature/top_k are Python statics: the engine closes over them, so
-each serving configuration compiles exactly one step program.
+
+Two tiers: `sample` takes Python-static temperature/top_k (the
+engine-wide defaults; one compiled program per configuration), and
+`sample_slots` takes PER-SLOT traced (B,) vectors so every request in a
+continuous batch can carry its own temperature/top_k/seed through one
+compiled program.  Per-request keys are derived with fold_in(base_key,
+emission_index), so a preempted request regenerates token-identically.
+
+The MIN_*/MAX_* limits below are the named request-validation bounds:
+serving/engine.validate_request rejects out-of-range values at the door
+with errors that quote them.
 """
 from __future__ import annotations
 
@@ -12,6 +21,12 @@ import jax
 import jax.numpy as jnp
 
 NEG_INF = -1e30
+
+# door-time limits for per-request sampling params (validate_request)
+MIN_TEMPERATURE = 0.0
+MAX_TEMPERATURE = 100.0
+MIN_SEED = 0
+MAX_SEED = 2 ** 31 - 1  # top_k's upper bound is the model's vocab_size
 
 
 def top_k_mask(log_probs: jax.Array, k: int) -> jax.Array:
@@ -34,3 +49,40 @@ def sample(key, log_probs: jax.Array, temperature: float = 0.0,
         lp = top_k_mask(lp, top_k)
     return jax.random.categorical(key, lp / temperature,
                                   axis=-1).astype(jnp.int32)
+
+
+def top_k_mask_rows(log_probs: jax.Array, k: jax.Array) -> jax.Array:
+    """Per-row traced top-k: log_probs (B, V), k (B,) int (<= 0 keeps
+    everything).  The traced twin of top_k_mask — a descending sort per
+    row, threshold at each row's own k — with the same tie semantics
+    (entries equal to the k-th value survive)."""
+    V = log_probs.shape[-1]
+    srt = jnp.sort(log_probs, axis=-1)[:, ::-1]
+    kk = jnp.clip(jnp.where(k > 0, k, V), 1, V)
+    thr = jnp.take_along_axis(srt, kk[:, None] - 1, axis=1)
+    return jnp.where(log_probs < thr, NEG_INF, log_probs)
+
+
+def sample_slots(keys: jax.Array, log_probs: jax.Array,
+                 temperature: jax.Array, top_k: jax.Array) -> jax.Array:
+    """Per-slot sampling: every batch row carries its OWN params.
+
+    keys: (B, 2) uint32 per-row PRNG keys; log_probs: (B, V) fused
+    log-probs; temperature/top_k: (B,) traced.  Rows with
+    temperature <= 0 are greedy (argmax — bitwise the static `sample`
+    path); the rest draw categorically at their own temperature over
+    their own top-k bucket.  A lax.cond skips the stochastic branch
+    entirely when the whole batch is greedy, so a greedy-only server
+    pays nothing for the capability.  -> (B,) int32 token ids.
+    """
+    greedy = log_probs.argmax(axis=-1).astype(jnp.int32)
+
+    def stochastic(_):
+        t = jnp.maximum(temperature, 1e-6)[:, None]
+        lp = top_k_mask_rows(log_probs, top_k) / t
+        drawn = jax.vmap(
+            lambda kb, row: jax.random.categorical(kb, row))(keys, lp)
+        return jnp.where(temperature > 0, drawn.astype(jnp.int32), greedy)
+
+    return jax.lax.cond(jnp.any(temperature > 0.0), stochastic,
+                        lambda _: greedy, None)

@@ -92,6 +92,13 @@ class Request:
     submit_t: float
     on_token: Optional[TokenCallback] = field(default=None, repr=False)
     on_done: Optional[DoneCallback] = field(default=None, repr=False)
+    # per-request sampling / speculation overrides; None = engine
+    # default.  Validated at the submit() door against the named limits
+    # in serving/sampling.py (and the model's vocab for top_k).
+    temperature: Optional[float] = None
+    top_k: Optional[int] = None
+    seed: Optional[int] = None
+    draft: Optional[bool] = None
 
 
 @dataclass
@@ -178,7 +185,11 @@ class Scheduler:
 
     def submit(self, tokens, max_new: int,
                on_token: Optional[TokenCallback] = None,
-               on_done: Optional[DoneCallback] = None) -> int:
+               on_done: Optional[DoneCallback] = None,
+               temperature: Optional[float] = None,
+               top_k: Optional[int] = None,
+               seed: Optional[int] = None,
+               draft: Optional[bool] = None) -> int:
         """Queue a request; returns its id (keyed in .completions).
 
         Validates against the engine's budgets HERE so one oversized
@@ -186,17 +197,28 @@ class Scheduler:
         and taking every in-flight request down with it.  Thread-safe:
         HTTP handler threads submit while serve_forever decodes.
 
+        temperature/top_k/seed override the engine-wide sampling
+        defaults for THIS request (None keeps the default; out-of-range
+        values are rejected here against the named limits in
+        serving/sampling.py).  draft toggles speculative decoding per
+        request on a SpeculativeEngine (plain engines ignore it).
+
         on_token(rid, index, token_id) streams each generated token
         from the harvest that first observes it; on_done(completion)
         fires once after the last token.  Both run on the loop thread —
         keep them non-blocking.
         """
-        t = self.engine.validate_request(tokens, max_new)
+        t = self.engine.validate_request(tokens, max_new,
+                                         temperature=temperature,
+                                         top_k=top_k, seed=seed)
         with self._lock:
             rid = self._next_rid
             self._next_rid += 1
-            self.pending.append(Request(rid, t, int(max_new), time.time(),
-                                        on_token=on_token, on_done=on_done))
+            self.pending.append(Request(
+                rid, t, int(max_new), time.time(),
+                on_token=on_token, on_done=on_done,
+                temperature=temperature, top_k=top_k, seed=seed,
+                draft=draft))
         self._wake.set()
         return rid
 
@@ -227,7 +249,14 @@ class Scheduler:
                         break
                     avail -= need
                 req = self.pending.popleft()
-                admits.append((b, req.tokens, req.max_new))
+                # only explicitly-set options ride along, so an unset
+                # draft flag takes the ENGINE's default (plain: off,
+                # speculative: on)
+                opts = {k: v for k, v in (
+                    ("temperature", req.temperature),
+                    ("top_k", req.top_k), ("seed", req.seed),
+                    ("draft", req.draft)) if v is not None}
+                admits.append((b, req.tokens, req.max_new, opts))
                 self.slots[b] = _SlotMeta(
                     req, now,
                     prefill_left=len(req.tokens) if chunked else 0)

@@ -1,0 +1,22 @@
+"""Ensemble-speculative decoding: the distilled student drafts, its
+teachers verify.
+
+The paper's compression loop produces a single student imitating the
+K-member global model (core/compression.py).  Serving keeps BOTH: the
+student proposes gamma tokens per request per iteration (spec/draft.py)
+and the full Eqn-6 fused ensemble scores every drafted position in one
+batched pass (models/transformer.verify_*), accepting the longest
+prefix on which the fused choice agrees (spec/verify.py).  Greedy
+acceptance emits tokens bit-identical to the non-speculative fused
+path; the ensemble pays its K-fold cost once per ACCEPTED RUN instead
+of once per token.  spec/engine.SpeculativeEngine plugs the whole loop
+into the serving stack behind the ordinary EnsembleEngine API.
+"""
+from repro.serving.spec.draft import DraftEngine, as_member_stack, propose
+from repro.serving.spec.engine import SpeculativeEngine
+from repro.serving.spec.verify import (greedy_accept, residual_log_probs,
+                                       stochastic_accept)
+
+__all__ = ["SpeculativeEngine", "DraftEngine", "as_member_stack",
+           "propose", "greedy_accept", "stochastic_accept",
+           "residual_log_probs"]

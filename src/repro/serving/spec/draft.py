@@ -1,0 +1,119 @@
+"""The draft side of ensemble-speculative decoding.
+
+The distilled student (core/compression.py's EC-DNN_L output) runs as a
+K=1 member stack through the SAME slot-indexed cache machinery as its
+teachers: `propose` is the in-kernel drafting loop the speculative
+engine traces (gamma+1 sequential per-slot decode steps building the
+verify chunk), and `DraftEngine` serves the student stand-alone behind
+the ordinary engine API — the reference the round-trip test checks the
+in-kernel draft against token-exactly.
+
+The draft pool is sized max_seq + gamma: the contiguous decode write
+path CLAMPS out-of-range positions (unlike the chunked verify path,
+which drops them), so without the slack a draft proposed past max_seq
+would corrupt the last cache entry.  Clamp-free by construction beats
+masked-after-the-fact.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+from repro.serving import kv_cache, sampling
+from repro.serving.engine import EnsembleEngine
+
+
+def as_member_stack(params, like=None):
+    """Student params -> a K=1 member stack (leading axis added).
+
+    `like`: a stacked params tree of the same architecture (the
+    teachers).  When given, params whose leaves already carry the
+    member axis (matching ranks) pass through with K == 1 enforced;
+    otherwise a leading length-1 axis is added to every leaf.  With
+    like=None the params are taken as UNSTACKED.
+    """
+    if like is not None:
+        l0 = jax.tree.leaves(params)[0]
+        r0 = jax.tree.leaves(like)[0]
+        if l0.ndim == r0.ndim:
+            if l0.shape[0] != 1:
+                raise ValueError(
+                    f"draft stack carries K={l0.shape[0]} members; the "
+                    f"draft model must be a single student (K=1)")
+            return params
+    return jax.tree.map(lambda x: jnp.asarray(x)[None], params)
+
+
+def init_draft_pool(cfg, n_slots: int, max_seq: int, gamma: int) -> dict:
+    """Slot-indexed K=1 cache pool for the draft, with the +gamma
+    overdraft slack (module docstring).  Always contiguous: the draft
+    is one small model, so paging its pool buys nothing — "optionally
+    paged" in the design stays an option, not a requirement."""
+    return kv_cache.init_pool(cfg, 1, n_slots, max_seq + gamma)
+
+
+def propose(draft_params, cfg, cache: dict, tok: jax.Array, gamma: int,
+            keys=None, temperature=None, top_k=None):
+    """Draft gamma tokens per slot and materialize their KV.
+
+    draft_params: K=1 member stack; cache: the draft pool (idx (1, B)
+    == each spec row's position); tok: (B,) the last ACCEPTED token
+    (the chunk's first entry).  Runs gamma+1 sequential per-slot decode
+    steps: step j consumes chunk[j] at position idx+j and yields the
+    proposal chunk[j+1]; the final step only materializes d_gamma's KV
+    (its logits are discarded — the bonus token is the verifier's).
+
+    keys=None drafts greedily (argmax); otherwise keys (B, gamma, 2)
+    with per-row temperature/top_k (B,) sample each proposal from the
+    tempered, top-k-masked student distribution — rows with
+    temperature <= 0 stay greedy.
+
+    -> (chunk (B, gamma+1), draft_lp (B, gamma, V) the log-probs each
+    proposal was drawn from — None on the greedy path, where no
+    rejection test ever reads them (argmax needs no normalization, so
+    greedy skips gamma log_softmax passes) — and the cache with idx
+    advanced by gamma+1).
+    """
+    cols, lps = [tok], []
+    cur = tok
+    for j in range(gamma + 1):
+        def one(p, c):
+            return tf.decode_step_slots(p, cfg, c, cur[:, None])
+
+        lg, cache = jax.vmap(one)(draft_params, cache)  # (1, B, 1, V)
+        if j == gamma:
+            break
+        row = lg[0, :, 0].astype(jnp.float32)
+        nxt = row.argmax(axis=-1).astype(jnp.int32)
+        if keys is not None:
+            lp = jax.nn.log_softmax(row, axis=-1)
+            stoch = temperature > 0.0
+            masked = sampling.top_k_mask_rows(
+                lp, jnp.where(stoch, top_k, 0))
+            scaled = masked / jnp.maximum(temperature, 1e-6)[:, None]
+            drawn = jax.vmap(jax.random.categorical)(keys[:, j], scaled)
+            nxt = jnp.where(stoch, drawn.astype(jnp.int32), nxt)
+            lp = jnp.where(stoch[:, None],
+                           jax.nn.log_softmax(scaled, axis=-1), lp)
+            lps.append(lp)
+        cols.append(nxt)
+        cur = nxt
+    draft_lp = jnp.stack(lps, axis=1) if lps else None
+    return jnp.stack(cols, axis=1), draft_lp, cache
+
+
+class DraftEngine(EnsembleEngine):
+    """The compressed student behind the full serving API, K = 1.
+
+    Exists for two reasons: (a) the compress -> serve round-trip test
+    pins that a student restored through checkpoint/store decodes
+    token-exactly whether served directly (here) or as the in-kernel
+    draft of its teachers; (b) a deployment without spare capacity for
+    the ensemble serves the student alone through the identical path
+    (the paper's EC-DNN_L mode).  Everything — continuous batching,
+    paging, quorum (trivial at K=1) — is inherited unchanged.
+    """
+
+    def __init__(self, cfg, student_params, **kw):
+        super().__init__(cfg, as_member_stack(student_params), **kw)

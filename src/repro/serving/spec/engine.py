@@ -1,0 +1,518 @@
+"""SpeculativeEngine: the distilled student drafts for its teachers.
+
+One speculative iteration per request, all inside ONE jitted program
+(the plain engine's one-program-per-token discipline, kept):
+
+  1. DRAFT   — the K=1 student runs gamma+1 sequential per-slot decode
+               steps (spec/draft.propose), building the verify chunk
+               [tok, d_1..d_gamma] and materializing its own KV;
+  2. VERIFY  — all K members score ALL gamma+1 chunk positions in one
+               batched call (models/transformer.verify_slots, or
+               verify_step_paged over the paged pool) and fuse per
+               position via Eqn 6 — the same chunked scoring machinery
+               as prefill, the same quorum vector, the same psum fusion
+               on a member mesh;
+  3. ACCEPT  — greedy: the longest prefix where each draft equals the
+               fused argmax (emitted tokens are BIT-IDENTICAL to the
+               non-speculative fused path); stochastic (flag):
+               rejection sampling against the tempered fused target;
+  4. ROLLBACK — cache entries past the accepted prefix are restored
+               from a pre-step snapshot (serving/kv_cache
+               .snapshot_positions / restore_positions) and both
+               pools' idx rewind to pos + e; on the paged pool the
+               host then reclaims pages past the accepted length
+               (PageAllocator.truncate) and resyncs its position
+               mirrors from the device.
+
+Speculative member PRUNING rides the verify pass as a traced mask
+(core/ensemble.prunable_members): members whose whole vote mass cannot
+flip the fused argmax at a position are provably skippable.  Inside
+the single fused kernel the mask prices the skip rather than shrinking
+compute — it composes with the quorum vector and the shard_map member
+mesh with zero extra collectives and surfaces as pruned_frac telemetry.
+
+Why it pays: the fused ensemble's K-fold cost is per PROGRAM, not per
+token — verifying gamma+1 positions in one program costs about one
+decode dispatch, so e accepted tokens per iteration cut the ensemble's
+per-token price by ~e.  The student is the natural free draft: the
+compression loop already trains it to imitate exactly the distribution
+the verifier fuses, so agreement — and thus acceptance — is what
+distillation optimizes.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import sharding as shd
+from repro.common.types import ModelConfig
+from repro.core import ensemble as ens
+from repro.models import transformer as tf
+from repro.serving import kv_cache, sampling
+from repro.serving.engine import EnsembleEngine, SlotState
+from repro.serving.spec import draft as draft_mod
+from repro.serving.spec import verify as verify_mod
+
+# fold_in salts separating the speculative PRNG streams from the plain
+# path's per-emission keys (fold_in(skey, n_gen)) and from each other
+_SALT_DRAFT, _SALT_ACCEPT, _SALT_RESAMPLE = 0x5D1, 0x5D2, 0x5D3
+
+# stats vector layout: [proposed, accepted, spec_steps, prunable_count,
+# prunable_total, hist(e = 0..gamma+1)]
+_N_HEAD = 5
+
+
+class SpeculativeEngine(EnsembleEngine):
+    """EnsembleEngine + a student draft model; same host API.
+
+    draft_params: the compressed student — unstacked or a K=1 member
+    stack.  By default it shares the members' architecture (the shape
+    core/compression.py distills into); draft_cfg overrides that with a
+    smaller config (fewer layers, the classic cheap-draft setup) as
+    long as vocab and dtype match — acceptance then depends on how well
+    the small student imitates the fused distribution.  gamma: drafted
+    tokens per iteration.  spec_sampling=False (default) is greedy
+    speculative decoding — emitted tokens bit-identical to the
+    non-speculative fused path; True turns on rejection sampling for
+    temperature>0 requests.
+
+    Per-request opt-out: admit with {"draft": False} (scheduler
+    Request.draft / HTTP body "draft") — those slots take the plain
+    one-token path through the same kernel.  A batch with NO drafting
+    slot dispatches the inherited plain step, so `--draft off` serving
+    is bit-identical to today's engine, program for program.
+
+    Gated to attention-only stacks (recurrent mixers carry no
+    positional axis to roll back) with chunked prefill enabled (the
+    verify pass IS chunked scoring).  The draft pool is contiguous,
+    replicated on a member mesh (the student is one small model — every
+    device re-runs it identically rather than sharding K=1 over M).
+    """
+
+    def __init__(self, cfg: ModelConfig, stacked_params, draft_params, *,
+                 draft_cfg: Optional[ModelConfig] = None, gamma: int = 4,
+                 spec_sampling: bool = False, **kw):
+        if gamma < 1:
+            raise ValueError(f"gamma must be >= 1, got {gamma}")
+        self.gamma = int(gamma)
+        self.spec_sampling = bool(spec_sampling)
+        super().__init__(cfg, stacked_params, **kw)
+        self.draft_cfg = cfg if draft_cfg is None else draft_cfg
+        if self.prefill_chunk <= 0:
+            raise ValueError(
+                "speculative serving needs chunked prefill "
+                "(prefill_chunk > 0): the verify pass reuses it")
+        if self.draft_cfg.vocab_size != cfg.vocab_size \
+                or self.draft_cfg.dtype != cfg.dtype:
+            raise ValueError(
+                f"draft_cfg vocab/dtype "
+                f"({self.draft_cfg.vocab_size}/{self.draft_cfg.dtype}) "
+                f"must match the ensemble's "
+                f"({cfg.vocab_size}/{cfg.dtype})")
+        for c in (cfg, self.draft_cfg):
+            if c.enc_dec:
+                raise ValueError("speculative serving does not support "
+                                 "enc-dec archs")
+            for _, specs in c.segments():
+                for spec in specs:
+                    if spec.mixer not in ("attn", "attn_local") \
+                            or spec.ffn == "rwkv_cmix":
+                        raise ValueError(
+                            f"speculative serving needs attention-only, "
+                            f"rollback-able layers; got mixer="
+                            f"{spec.mixer!r} ffn={spec.ffn!r}")
+        self.draft_params = draft_mod.as_member_stack(
+            draft_params, like=stacked_params)
+        tpl = tf.init(jax.random.PRNGKey(0), self.draft_cfg)
+        d_un = jax.tree.map(lambda x: x[0], self.draft_params)
+        if jax.tree.structure(tpl) != jax.tree.structure(d_un):
+            raise ValueError(
+                "draft params do not have the draft architecture's tree "
+                "structure — pass draft_cfg matching the student")
+        for o, n in zip(jax.tree.leaves(tpl), jax.tree.leaves(d_un)):
+            if o.shape != n.shape or o.dtype != n.dtype:
+                raise ValueError(
+                    f"draft leaf {n.shape}/{n.dtype} does not match the "
+                    f"draft architecture's layout {o.shape}/{o.dtype}")
+        self.draft_cache = draft_mod.init_draft_pool(
+            self.draft_cfg, self.n_slots, self.max_seq, self.gamma)
+        self.stats_vec = jnp.zeros((_N_HEAD + self.gamma + 2,),
+                                   jnp.float32)
+        if self.mesh is not None:
+            rep = lambda t: jax.device_put(
+                t, shd.make_shardings(self.mesh, shd.replicated_pspecs(t)))
+            self.draft_params = rep(self.draft_params)
+            self.draft_cache = rep(self.draft_cache)
+            self.stats_vec = rep(self.stats_vec)
+        # host mirrors: which slots hold live requests / draft-on
+        # requests (the scheduler's 'any spec work?' dispatch test)
+        self._host_draft = np.zeros(self.n_slots, bool)
+        self._host_live = np.zeros(self.n_slots, bool)
+        self.spec_steps_run = 0
+
+        from jax.sharding import PartitionSpec as P
+        pspec, cspec = (shd.member_pspecs(self.params),
+                        shd.member_pspecs(self.cache))
+        sspec = shd.replicated_pspecs(self.state)
+        dp = shd.replicated_pspecs(self.draft_params)
+        dc = shd.replicated_pspecs(self.draft_cache)
+        q, s = P(shd.MEMBER_AXIS), P()
+        self._spec = self._compile(
+            self._spec_step_impl, donate=(2, 3, 4, 6),
+            in_specs=(pspec, dp, cspec, dc, sspec, q, s),
+            out_specs=(sspec, cspec, dc, s))
+        self._dprefill = self._compile(
+            self._draft_prefill_impl, donate=(1,),
+            in_specs=(dp, dc, sspec, s), out_specs=dc)
+        self._dreset = self._compile(
+            lambda c, adm: kv_cache.reset_slots(c, adm), donate=(0,),
+            in_specs=(dc, s), out_specs=dc)
+
+    def _default_draft(self) -> bool:
+        return True
+
+    def _sync_each_step(self) -> bool:
+        return True
+
+    # -- jitted kernels -----------------------------------------------------
+
+    def _row_keys(self, st: SlotState, salt: int, width: int) -> jax.Array:
+        """(B, width, 2) per-row, per-offset keys for this iteration:
+        fold_in(fold_in(fold_in(skey, salt), n_gen), j) — a pure
+        function of request state, so a preempted-and-replayed request
+        draws identically."""
+        def one(k, n):
+            base = jax.random.fold_in(jax.random.fold_in(k, salt), n)
+            return jax.vmap(
+                lambda j: jax.random.fold_in(base, j))(jnp.arange(width))
+        return jax.vmap(one)(st.skey, st.n_gen)
+
+    def _spec_step_impl(self, params, draft_params, cache, draft_cache,
+                        st: SlotState, quorum, stats):
+        """One speculative iteration for every slot, one program.
+
+        Rows mix freely: spec rows (active, decoding, draft-on) draft
+        and verify gamma+1 positions; draft-off decoding rows verify
+        exactly one (the plain step, through the verify kernel); frozen
+        rows (idle / mid-prompt / done) are bit-exact no-ops via
+        n_tok=0 masking plus snapshot-restore of their draft window.
+        """
+        B = st.tok.shape[0]
+        G, C = self.gamma, self.gamma + 1
+        adv = st.active & ~st.done & (st.pos >= st.prompt_len)
+        spec_row = adv & st.draft
+
+        # snapshots BEFORE any write: the ensemble pool's next C ring
+        # entries per row, and the draft pool's C entries at each row's
+        # OWN draft idx (frozen rows' draft positions differ from
+        # st.pos; the propose loop below dirties THEIR window, and a
+        # ring plane's wrapped write would clobber live history — the
+        # snapshot covers exactly what gets dirtied)
+        snap = kv_cache.snapshot_positions(cache, st.pos, C)
+        d_idx0 = draft_cache["idx"]
+        d_start = d_idx0[0]
+        dsnap = kv_cache.snapshot_positions(draft_cache, d_start, C)
+
+        # -- 1. draft
+        dkeys = temp = topk = None
+        if self.spec_sampling:
+            dkeys = self._row_keys(st, _SALT_DRAFT, G)
+            temp, topk = st.temp, st.topk
+        chunk, draft_lp, draft_cache = draft_mod.propose(
+            draft_params, self.draft_cfg, draft_cache, st.tok, G,
+            keys=dkeys, temperature=temp, top_k=topk)
+
+        # -- 2. verify: every member scores all C positions at once
+        n_val = jnp.where(spec_row, C,
+                          jnp.where(adv, 1, 0)).astype(jnp.int32)
+        if self.paged:
+            def one(p, c):
+                return tf.verify_step_paged(p, self.cfg, c, chunk, n_val)
+        else:
+            def one(p, c):
+                return tf.verify_slots(p, self.cfg, c, chunk, n_val)
+        lg, cache = jax.vmap(one)(params, cache)  # (K, B, C, V)
+        if self.mesh is None:
+            # single-device: one log_softmax pass feeds both the Eqn-6
+            # fusion and the pruning test below
+            mlp = ens.member_log_probs(lg)
+            fused = ens.ensemble_log_probs(lg, weights=quorum,
+                                           member_lp=mlp)
+        else:
+            mlp = None
+            fused = self._fuse(lg, quorum)        # (B, C, V)
+        choice = fused.argmax(axis=-1).astype(jnp.int32)
+
+        # speculative member pruning (telemetry; see module docstring)
+        qsum = quorum.sum()
+        if self.mesh is not None:
+            qsum = jax.lax.psum(qsum, shd.MEMBER_AXIS)
+        wn = quorum / jnp.maximum(qsum, 1e-9)
+        prunable = ens.prunable_members(lg, fused, wn,
+                                        member_lp=mlp)  # (K_local, B, C)
+        validp = spec_row[:, None] & (jnp.arange(C)[None, :]
+                                      < n_val[:, None])
+        pc = jnp.where(validp[None], prunable, False).sum() \
+            .astype(jnp.float32)
+        pt = jnp.float32(lg.shape[0]) * validp.sum().astype(jnp.float32)
+        if self.mesh is not None:
+            pc = jax.lax.psum(pc, shd.MEMBER_AXIS)
+            pt = jax.lax.psum(pt, shd.MEMBER_AXIS)
+
+        # -- 3. accept
+        a = verify_mod.greedy_accept(chunk[:, 1:], choice)
+        emit_tok = choice
+        if self.spec_sampling:
+            stoch = st.temp > 0.0
+            f_t = self._tempered(fused, st, stoch)
+            akeys = self._row_keys(st, _SALT_ACCEPT, G)
+            u = jax.vmap(jax.vmap(
+                lambda k: jax.random.uniform(k, ())))(akeys)
+            a_s = verify_mod.stochastic_accept(u, chunk[:, 1:], f_t,
+                                               draft_lp)
+            a = jnp.where(stoch, a_s, a)
+            a = jnp.where(spec_row, a, 0)
+            # resample the first rejection from the residual; a == G
+            # means every draft survived and the bonus token draws from
+            # the full target.  Draft-off stochastic rows draw from the
+            # tempered fused at position 0 with the PLAIN path's key,
+            # so they match a non-speculative stochastic engine.
+            aa = jnp.clip(a, 0, G)
+            p_a = jnp.take_along_axis(
+                f_t, aa[:, None, None], axis=1)[:, 0]
+            q_a = jnp.take_along_axis(
+                draft_lp, jnp.clip(aa, 0, G - 1)[:, None, None],
+                axis=1)[:, 0]
+            rep_lp = jnp.where((a >= G)[:, None], p_a,
+                               verify_mod.residual_log_probs(p_a, q_a))
+            rep_lp = jnp.where(spec_row[:, None], rep_lp, f_t[:, 0])
+            rkeys = self._row_keys(st, _SALT_RESAMPLE, 1)[:, 0]
+            plain = jax.vmap(jax.random.fold_in)(st.skey, st.n_gen)
+            rkeys = jnp.where(spec_row[:, None], rkeys, plain)
+            repl = jax.vmap(jax.random.categorical)(
+                rkeys, rep_lp).astype(jnp.int32)
+            drafts_pad = jnp.concatenate(
+                [chunk[:, 1:], jnp.zeros((B, 1), jnp.int32)], axis=1)
+            s_emit = jnp.where(jnp.arange(C)[None, :] < a[:, None],
+                               drafts_pad, repl[:, None])
+            emit_tok = jnp.where(stoch[:, None], s_emit, emit_tok)
+        a = jnp.where(spec_row, a, 0)
+
+        # -- clamps: e = tokens consumed/emitted this iteration
+        e = a + 1
+        e = jnp.minimum(e, jnp.maximum(n_val, 1))  # draft-off rows: 1
+        rem = st.max_new - st.n_gen
+        e = jnp.minimum(e, jnp.maximum(rem, 1))    # budget
+        if self.eos_id >= 0:
+            is_eos = emit_tok == self.eos_id
+            eos_pos = jnp.where(is_eos.any(axis=1),
+                                is_eos.argmax(axis=1), C)
+            e = jnp.minimum(e, eos_pos + 1)        # stop AT first EOS
+        e = jnp.where(adv, e, 0)
+
+        # -- bookkeeping (the plain step's emit logic, e tokens wide)
+        G_out = st.out.shape[1]
+        relp = jnp.arange(G_out)[None, :] - st.n_gen[:, None]
+        take = (relp >= 0) & (relp < e[:, None])
+        vals = jnp.take_along_axis(emit_tok, jnp.clip(relp, 0, C - 1),
+                                   axis=1)
+        out = jnp.where(take, vals, st.out)
+        n_gen = st.n_gen + e
+        last = jnp.take_along_axis(
+            emit_tok, jnp.clip(e - 1, 0, C - 1)[:, None], axis=1)[:, 0]
+        tok = jnp.where(adv, last, st.tok)
+        finished = adv & (n_gen >= st.max_new)
+        if self.eos_id >= 0:
+            finished |= adv & (last == self.eos_id)
+        done = st.done | finished
+        pos1 = st.pos + e
+
+        # -- 4. rollback past the accepted prefix
+        keep = jnp.where(adv, e, 0)
+        cache = kv_cache.restore_positions(cache, snap, st.pos, keep)
+        cache["idx"] = jnp.broadcast_to(
+            jnp.where(adv, pos1, st.pos)[None, :], cache["idx"].shape)
+        keep_d = jnp.where(spec_row, e, 0)
+        draft_cache = kv_cache.restore_positions(draft_cache, dsnap,
+                                                 d_start, keep_d)
+        draft_cache["idx"] = jnp.where(spec_row[None, :], pos1[None, :],
+                                       d_idx0)
+
+        # -- stats
+        sp = spec_row.astype(jnp.float32)
+        head = jnp.stack([
+            sp.sum() * G,                                  # proposed
+            ((e.astype(jnp.float32) - 1.0) * sp).sum(),    # accepted
+            jnp.asarray(1.0, jnp.float32),                 # spec steps
+            pc, pt])
+        hist = (jax.nn.one_hot(jnp.clip(e, 0, G + 1), G + 2)
+                * sp[:, None]).sum(axis=0)
+        stats = stats + jnp.concatenate([head, hist])
+
+        return st._replace(tok=tok, pos=pos1, n_gen=n_gen, done=done,
+                           out=out), cache, draft_cache, stats
+
+    def _tempered(self, fused, st: SlotState, stoch) -> jax.Array:
+        """Per-row tempered + top-k-masked target log-probs
+        (B, C, V); rows with temperature <= 0 ride through raw."""
+        B, C, V = fused.shape
+        flat = fused.reshape(B * C, V)
+        kk = jnp.repeat(jnp.where(stoch, st.topk, 0), C)
+        tt = jnp.repeat(jnp.maximum(st.temp, 1e-6), C)
+        m = sampling.top_k_mask_rows(flat, kk) / tt[:, None]
+        out = jax.nn.log_softmax(m, axis=-1).reshape(B, C, V)
+        return jnp.where(stoch[:, None, None], out, fused)
+
+    def _draft_prefill_impl(self, draft_params, draft_cache,
+                            st: SlotState, slot):
+        """Mirror of the main prefill for the K=1 draft pool: consume
+        up to prefill_chunk prompt tokens of ONE draft-on slot.  Runs
+        BEFORE the main prefill program (it reads the pre-advance
+        st.pos).  Logits are discarded — the first generated token is
+        the VERIFIER's (sampled by the main prefill), and the draft
+        consumes it at the next speculative step."""
+        C = self.prefill_chunk
+        pos, plen = st.pos[slot], st.prompt_len[slot]
+        need = (st.active[slot] & ~st.done[slot] & (pos < plen)
+                & st.draft[slot])
+        n_tok = jnp.where(need, jnp.minimum(C, plen - pos), 0)
+        P_ = st.prompt.shape[1]
+        cols = jnp.clip(pos + jnp.arange(C), 0, P_ - 1)
+        chunk = st.prompt[slot][cols][None]  # (1, C)
+        row = kv_cache.slot_row(draft_cache, slot)
+
+        def one(p, c):
+            return tf.prefill_slots(p, self.draft_cfg, c, chunk,
+                                    n_tok[None])
+
+        _, row = jax.vmap(one)(draft_params, row)
+        return kv_cache.write_slot_row(draft_cache, row, slot)
+
+    # -- host API -----------------------------------------------------------
+
+    def reserve_decode_pages(self) -> list:
+        """Like the base engine's, but draft-on slots reserve the FULL
+        gamma+1 lookahead (clamped to the request's remaining budget):
+        the verify pass writes up to C positions before acceptance is
+        known.  Pages past the accepted length are reclaimed after the
+        step (PageAllocator.truncate)."""
+        if not self.paged:
+            return []
+        starved = []
+        for b in np.nonzero(self._host_decoding())[0]:
+            pos = int(self._host_pos[b])
+            look = 1
+            if self._host_draft[b]:
+                end = int(self._host_plen[b] + self._host_new[b]) - 1
+                look = max(min(self.gamma + 1, end - pos), 1)
+            last = pos + look - 1
+            if self.allocator.holds(b, last):
+                continue
+            if self.allocator.alloc(b, last // self.page_size + 1):
+                self._table_stale = True
+            else:
+                starved.append(int(b))
+        if self._table_stale:
+            self._sync_table()
+        return starved
+
+    def step(self) -> SlotState:
+        """One speculative iteration when any live slot drafts;
+        otherwise the inherited plain step, program for program (so an
+        all-draft-off server is bit-identical to EnsembleEngine)."""
+        if not bool((self._host_draft & self._host_live).any()):
+            return super().step()
+        if self.paged:
+            starved = self.reserve_decode_pages()
+            if starved:
+                raise RuntimeError(
+                    f"paged pool out of pages for decoding slots "
+                    f"{starved} ({self.allocator.free_pages} free of "
+                    f"{self.n_pages}); release finished slots or "
+                    f"preempt (Scheduler.run does) before stepping")
+        (self.state, self.cache, self.draft_cache,
+         self.stats_vec) = self._spec(
+            self.params, self.draft_params, self.cache,
+            self.draft_cache, self.state, self.quorum, self.stats_vec)
+        self.steps_run += 1
+        self.spec_steps_run += 1
+        if self.paged:
+            # a speculative step advances each row by its OWN e — the
+            # +1-per-step host mirror does not apply.  One transfer
+            # resyncs positions (pos = plen + n_gen - 1 during decode)
+            # and hands back pages past the accepted length.
+            n_gen = np.asarray(jax.device_get(self.state.n_gen))
+            for b in np.nonzero(self._host_active)[0]:
+                if self._host_pos[b] < self._host_plen[b]:
+                    continue  # prefill owns this slot
+                newpos = int(self._host_plen[b]
+                             + max(int(n_gen[b]), 1) - 1)
+                self._host_pos[b] = newpos
+                if self.allocator.truncate(
+                        int(b), newpos // self.page_size + 1):
+                    self._table_stale = True
+        return self.state
+
+    def prefill(self, slot: int) -> SlotState:
+        if 0 <= int(slot) < self.n_slots and self._host_draft[int(slot)]:
+            if self.prefill_chunk <= 0:
+                raise ValueError("engine built with prefill_chunk=0 "
+                                 "(per-token reference path)")
+            self.draft_cache = self._dprefill(
+                self.draft_params, self.draft_cache, self.state,
+                jnp.asarray(slot, jnp.int32))
+        return super().prefill(slot)
+
+    def update_slots(self, release: Sequence[int] = (),
+                     admits: Sequence[tuple] = ()):
+        norm = []
+        for entry in admits:
+            opts = dict(entry[3]) if len(entry) > 3 and entry[3] else {}
+            opts.setdefault("draft", True)
+            norm.append((entry[0], entry[1], entry[2], opts))
+        super().update_slots(release=release, admits=norm)
+        adm = np.zeros((self.n_slots,), bool)
+        for b in release:
+            self._host_draft[int(b)] = False
+            self._host_live[int(b)] = False
+        for b, _, _, opts in norm:
+            self._host_draft[int(b)] = bool(opts["draft"])
+            self._host_live[int(b)] = True
+            adm[int(b)] = True
+        if adm.any():
+            self.draft_cache = self._dreset(self.draft_cache,
+                                            jnp.asarray(adm))
+
+    def spec_stats(self) -> dict:
+        """Acceptance / pruning telemetry, one device transfer.
+
+        accepted_len counts EMITTED tokens per speculative iteration
+        (accepted drafts + the verifier's own token), i.e. e in
+        [1, gamma+1]; acceptance_rate is accepted drafts / proposed
+        drafts; pruned_frac the fraction of (member, position) votes
+        provably unable to flip the fused argmax.
+        """
+        v = np.asarray(jax.device_get(self.stats_vec), np.float64)
+        proposed, accepted, steps, pc, pt = v[:_N_HEAD]
+        hist = v[_N_HEAD:]
+        tot = hist.sum()
+        lens = np.arange(self.gamma + 2, dtype=np.float64)
+        p50 = 0.0
+        if tot > 0:
+            p50 = float(np.argmax(np.cumsum(hist) >= (tot + 1) / 2.0))
+        return {
+            "gamma": self.gamma,
+            "spec_steps": int(steps),
+            "proposed": int(proposed),
+            "accepted": int(accepted),
+            "acceptance_rate": float(accepted / proposed)
+            if proposed > 0 else 0.0,
+            "mean_accepted_len": float((hist * lens).sum() / tot)
+            if tot > 0 else 0.0,
+            "accepted_len_p50": p50,
+            "pruned_frac": float(pc / pt) if pt > 0 else 0.0,
+            "emitted_hist": [int(x) for x in hist],
+        }

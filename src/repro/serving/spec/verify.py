@@ -1,0 +1,73 @@
+"""Draft-acceptance rules for ensemble-speculative decoding.
+
+Pure jnp over already-computed distributions; no model code.  The
+verify pass hands in the fused Eqn-6 log-probs at every chunk position
+(fused[:, j] is the ensemble's next-token distribution AFTER consuming
+chunk entry j) and the student's proposal distributions; these helpers
+decide how many drafted tokens survive.
+
+Greedy (the default serving mode): a draft d_{j+1} is accepted iff it
+equals the fused argmax c_j, so the emitted tokens are EXACTLY the
+greedy chain of the fused ensemble — speculation changes the schedule,
+never the text (the --spec bench gate pins this bit-identically).
+
+Stochastic (behind SpeculativeEngine(spec_sampling=True)): classic
+rejection sampling — accept d w.p. min(1, p(d)/q(d)) against the
+tempered target p and proposal q, resample rejections from the
+normalized residual max(p - q, 0), and draw the free bonus token from
+the full target when every draft survives; the emitted tokens are then
+distributed exactly as sequential sampling from p.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy_accept(drafts: jax.Array, choice: jax.Array) -> jax.Array:
+    """Longest accepted prefix under greedy agreement.
+
+    drafts: (B, G) proposed tokens d_1..d_G; choice: (B, >= G) fused
+    greedy choices, choice[:, j] = c_j = argmax of the fused
+    distribution after consuming chunk entry j.  d_{j+1} survives iff
+    it matches c_j AND every earlier draft survived.  -> (B,) int32
+    accepted count a in [0, G].
+    """
+    G = drafts.shape[1]
+    agree = (drafts == choice[:, :G]).astype(jnp.int32)
+    return jnp.cumprod(agree, axis=1).sum(axis=1)
+
+
+def stochastic_accept(u: jax.Array, drafts: jax.Array,
+                      target_lp: jax.Array,
+                      draft_lp: jax.Array) -> jax.Array:
+    """Rejection-sampling acceptance: accept d_{j+1} iff
+    u_j < p_j(d_{j+1}) / q_j(d_{j+1}).
+
+    u: (B, G) uniforms; drafts: (B, G); target_lp: (B, >= G, V) fused
+    log-probs (position j is the target for d_{j+1}); draft_lp:
+    (B, G, V) proposal log-probs.  -> (B,) int32 accepted count.
+    """
+    G = drafts.shape[1]
+    g = drafts[..., None]
+    lp_p = jnp.take_along_axis(target_lp[:, :G], g, axis=-1)[..., 0]
+    lp_q = jnp.take_along_axis(draft_lp, g, axis=-1)[..., 0]
+    acc = (u < jnp.exp(jnp.minimum(lp_p - lp_q, 0.0))).astype(jnp.int32)
+    return jnp.cumprod(acc, axis=1).sum(axis=1)
+
+
+def residual_log_probs(target_lp: jax.Array,
+                       draft_lp: jax.Array) -> jax.Array:
+    """log of normalize(max(p - q, 0)) — the rejection-resample law.
+
+    target_lp / draft_lp: (..., V) log-probs.  Where the residual is
+    empty (q covers p exactly, e.g. draft == target) falls back to the
+    target itself, which is the correct limit: acceptance is then 1 and
+    this branch is never drawn from, but categorical() still needs a
+    finite row.
+    """
+    r = jnp.maximum(jnp.exp(target_lp) - jnp.exp(draft_lp), 0.0)
+    rs = r.sum(axis=-1, keepdims=True)
+    safe = jnp.where(rs > 1e-9, r / jnp.maximum(rs, 1e-9),
+                     jnp.exp(target_lp))
+    return jnp.log(jnp.maximum(safe, 1e-30))

@@ -1,0 +1,424 @@
+"""Ensemble-speculative decoding (serving/spec): the distilled student
+drafts gamma tokens per iteration, all K teachers verify every position
+in one batched program, and the longest fused-greedy-agreeing prefix is
+accepted.  The invariant under test everywhere: speculation NEVER
+changes tokens, only their cost — greedy outputs are bit-identical to
+the non-speculative fused path on every engine variant (contiguous,
+paged, shallow draft_cfg, --draft off), and the stochastic path is
+deterministic under its per-request seed.
+"""
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+from repro.configs import registry
+from repro.core import compression as comp
+from repro.core import distill
+from repro.core import ensemble as ens
+from repro.models import transformer as tf
+from repro.runtime import steps as rt_steps
+from repro.serving import EnsembleEngine, Scheduler, kv_cache
+from repro.serving.frontend.router import Replica
+from repro.serving.spec import DraftEngine, SpeculativeEngine
+from repro.serving.spec import draft as draft_mod
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.serving_bench import python_loop_decode as _seed_loop
+
+CFG = registry.get_config("gemma3-1b", reduced=True).with_(dtype="float32")
+
+
+def _params(cfg, K, seed=0):
+    return jax.vmap(lambda k: tf.init(k, cfg))(
+        jax.random.split(jax.random.PRNGKey(seed), K))
+
+
+def _prompts(B, plen, seed=1):
+    return list(np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed), (B, plen), 0, CFG.vocab_size)))
+
+
+# ---------------------------------------------------------------------------
+# verify kernel
+# ---------------------------------------------------------------------------
+
+
+def test_verify_slots_matches_sequential_decode():
+    """Scoring a C-token chunk in one verify_slots call must reproduce
+    C sequential decode_step_slots calls to float tolerance (chunked
+    GEMMs reduce in a different order, so logits differ by epsilon;
+    the TOKEN stream's bit-identity is pinned by the e2e tests, where
+    f32 keeps argmax away from epsilon ties)."""
+    B, C, S = 3, 5, 24
+    p = jax.tree.map(lambda x: x[0], _params(CFG, 1, seed=3))
+    chunk = jax.random.randint(jax.random.PRNGKey(4), (B, C), 0,
+                               CFG.vocab_size)
+
+    c_seq = tf.init_slot_cache(CFG, B, max_seq=S)
+    seq_logits = []
+    for j in range(C):
+        lg, c_seq = tf.decode_step_slots(p, CFG, c_seq, chunk[:, j][:, None])
+        seq_logits.append(lg[:, 0])
+    ref = jnp.stack(seq_logits, axis=1)  # (B, C, V)
+
+    c_ver = tf.init_slot_cache(CFG, B, max_seq=S)
+    got, c_ver = tf.verify_slots(p, CFG, c_ver, chunk,
+                                 jnp.full((B,), C, jnp.int32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+    for a, b in zip(jax.tree.leaves(c_ver), jax.tree.leaves(c_seq)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_verify_slots_n_tok_zero_is_noop():
+    B, C, S = 2, 4, 16
+    p = jax.tree.map(lambda x: x[0], _params(CFG, 1, seed=5))
+    cache = tf.init_slot_cache(CFG, B, max_seq=S)
+    before = jax.tree.map(lambda x: np.asarray(x), cache)
+    chunk = jnp.zeros((B, C), jnp.int32)
+    _, after = tf.verify_slots(p, CFG, cache, chunk,
+                               jnp.zeros((B,), jnp.int32))
+    for a, b in zip(jax.tree.leaves(after), jax.tree.leaves(before)):
+        np.testing.assert_array_equal(np.asarray(a), b)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end bit-identity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_spec_greedy_bit_identical(paged):
+    """Distinct members + a same-architecture student: acceptance is
+    low, output must still match the plain fused engine bit for bit —
+    on the contiguous pool and on the paged pool (page-table rollback
+    via PageAllocator.truncate)."""
+    K, B, plen, steps = 3, 3, 6, 10
+    params = _params(CFG, K, seed=7)
+    student = jax.tree.map(lambda x: x[0], params)
+    prompts = _prompts(B, plen)
+    kw = dict(n_slots=B, max_prompt=plen, max_out=steps, prefill_chunk=4)
+    if paged:
+        kw.update(paged=True, page_size=4, n_pages=64)
+    ref = EnsembleEngine(CFG, params, **kw).generate(prompts, max_new=steps)
+    spec = SpeculativeEngine(CFG, params, student, gamma=3, **kw)
+    outs = spec.generate(prompts, max_new=steps)
+    for a, b in zip(outs, ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    st = spec.spec_stats()
+    assert st["spec_steps"] > 0 and st["proposed"] > 0
+
+
+def test_spec_draft_off_bit_identical():
+    """Per-request opt-out ({"draft": False}) must ride the inherited
+    plain step — tokens identical to today's engine."""
+    K, B, plen, steps = 2, 3, 5, 8
+    params = _params(CFG, K, seed=9)
+    prompts = _prompts(B, plen, seed=2)
+    kw = dict(n_slots=B, max_prompt=plen, max_out=steps, prefill_chunk=4)
+    ref = EnsembleEngine(CFG, params, **kw).generate(prompts, max_new=steps)
+    spec = SpeculativeEngine(CFG, params,
+                             jax.tree.map(lambda x: x[0], params),
+                             gamma=3, **kw)
+    sched = Scheduler(spec)
+    rids = [sched.submit(p, steps, draft=False) for p in prompts]
+    comps = sched.run()
+    for i, r in enumerate(rids):
+        np.testing.assert_array_equal(np.asarray(comps[r].tokens),
+                                      np.asarray(ref[i]))
+    assert spec.spec_stats()["spec_steps"] == 0  # plain program only
+
+
+def test_shallow_draft_cfg_perfect_distillation():
+    """The bench construction, pinned as a correctness property: members
+    whose layers past depth-2 are residual no-ops (w_o = w_down = 0)
+    are reproduced BITWISE by the 2-layer truncation of the same
+    weights, so every draft is accepted and output still matches."""
+    K, B, plen, steps = 4, 2, 4, 9  # steps-1 = 2 chunks of gamma+1 = 4
+    gamma = 3
+    draft_cfg = CFG.with_(n_layers=2)
+    full = tf.init(jax.random.PRNGKey(11), CFG)
+
+    student = tf.init(jax.random.PRNGKey(12), draft_cfg)
+    student["embed"] = full["embed"]
+    student["final_norm"] = full["final_norm"]
+    for i in range(draft_cfg.n_layers):
+        student["segments"][0][f"slot_{i}"] = \
+            full["segments"][0][f"slot_{i}"]
+
+    member = jax.tree.map(lambda x: x, full)
+    names = [(0, f"slot_{i}") for i in range(6)] + [(1, "slot_0")]
+    for s, name in names[draft_cfg.n_layers:]:
+        layer = member["segments"][s][name]
+        layer["attn"]["w_o"] = jnp.zeros_like(layer["attn"]["w_o"])
+        layer["mlp"]["w_down"] = jnp.zeros_like(layer["mlp"]["w_down"])
+    params = jax.tree.map(lambda x: jnp.stack([x] * K), member)
+
+    prompts = _prompts(B, plen, seed=3)
+    kw = dict(n_slots=B, max_prompt=plen, max_out=steps, prefill_chunk=4)
+    ref = EnsembleEngine(CFG, params, **kw).generate(prompts, max_new=steps)
+    spec = SpeculativeEngine(CFG, params, student, draft_cfg=draft_cfg,
+                             gamma=gamma, **kw)
+    outs = spec.generate(prompts, max_new=steps)
+    for a, b in zip(outs, ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert spec.spec_stats()["acceptance_rate"] == 1.0
+
+
+def test_spec_stochastic_deterministic_under_seed():
+    """Rejection sampling (spec_sampling=True) with per-request seeds:
+    two identical engines must produce identical tokens."""
+    K, B, plen, steps = 2, 2, 4, 8
+    params = _params(CFG, K, seed=13)
+    student = jax.tree.map(lambda x: x[0], params)
+    prompts = _prompts(B, plen, seed=4)
+    kw = dict(n_slots=B, max_prompt=plen, max_out=steps, prefill_chunk=4)
+
+    def run():
+        spec = SpeculativeEngine(CFG, params, student, gamma=3,
+                                 spec_sampling=True, **kw)
+        sched = Scheduler(spec)
+        rids = [sched.submit(p, steps, temperature=0.9, top_k=20, seed=42)
+                for p in prompts]
+        comps = sched.run()
+        return [np.asarray(comps[r].tokens) for r in rids]
+
+    a, b = run(), run()
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+# ---------------------------------------------------------------------------
+# draft / accept / prune units
+# ---------------------------------------------------------------------------
+
+
+def test_propose_greedy_matches_sequential_and_skips_lp():
+    B, G, S = 2, 3, 16
+    stack = _params(CFG, 1, seed=15)
+    tok = jnp.array([3, 7], jnp.int32)
+
+    cache = draft_mod.init_draft_pool(CFG, B, S - G, G)
+    chunk, draft_lp, _ = draft_mod.propose(stack, CFG, cache, tok, G)
+    assert draft_lp is None  # greedy path skips the log_softmax passes
+    assert chunk.shape == (B, G + 1)
+
+    c_seq = draft_mod.init_draft_pool(CFG, B, S - G, G)
+    cur, toks = tok, [tok]
+    for _ in range(G):
+        lg, c_seq = jax.vmap(
+            lambda p, c: tf.decode_step_slots(p, CFG, c, cur[:, None])
+        )(stack, c_seq)
+        cur = lg[0, :, 0].argmax(-1).astype(jnp.int32)
+        toks.append(cur)
+    np.testing.assert_array_equal(np.asarray(chunk),
+                                  np.asarray(jnp.stack(toks, 1)))
+
+
+def test_prunable_members_cannot_flip_fused_argmax():
+    """The pruning rule is a PROOF, not a heuristic: a prunable member
+    may vote ANY distribution (every one-hot included) without moving
+    the fused argmax.  Checked exhaustively over the vocab."""
+    K, B, V = 4, 6, 40
+    lg = jax.random.normal(jax.random.PRNGKey(17), (K, B, V)) * 3.0
+    w = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(18), (K,)))
+    fused = ens.ensemble_log_probs(lg, weights=w)
+    mask = np.asarray(ens.prunable_members(lg, fused, w))
+    assert mask.any(), "test needs at least one prunable vote"
+
+    T = np.asarray(jnp.exp(fused))                      # (B, V)
+    p = np.asarray(jax.nn.softmax(lg, axis=-1))         # (K, B, V)
+    wn = np.asarray(w)
+    top = T.argmax(-1)
+    for k in range(K):
+        for b in range(B):
+            if not mask[k, b]:
+                continue
+            base = T[b] - wn[k] * p[k, b]
+            # every one-hot replacement: argmax(base + w_k e_v) for all v
+            cand = np.tile(base, (V, 1))
+            cand[np.arange(V), np.arange(V)] += wn[k]
+            assert (cand.argmax(-1) == top[b]).all()
+
+    # the shared-softmax path must produce the identical mask
+    mlp = ens.member_log_probs(lg)
+    np.testing.assert_array_equal(
+        mask, np.asarray(ens.prunable_members(lg, fused, w,
+                                              member_lp=mlp)))
+
+
+def test_snapshot_restore_rejected_tail():
+    B, C = 3, 4
+    pool = kv_cache.init_pool(CFG, 1, B, 20)
+    start = jnp.array([2, 5, 0], jnp.int32)
+    snap = kv_cache.snapshot_positions(pool, start, C)
+    dirty = jax.tree.map(lambda x: x + 1.0 if x.dtype.kind == "f" else x,
+                         pool)
+    dirty["idx"] = pool["idx"]
+    keep = jnp.array([1, 4, 0], jnp.int32)
+    back = kv_cache.restore_positions(dirty, snap, start, keep)
+
+    def leaves(d):
+        return [(p, x) for p, x in
+                jax.tree_util.tree_flatten_with_path(d["segments"])[0]]
+
+    for (path, orig), (_, d), (_, got) in zip(
+            leaves(pool), leaves(dirty), leaves(back)):
+        if orig.shape[:1] == (0,) or orig.dtype.kind != "f":
+            continue
+        S = orig.shape[3]
+        for b in range(B):
+            for t in range(C):
+                s = (int(start[b]) + t) % S
+                want = d if t < int(keep[b]) else orig
+                np.testing.assert_array_equal(
+                    np.asarray(got[:, :, b, s]),
+                    np.asarray(want[:, :, b, s]), err_msg=str(path))
+
+
+def test_page_allocator_truncate_reclaims_tail():
+    a = kv_cache.PageAllocator(n_pages=8, page_size=4, n_slots=2,
+                               pages_per_slot=8)
+    assert a.alloc(0, 4) and a.held_pages(0) == 4
+    free_before = a.free_pages
+    assert a.truncate(0, 2) == 2
+    assert a.held_pages(0) == 2
+    assert a.free_pages == free_before + 2
+    assert a.holds(0, 7) and not a.holds(0, 8)
+    assert a.truncate(0, 2) == 0  # already short: no-op
+
+
+# ---------------------------------------------------------------------------
+# per-request sampling (satellite: temperature/top_k/seed through HTTP)
+# ---------------------------------------------------------------------------
+
+
+def test_per_request_seed_reproducible_and_distinct():
+    K, B, plen, steps = 2, 2, 4, 8
+    params = _params(CFG, K, seed=19)
+    prompts = _prompts(B, plen, seed=5)
+    kw = dict(n_slots=B, max_prompt=plen, max_out=steps, prefill_chunk=4)
+
+    def run(seeds):
+        eng = EnsembleEngine(CFG, params, **kw)
+        sched = Scheduler(eng)
+        rids = [sched.submit(p, steps, temperature=5.0, seed=s)
+                for p, s in zip(prompts, seeds)]
+        comps = sched.run()
+        return [np.asarray(comps[r].tokens) for r in rids]
+
+    a = run([123, 123])
+    b = run([123, 123])
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    c = run([123, 777])  # same prompt row 0, different seed row 1
+    np.testing.assert_array_equal(a[0], c[0])
+    assert not np.array_equal(a[1], c[1])
+
+
+def test_validate_request_rejects_named_limits():
+    params = _params(CFG, 1, seed=21)
+    eng = EnsembleEngine(CFG, params, n_slots=2, max_prompt=8, max_out=8)
+    ok = eng.validate_request([1, 2, 3], 4, temperature=1.0, top_k=5,
+                              seed=0)
+    assert ok.dtype == np.int32
+    with pytest.raises(ValueError, match="MAX_TEMPERATURE"):
+        eng.validate_request([1], 4, temperature=1e9)
+    with pytest.raises(ValueError, match="MIN_TEMPERATURE"):
+        eng.validate_request([1], 4, temperature=-0.5)
+    with pytest.raises(ValueError, match="vocab_size"):
+        eng.validate_request([1], 4, top_k=CFG.vocab_size + 1)
+    with pytest.raises(ValueError, match="MAX_SEED"):
+        eng.validate_request([1], 4, seed=2 ** 31)
+    with pytest.raises(ValueError, match="MIN_SEED"):
+        eng.validate_request([1], 4, seed=-1)
+    # the scheduler rejects at the door with the same check
+    with pytest.raises(ValueError, match="MAX_TEMPERATURE"):
+        Scheduler(eng).submit([1], 4, temperature=1e9)
+
+
+# ---------------------------------------------------------------------------
+# router (satellite: draining replicas sort as infinitely loaded)
+# ---------------------------------------------------------------------------
+
+
+def test_router_draining_replica_sorts_infinitely_loaded():
+    """A draining replica must lose the load sort to ANY live replica,
+    even when it has fewer in-flight requests and more free capacity —
+    the free-pages tiebreak must never resurrect it."""
+    params = _params(CFG, 1, seed=23)
+    kw = dict(n_slots=2, max_prompt=4, max_out=4)
+    idle = Replica("idle", EnsembleEngine(CFG, params, **kw))
+    busy = Replica("busy", EnsembleEngine(CFG, params, **kw))
+    busy.scheduler.submit([1, 2], 2)
+    busy.scheduler.submit([3], 2)
+    assert busy.in_flight == 2 and idle.in_flight == 0
+
+    assert min([idle, busy], key=Replica.load_key) is idle
+    idle.draining = True
+    assert min([idle, busy], key=Replica.load_key) is busy
+    idle.draining = False
+    idle.failed = "crashed"
+    assert min([idle, busy], key=Replica.load_key) is busy
+
+
+# ---------------------------------------------------------------------------
+# compress -> checkpoint -> serve round trip (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_compress_checkpoint_draft_roundtrip(tmp_path):
+    """The full EC-DNN serving story in one test: compress a K=4
+    ensemble's output distribution (core/compression TopM targets),
+    take one distillation step on a student, round-trip the student
+    through checkpoint/store, and assert the restored student decodes
+    token-exactly as the stand-alone DraftEngine vs the seed loop —
+    and that drafting for its teachers changes nothing, bit for bit."""
+    K, B, plen, steps = 4, 2, 4, 6
+    params = _params(CFG, K, seed=25)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(26),
+                                          (B, plen), 0, CFG.vocab_size)}
+    logits_fn = rt_steps.make_logits_fn(CFG)
+    member_logits = jax.vmap(lambda p: logits_fn(p, batch))(params)
+    fused = ens.ensemble_probs(member_logits)       # (B, plen, V) Eqn 6
+    targets = comp.from_dense(fused, m=16)          # the compression step
+    # random-init members fuse to a near-uniform distribution, so the
+    # absolute L1 bound is near its 2.0 ceiling — pin the property that
+    # matters instead: keeping more mass tightens the bound
+    b16 = float(comp.l1_error_bound(targets).max())
+    b64 = float(comp.l1_error_bound(comp.from_dense(fused, m=64)).max())
+    assert 0.0 < b64 < b16 <= 2.0
+
+    student0 = tf.init(jax.random.PRNGKey(27), CFG)
+    grads = jax.grad(
+        lambda p: distill.pseudo_ce_topm(logits_fn(p, batch), targets)
+    )(student0)
+    student = jax.tree.map(lambda p, g: p - 1e-2 * g, student0, grads)
+
+    store.save_checkpoint(str(tmp_path), 0, student)
+    template = tf.init(jax.random.PRNGKey(0), CFG)
+    restored = store.restore_checkpoint(str(tmp_path), 0, template)
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(student)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    prompts = _prompts(B, plen, seed=6)
+    kw = dict(n_slots=B, max_prompt=plen, max_out=steps, prefill_chunk=4)
+    draft_eng = DraftEngine(CFG, restored, **kw)
+    outs = draft_eng.generate(prompts, max_new=steps)
+    ref = _seed_loop(CFG, draft_mod.as_member_stack(restored), 1,
+                     np.stack(prompts), steps)
+    for b in range(B):
+        np.testing.assert_array_equal(np.asarray(outs[b]), ref[b])
+
+    base = EnsembleEngine(CFG, params, **kw).generate(prompts,
+                                                      max_new=steps)
+    spec = SpeculativeEngine(CFG, params, restored, gamma=2, **kw)
+    spec_outs = spec.generate(prompts, max_new=steps)
+    for a, b in zip(spec_outs, base):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
