@@ -1,7 +1,7 @@
 """Serving throughput + TTFT + mesh placement + paged cache + HTTP
 frontend: engine vs baselines.
 
-Five gates:
+Gates:
 
   - throughput (ISSUE 1): the vmapped single-program engine vs the
     seed's K-jit-calls-per-token Python loop (kept alive below as the
@@ -31,6 +31,16 @@ Five gates:
     vs its old- or new-model offline reference, and zero recompiles of
     the decode step (same jitted callable, same jit cache size, before
     and after the swap).
+  - speculative decoding (ISSUE 6, --spec): the compressed student
+    drafting for its own teachers must be bit-identical to the fused
+    path at >= 2x decode tok/s (perfect-distillation ceiling), and
+    --draft off must stay bit-identical to the base engine.
+  - prefix cache (ISSUE 7, --prefix): a warm request sharing a cached
+    prompt prefix must reach first token >= 5x faster than the cold
+    path at K=4, with warm tokens EXACT vs a cold engine on both GQA
+    and MLA cache layouts, prefix-off bit-identical to the contiguous
+    engine, and zero leaked pages after 10k churned host-level
+    requests over the refcounted allocator + trie pair.
 
 --json PATH writes the machine-readable metrics (tok/s, TTFT p50/p99,
 admissible concurrency, per-device cache bytes, gate results) so the
@@ -47,6 +57,9 @@ scripts/ci.sh write BENCH_serving.json.
   # frontend stage alone:
   PYTHONPATH=src python benchmarks/serving_bench.py \
       --frontend --frontend-only
+  # prefix-cache stage alone:
+  PYTHONPATH=src python benchmarks/serving_bench.py \
+      --prefix --prefix-only
 """
 from __future__ import annotations
 
@@ -449,6 +462,161 @@ def bench_spec(K=4, seed=0, gamma=8, batch=4, plen=8, steps=64, repeats=8):
     return ok, lines, metrics
 
 
+def bench_prefix(K=4, seed=0, repeats=5):
+    """Prefix-cache acceptance (ISSUE 7): a warm shared-prefix request
+    must reach first token >= 5x faster than the cold path at K=4, the
+    warm tokens must be EXACT vs a cold engine on GQA (deepseek-7b) AND
+    MLA (deepseek-v2-236b) layouts, prefix-off must stay bit-identical
+    to the contiguous engine, and a 10k-request host-level churn storm
+    over the allocator+trie pair must leak zero pages.
+    -> (ok, lines, metrics)."""
+    from repro.serving import PrefixCache
+    from repro.serving.kv_cache import PageAllocator
+    lines, metrics = [], {}
+
+    # (a) warm-vs-cold TTFT: one long prompt fully cached by a prior
+    # request.  deepseek-7b reduced f32 — pure full attention, every
+    # plane paged, so the hit skips real prefill programs.  The prompt
+    # spans 24 pages; the warm hit covers 95 of 96 tokens (23 full
+    # pages + a 3-token COW tail), so admission-to-first-token is one
+    # prefill chunk instead of twenty-four.
+    cfg = registry.get_config("deepseek-7b", reduced=True).with_(
+        dtype="float32")
+    params = jax.vmap(lambda k: tf.init(k, cfg))(
+        jax.random.split(jax.random.PRNGKey(seed), K))
+    plen, page, chunk = 96, 4, 4
+    eng = EnsembleEngine(cfg, params, n_slots=4, max_prompt=plen,
+                         max_out=8, prefill_chunk=chunk, paged=True,
+                         page_size=page, prefix_cache=True)
+    prompt = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (plen,), 0, cfg.vocab_size))
+
+    def ttft(warm):
+        # prep outside the clock: drain slot 0 (its release inserts the
+        # finished chain into the trie); a cold pass then empties it
+        eng.update_slots(release=range(eng.n_slots))
+        if not warm:
+            eng.allocator.flush_cache()
+        t0 = time.time()
+        hits = eng.update_slots(admits=[(0, prompt, 4)])
+        left = plen - hits.get(0, 0)
+        for _ in range(-(-left // chunk)):
+            eng.prefill(0)
+        jax.block_until_ready(eng.state.tok)
+        return time.time() - t0, hits.get(0, 0)
+
+    ttft(warm=False)                   # compile the cold programs
+    _, hit_tok = ttft(warm=True)       # compile COW + share path
+    t_cold = t_warm = float("inf")
+    for _ in range(repeats):
+        t_cold = min(t_cold, ttft(warm=False)[0])
+        t_warm = min(t_warm, ttft(warm=True)[0])
+    speedup = t_cold / t_warm
+    ps = eng.page_stats()
+    lines.append(
+        f"prefix K={K} deepseek-7b f32 prompt={plen}: TTFT cold "
+        f"{t_cold * 1e3:.1f} ms -> warm {t_warm * 1e3:.1f} ms "
+        f"({speedup:.2f}x), hit {hit_tok}/{plen} tokens, "
+        f"cow_pages {ps['cow_pages']}")
+    metrics.update({"prefix_ttft_cold_ms": t_cold * 1e3,
+                    "prefix_ttft_warm_ms": t_warm * 1e3,
+                    "prefix_ttft_speedup": speedup,
+                    "prefix_hit_tokens": int(hit_tok)})
+
+    # (b) token-exactness: warm output vs a cold engine on BOTH cache
+    # layouts the pool supports — GQA (k/v planes) and MLA (latent +
+    # rope planes) — plus prefix-off == contiguous bit-identity (the
+    # refactor must not perturb the existing paths)
+    exact_all = True
+    for name in ("deepseek-7b", "deepseek-v2-236b"):
+        c = registry.get_config(name, reduced=True).with_(dtype="float32")
+        p = jax.vmap(lambda k: tf.init(k, c))(
+            jax.random.split(jax.random.PRNGKey(seed), K))
+        shared = [int(t) % c.vocab_size for t in range(5, 23)]
+        prompts = [np.array(shared + [2, 3], np.int32),
+                   np.array(shared + [4, 5, 6], np.int32),   # COW split
+                   np.array(shared[:10] + [7, 8], np.int32)]  # mid-page
+        kw = dict(n_slots=3, max_prompt=24, max_out=6, prefill_chunk=4,
+                  paged=True, page_size=4)
+        contig = EnsembleEngine(c, p, n_slots=3, max_prompt=24,
+                                max_out=6, prefill_chunk=4)
+        ref_c = contig.generate(prompts, max_new=5)
+        off = EnsembleEngine(c, p, **kw)
+        ref = off.generate(prompts, max_new=5)
+        off_exact = all(np.array_equal(np.asarray(a), np.asarray(b))
+                        for a, b in zip(ref, ref_c))
+        on = EnsembleEngine(c, p, prefix_cache=True, **kw)
+        on.generate([prompts[0]], max_new=5)        # cold: primes trie
+        warm_out = on.generate(prompts, max_new=5)  # warm: shares pages
+        warm_exact = all(np.array_equal(np.asarray(a), np.asarray(b))
+                         for a, b in zip(warm_out, ref))
+        st = on.page_stats()
+        hit = st["prefix_hits"] >= 2
+        exact_all &= off_exact and warm_exact and hit
+        layout = "MLA" if name.startswith("deepseek-v2") else "GQA"
+        lines.append(
+            f"prefix {name} ({layout}) f32: warm tokens "
+            f"{'match (exact)' if warm_exact else 'MISMATCH'} vs cold "
+            f"({st['prefix_hits']} hits, hit rate "
+            f"{st['prefix_hit_rate']:.1%}, cow {st['cow_pages']}), "
+            f"prefix-off {'bit-identical' if off_exact else 'MISMATCH'} "
+            f"vs contiguous")
+        metrics[f"prefix_exact_{layout.lower()}"] = bool(warm_exact)
+
+    # (c) 10k churned host-level requests against a small pool: admit /
+    # cancel-mid-prompt / preempt with six shared prefixes; afterwards
+    # every refcount must be zero and the free list WHOLE — the no-leak
+    # invariant admission accounting assumes on every scheduler tick
+    rng = np.random.default_rng(seed)
+    n_pages_c, page_c, n_slots_c = 64, 4, 8
+    a = PageAllocator(n_pages_c, page_c, n_slots_c, 8)
+    a.cache = PrefixCache(page_c)
+    prefixes = [list(rng.integers(1, 1000, rng.integers(4, 20)))
+                for _ in range(6)]
+    live, churn_ok = {}, True
+    for _ in range(10_000):
+        b = int(rng.integers(n_slots_c))
+        if b in live:
+            toks, written = live.pop(b)
+            n = -(-written // page_c)
+            if written > 0 and len(a.chain(b)) >= n:
+                a.cache.insert(toks[:written], a.chain(b)[:n])
+            a.release(b)
+        pre = prefixes[int(rng.integers(len(prefixes)))]
+        toks = list(pre) + list(rng.integers(1, 1000,
+                                             rng.integers(1, 8)))
+        hit, full, tail = a.cache.match(toks, len(toks) - 1)
+        want = -(-len(toks) // page_c)
+        live_hit = sum(1 for q in full if a.ref(q) > 0)
+        if want - live_hit > a.available_pages:
+            continue  # the queue would hold it; nothing mutated
+        if full or tail:
+            a.share(b, full + ([tail[0]] if tail else []))
+        if tail is not None:
+            churn_ok &= a.cow(b, len(full)) is not None
+        churn_ok &= a.alloc(b, want)
+        live[b] = (toks, int(rng.integers(hit, len(toks) + 1)))
+    for b in list(live):
+        a.release(b)
+    a.flush_cache()
+    leak_free = (churn_ok and a.free_pages == a.n_pages
+                 and sorted(a._free) == list(range(a.n_pages))
+                 and all(r == 0 for r in a._ref)
+                 and a.cow_count > 0 and a.cache.evicted_pages > 0)
+    lines.append(
+        f"prefix churn: 10k requests over {n_pages_c} pages / "
+        f"{n_slots_c} slots: {a.cow_count} COWs, "
+        f"{a.cache.evicted_pages} evictions, free list "
+        f"{'WHOLE (no leaks)' if leak_free else 'LEAKED'}")
+    metrics["prefix_churn_leak_free"] = bool(leak_free)
+
+    ok = (speedup >= 5.0 and hit_tok > 0 and exact_all and leak_free)
+    lines.append(f"prefix acceptance (>= 5x warm TTFT, token-exact "
+                 f"GQA+MLA, prefix-off bit-identical, zero leaks): "
+                 f"{'PASS' if ok else 'FAIL'}")
+    return ok, lines, metrics
+
+
 def decode_cache_size(engine):
     """jit-cache entries of the decode step (private jax API; None when
     unavailable).  A hot-swap must not grow this."""
@@ -601,6 +769,13 @@ def main(argv=None):
                          "zero decode recompiles")
     ap.add_argument("--frontend-only", action="store_true",
                     help="run only the frontend stage")
+    ap.add_argument("--prefix", action="store_true",
+                    help="also gate the prefix cache: >= 5x warm TTFT "
+                         "at K=4, warm tokens exact vs cold on GQA and "
+                         "MLA layouts, prefix-off bit-identical, zero "
+                         "leaked pages after 10k churned requests")
+    ap.add_argument("--prefix-only", action="store_true",
+                    help="run only the prefix-cache stage")
     ap.add_argument("--spec", action="store_true",
                     help="also gate speculative decoding: student-drafted "
                          "ensemble must be bit-identical and >= 2x decode "
@@ -636,6 +811,11 @@ def main(argv=None):
         return finish(ok)
     if args.frontend_only:
         ok, lines, m = bench_frontend()
+        metrics.update(m)
+        print("\n".join(lines))
+        return finish(ok)
+    if args.prefix_only:
+        ok, lines, m = bench_prefix()
         metrics.update(m)
         print("\n".join(lines))
         return finish(ok)
@@ -735,6 +915,12 @@ def main(argv=None):
         metrics.update(m)
         print("\n".join(lines))
         ok &= fe_ok
+
+    if args.prefix:
+        px_ok, lines, m = bench_prefix()
+        metrics.update(m)
+        print("\n".join(lines))
+        ok &= px_ok
 
     if args.spec:
         sp_ok, lines, m = bench_spec(gamma=args.gamma)

@@ -79,5 +79,23 @@ timeout -k 30 900 env JAX_PLATFORMS=cpu \
     XLA_FLAGS="--xla_force_host_platform_device_count=2" \
     python benchmarks/serving_bench.py --spec --spec-only
 
+# prefix-cache stage: trie/allocator unit + churn + engine-equivalence
+# tests, then the --prefix bench gate (>= 5x warm TTFT at K=4, warm
+# tokens exact vs cold on GQA AND MLA layouts, prefix-off bit-identical
+# to the contiguous engine, zero leaked pages after 10k churned
+# requests).  Both rerun under the forced 2-device host: shared pages
+# and the COW copy program live in the member-sharded pool, so sharing
+# must survive a REAL member axis too.
+timeout -k 30 900 env JAX_PLATFORMS=cpu \
+    python -m pytest -x -q tests/test_prefix.py
+timeout -k 30 900 env JAX_PLATFORMS=cpu \
+    python benchmarks/serving_bench.py --prefix --prefix-only
+timeout -k 30 900 env JAX_PLATFORMS=cpu \
+    XLA_FLAGS="--xla_force_host_platform_device_count=2" \
+    python -m pytest -x -q tests/test_prefix.py
+timeout -k 30 900 env JAX_PLATFORMS=cpu \
+    XLA_FLAGS="--xla_force_host_platform_device_count=2" \
+    python benchmarks/serving_bench.py --prefix --prefix-only
+
 # docs must not reference symbols that no longer exist
 python scripts/check_docs.py

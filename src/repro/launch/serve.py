@@ -123,9 +123,10 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--steps", type=int, default=16,
                     help="max new tokens per request")
-    ap.add_argument("--prefill-chunk", type=int, default=32,
-                    help="prompt tokens per prefill program "
-                         "(0: per-token reference path)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="prompt tokens per prefill program (0: "
+                         "per-token reference path; default: autotuned "
+                         "from --prompt-len and --page-size)")
     ap.add_argument("--prefill-budget", type=int, default=None,
                     help="prompt tokens prefilled per scheduler "
                          "iteration (default: 2 chunks)")
@@ -140,6 +141,11 @@ def main():
                          "slots x ceil(max_seq/page) = full capacity, "
                          "smaller oversubscribes and relies on "
                          "preemption)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share KV pages across requests with a common "
+                         "prompt prefix (--paged only): a shared-prefix "
+                         "trie skips prefill below the hit, refcounted "
+                         "copy-on-write pages keep slots isolated")
     ap.add_argument("--draft-ckpt", default="",
                     help="speculative decoding: serve the compressed "
                          "student at this CheckpointManager root as the "
@@ -225,7 +231,7 @@ def main():
             temperature=args.temperature, top_k=args.top_k,
             eos_id=args.eos_id, quorum=quorum, seed=args.seed, mesh=mesh,
             paged=args.paged, page_size=args.page_size,
-            n_pages=args.n_pages)
+            n_pages=args.n_pages, prefix_cache=args.prefix_cache)
         if draft_params is not None:
             from repro.serving import SpeculativeEngine
             return SpeculativeEngine(cfg, params, draft_params,

@@ -564,6 +564,14 @@ def chunk_cache_write_paged(plane: jax.Array, chunk: jax.Array,
     n_tok == 0 is a bit-exact no-op.  No ring arithmetic: paged layers
     are full-attention (window 0 or >= max_seq), so positions never
     wrap inside max_seq.
+
+    Writes land ONLY at positions idx..idx+n_tok-1 — pages below idx
+    are read, never written.  Prefix caching (serving/prefix.py) leans
+    on exactly that: a prefix-hit slot's chain starts with SHARED
+    pages other requests also read, and admission sets idx to the hit
+    boundary, so this scatter can never touch them (the partial
+    boundary page is copy-on-write-swapped for a private copy before
+    the chunk dispatches).
     """
     n_pages, page = plane.shape[0], plane.shape[1]
     P = table.shape[0]

@@ -790,6 +790,12 @@ def prefill_step_paged(params, cfg: ModelConfig, cache: dict,
     whole (they are shared — the chunk scatters into this slot's pages
     in place).  tokens: (1, C); n_tok: () valid tokens.
     -> (last_logits (1, V), cache), prefill_step's contract.
+
+    The chunk writes only positions [idx, idx+n_tok) — pages holding
+    positions below idx are READ-ONLY here.  That is what lets a
+    prefix-cache admission (serving/prefix.py) hand this slot SHARED
+    pages for its cached prefix and start the chunk walk at the hit:
+    the prefill attends through the shared pages but never writes one.
     """
     idx = cache["idx"][0]
     table = cache["page_table"][0]

@@ -9,8 +9,10 @@ load — in-process or over HTTP — and reports tok/s / TTFT / latency
 percentiles.  See engine.py for the architecture note.
 """
 from repro.serving.engine import EnsembleEngine, SlotState
+from repro.serving.prefix import PrefixCache
 from repro.serving.scheduler import Completion, Request, Scheduler
 from repro.serving.spec import DraftEngine, SpeculativeEngine
 
 __all__ = ["EnsembleEngine", "SlotState", "Scheduler", "Request",
-           "Completion", "SpeculativeEngine", "DraftEngine"]
+           "Completion", "SpeculativeEngine", "DraftEngine",
+           "PrefixCache"]

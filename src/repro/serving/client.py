@@ -78,6 +78,9 @@ def build_report(completions: Dict[int, Completion], wall: float,
         "preemptions": sched.preemptions if sched else None,
         "peak_in_flight": sched.peak_in_flight if sched else None,
         "low_water_pages": page_stats.get("low_water_pages"),
+        # prefix-cache telemetry (None unless the engine runs one):
+        # hit rate is FRACTION OF PROMPT TOKENS served from cache
+        "prefix_hit_rate": page_stats.get("prefix_hit_rate"),
     }
 
 
@@ -102,6 +105,11 @@ def print_report(r: dict):
                if r.get("low_water_pages") is not None else "")
         print(f"  health  peak {r['peak_in_flight']} in flight, "
               f"{r['preemptions']} preemptions{low}")
+    if r.get("prefix_hit_rate") is not None:
+        print(f"  prefix  {100 * r['prefix_hit_rate']:.1f}% of prompt "
+              f"tokens from cache | {ps['cached_pages']} cached pages, "
+              f"{ps['shared_attaches']} attaches, {ps['cow_pages']} COW "
+              f"copies, {ps['evicted_pages']} evicted")
     if r.get("n_errors"):
         print(f"  ERRORS  {r['n_errors']} failed requests "
               f"(first: {r['errors'][0]})")

@@ -81,6 +81,7 @@ from repro.common.types import ModelConfig
 from repro.core import ensemble as ens
 from repro.models import transformer as tf
 from repro.serving import kv_cache, sampling
+from repro.serving import prefix as prefix_mod
 
 
 class SlotState(NamedTuple):
@@ -123,11 +124,13 @@ class EnsembleEngine:
 
     def __init__(self, cfg: ModelConfig, stacked_params, *,
                  n_slots: int = 8, max_prompt: int = 64, max_out: int = 64,
-                 prefill_chunk: int = 32, temperature: float = 0.0,
+                 prefill_chunk: Optional[int] = None,
+                 temperature: float = 0.0,
                  top_k: int = 0, eos_id: int = -1,
                  quorum: Optional[Sequence[float]] = None, seed: int = 0,
                  mesh=None, paged: bool = False, page_size: int = 16,
-                 n_pages: Optional[int] = None):
+                 n_pages: Optional[int] = None,
+                 prefix_cache: bool = False):
         self.cfg = cfg
         self.n_members = jax.tree.leaves(stacked_params)[0].shape[0]
         self.mesh = mesh
@@ -148,7 +151,18 @@ class EnsembleEngine:
         self.max_out = max_out
         self.max_seq = max_prompt + max_out
         # prompt tokens consumed per prefill program; 0 disables batched
-        # prefill and keeps the per-token teacher-forcing reference path
+        # prefill and keeps the per-token teacher-forcing reference
+        # path.  None picks the chunk from the engine's own budgets
+        # instead of a hardcoded constant: a quarter of max_prompt
+        # (floor 32, so short-prompt engines keep the proven default),
+        # rounded up to a whole page on paged engines so chunk
+        # boundaries and page boundaries line up.  An explicit int
+        # always overrides.
+        if prefill_chunk is None:
+            prefill_chunk = max(32, -(-max_prompt // 4))
+            if paged and page_size > 0:
+                prefill_chunk = -(-prefill_chunk // int(page_size)) \
+                    * int(page_size)
         self.prefill_chunk = min(max(prefill_chunk, 0), max_prompt)
         self.temperature = temperature
         self.top_k = top_k
@@ -162,6 +176,7 @@ class EnsembleEngine:
         # the code below this constructor changes shape or math).
         self.paged = bool(paged)
         self.page_size = int(page_size)
+        self.prefix: Optional[prefix_mod.PrefixCache] = None
         if self.paged:
             if cfg.enc_dec:
                 raise ValueError(
@@ -186,6 +201,28 @@ class EnsembleEngine:
             self._host_new = np.zeros(n_slots, np.int64)
             self._host_active = np.zeros(n_slots, bool)
             self._table_stale = True
+            if prefix_cache:
+                bad = self._prefix_ineligible()
+                if bad:
+                    raise ValueError(
+                        f"prefix_cache needs every layer's positional "
+                        f"state in shared pages, but {bad} keeps per-slot"
+                        f" state a hit could not skip rebuilding")
+                if self.prefill_chunk <= 0:
+                    raise ValueError(
+                        "prefix_cache needs chunked prefill "
+                        "(prefill_chunk > 0): admission starts the "
+                        "chunk walk at the hit boundary")
+                # each slot's prompt, mirrored host-side: the trie is
+                # keyed on token ids and harvests a chain's prefix at
+                # release, long after the admit call's arrays are gone
+                self._host_prompt = np.zeros((n_slots, max_prompt),
+                                             np.int32)
+                self.prefix = prefix_mod.PrefixCache(self.page_size)
+                self.allocator.cache = self.prefix
+        elif prefix_cache:
+            raise ValueError("prefix_cache requires paged=True (the "
+                             "contiguous pool has no shareable pages)")
         self.cache = kv_cache.init_pool(
             cfg, self.n_members, n_slots, self.max_seq, mesh=mesh,
             page_size=self.page_size if self.paged else 0,
@@ -223,8 +260,16 @@ class EnsembleEngine:
             out_specs=(sspec, cspec))
         self._update = self._compile(
             self._update_impl, donate=(0, 1),
-            in_specs=(cspec, sspec, s, s, s, s, s, s, s, s, s),
+            in_specs=(cspec, sspec, s, s, s, s, s, s, s, s, s, s),
             out_specs=(sspec, cspec))
+        if self.paged:
+            # whole-page device copy for copy-on-write admissions:
+            # fixed (B,)-shaped src/dst id vectors (sentinel rows
+            # no-op), so any COW pattern reuses one compiled program
+            self._copy = self._compile(
+                lambda cache, src, dst: kv_cache.copy_pages(
+                    cache, src, dst, self.n_pages),
+                donate=(0,), in_specs=(cspec, s, s), out_specs=cspec)
         self._score = self._compile(
             self._score_impl, donate=(1,),
             in_specs=(pspec, cspec, s, s, q),
@@ -352,13 +397,24 @@ class EnsembleEngine:
                            out=out), cache
 
     def _update_impl(self, cache, st: SlotState, release, admit,
-                     prompt, plen, max_new, temp, topk, skey, draft):
-        """Evict `release` slots, (re)fill `admit` slots with new requests."""
-        cache = kv_cache.reset_slots(cache, admit)
+                     prompt, plen, max_new, temp, topk, skey, draft,
+                     pos0):
+        """Evict `release` slots, (re)fill `admit` slots with new requests.
+
+        pos0 (B,): per-admit start position — 0 on a cold admission,
+        the prefix-cache hit length when admission attached shared
+        pages holding the prompt's first pos0 positions (update_slots
+        computes it; always 0 with the prefix cache off, keeping this
+        path bit-identical to the pre-prefix engine).  The slot's
+        first prefill chunk then starts at pos0, and its first input
+        token is prompt[pos0] rather than prompt[0].
+        """
+        cache = kv_cache.reset_slots(cache, admit, pos0)
         a2 = admit[:, None]
+        tok0 = jnp.take_along_axis(prompt, pos0[:, None], axis=1)[:, 0]
         return SlotState(
-            tok=jnp.where(admit, prompt[:, 0], st.tok),
-            pos=jnp.where(admit, 0, st.pos),
+            tok=jnp.where(admit, tok0, st.tok),
+            pos=jnp.where(admit, pos0, st.pos),
             prompt=jnp.where(a2, prompt, st.prompt),
             prompt_len=jnp.where(admit, plen, st.prompt_len),
             max_new=jnp.where(admit, max_new, st.max_new),
@@ -493,6 +549,23 @@ class EnsembleEngine:
 
     # -- paged-pool host accounting -----------------------------------------
 
+    def _prefix_ineligible(self) -> Optional[str]:
+        """Why this config cannot reuse cached prefix pages (None = it
+        can).  A prefix hit skips prefill for positions [0, hit), so
+        EVERY layer's positional state for those positions must live in
+        the shared pages: layers that keep per-slot planes
+        (sliding-window attention below max_seq, linear-attention
+        recurrent states) or per-slot ffn carries (rwkv_cmix's
+        cmix_shift) would come up blank for the skipped positions."""
+        for _, specs in self.cfg.segments():
+            for spec in specs:
+                if not tf.layer_pages(self.cfg, spec, self.max_seq):
+                    return (f"mixer {spec.mixer!r} keeps per-slot "
+                            f"(non-paged) cache planes")
+                if spec.ffn == "rwkv_cmix":
+                    return "ffn 'rwkv_cmix' carries per-slot cmix_shift"
+        return None
+
     def _sync_table(self):
         """Push the allocator's page table to the device pool (every
         member carries a replica, so the kernels stay member-vmapped)."""
@@ -535,6 +608,60 @@ class EnsembleEngine:
             self._sync_table()
         return starved
 
+    def _release_slot(self, b: int):
+        """Recycle slot b's chain and host mirrors.  With the prefix
+        cache on, the chain's VALID prompt prefix is offered to the trie
+        first (release is the only time a chain's content is final):
+        claimed pages survive as cached prefix pages — evictable once
+        unreferenced — while everything else (decode tail, deduped
+        prompt pages) returns to the free list via refcount decrements.
+        Only min(pos, plen) tokens are inserted: a preempted mid-prompt
+        slot has only written that far, and decode tokens past the
+        prompt are per-request content no other request should match.
+        """
+        if self.prefix is not None and self._host_plen[b] > 0:
+            valid = int(min(self._host_pos[b], self._host_plen[b]))
+            n = self.allocator.pages_for(valid)
+            chain = self.allocator.chain(b)
+            if valid > 0 and len(chain) >= n:
+                self.prefix.insert(self._host_prompt[b, :valid],
+                                   chain[:n])
+            self._host_prompt[b, :] = 0
+        self.allocator.release(b)
+        self._host_active[b] = False
+        self._host_pos[b] = 0
+        self._host_plen[b] = self._host_new[b] = 0
+
+    def admit_cost(self, tokens) -> int:
+        """Pages admitting this prompt would consume RIGHT NOW:
+        worst-case ceil(plen/page) minus matched full pages some live
+        slot already references (attaching those is a pure refcount
+        bump).  Ref-0 trie pages are NOT discounted — they are already
+        counted once in available_pages, and a partial tail's page is
+        never discounted (its COW copy consumes a fresh page).  Uses
+        the trie's read-only peek, so costing a queue of candidates
+        skews neither hit-rate telemetry nor LRU order.  The
+        Scheduler's admission gate pairs this with admission_headroom.
+        """
+        t = np.asarray(tokens, np.int32).reshape(-1)
+        cost = self.allocator.pages_for(t.size)
+        if self.prefix is None or t.size <= 1:
+            return cost
+        _, full, _ = self.prefix.peek(t.tolist(), t.size - 1)
+        return cost - sum(1 for p in full if self.allocator.ref(p) > 0)
+
+    def admission_headroom(self, releasing: Sequence[int] = ()) -> int:
+        """Pages an admission batch can draw on: the allocator's
+        available pool (free list + evictable trie pages) plus what
+        releasing the given slots would certainly return (their chain
+        pages at refcount 1 that the trie does not keep).  Conservative:
+        a releasing slot's trie-claimed pages become evictable — also
+        headroom — but are only counted once they get there."""
+        if not self.paged:
+            return -1
+        return self.allocator.available_pages + sum(
+            self.allocator.reclaimable_pages(int(b)) for b in releasing)
+
     @property
     def free_pages(self) -> int:
         return self.allocator.free_pages if self.paged else -1
@@ -545,10 +672,17 @@ class EnsembleEngine:
         if not self.paged:
             return {}
         a = self.allocator
-        return {"n_pages": a.n_pages, "page_size": a.page_size,
-                "free_pages": a.free_pages, "used_pages": a.used_pages,
-                "pages_per_slot": a.pages_per_slot,
-                "low_water_pages": a.low_water}
+        stats = {"n_pages": a.n_pages, "page_size": a.page_size,
+                 "free_pages": a.free_pages, "used_pages": a.used_pages,
+                 "available_pages": a.available_pages,
+                 "shared_pages": a.shared_pages,
+                 "pages_per_slot": a.pages_per_slot,
+                 "low_water_pages": a.low_water}
+        if self.prefix is not None:
+            stats.update(self.prefix.stats())
+            stats["cow_pages"] = a.cow_count
+            stats["shared_attaches"] = a.shared_attach_count
+        return stats
 
     def step(self) -> SlotState:
         """Advance every slot one token (one compiled program).
@@ -624,6 +758,14 @@ class EnsembleEngine:
         program.  Admission is a slot-axis operation: it touches every
         member's row of the (K, ...) pool identically, so the mesh path
         runs it shard-local with zero communication.
+
+        Returns {slot: hit_tokens} for admissions the prefix cache
+        served (serving/prefix.py): those slots start prefilling at
+        position `hit`, so callers that drive prefill themselves
+        (generate, Scheduler) owe ceil((plen - hit) / prefill_chunk)
+        chunks, not ceil(plen / chunk).  Empty whenever the prefix
+        cache is off — and the whole path below is then bit-identical
+        to the pre-prefix engine (pos0 stays all-zero).
         """
         B, P = self.n_slots, self.max_prompt
 
@@ -669,44 +811,83 @@ class EnsembleEngine:
                     self._req_base_key, self._admitted), np.uint32)
             draft[b] = bool(opts.get("draft", self._default_draft()))
             self._admitted += 1
+        hits: dict = {}
+        pos0 = np.zeros((B,), np.int32)
         if self.paged:
             # all-or-nothing page accounting BEFORE any state mutates:
             # released/recycled slots return their chains, admitted
             # prompts take ceil(plen/page) up front (decode pages grow
-            # step by step via reserve_decode_pages)
+            # step by step via reserve_decode_pages).  Two-tier check:
+            # worst case (no prefix discount) first; if that fails and
+            # the prefix cache is on, re-probe with admit_cost (full
+            # pages a live slot already references attach for free) —
+            # the same charge model Scheduler._fill_slots gates with.
             recycled = [b for b in range(B) if rel[b] or adm[b]]
-            freed = sum(self.allocator.held_pages(b) for b in recycled)
+            avail = self.allocator.available_pages + sum(
+                self.allocator.reclaimable_pages(b) for b in recycled)
             need = sum(self.allocator.pages_for(int(plen[b]))
                        for b in range(B) if adm[b])
-            if need > self.allocator.free_pages + freed:
+            if need > avail and self.prefix is not None:
+                need = sum(self.admit_cost(prompt[b, :plen[b]])
+                           for b in range(B) if adm[b])
+            if need > avail:
                 raise RuntimeError(
-                    f"admission needs {need} pages, only "
-                    f"{self.allocator.free_pages + freed} available "
-                    f"(pool {self.n_pages}); queue instead — "
+                    f"admission needs {need} pages, only {avail} "
+                    f"available (pool {self.n_pages}); queue instead — "
                     f"Scheduler._fill_slots admits by free pages")
             for b in recycled:
-                self.allocator.release(b)
-                self._host_active[b] = False
-                self._host_pos[b] = 0
-                self._host_plen[b] = self._host_new[b] = 0
+                self._release_slot(b)
+            cow_src = np.full((B,), self.n_pages, np.int32)
+            cow_dst = np.full((B,), self.n_pages, np.int32)
+            any_cow = False
             for b in range(B):
                 if not adm[b]:
                     continue
+                p = int(plen[b])
+                if self.prefix is not None:
+                    toks = prompt[b, :p]
+                    # cap the hit at plen - 1: the request's first
+                    # sampled token needs last-token logits, so at
+                    # least one prompt position always prefills
+                    hit, full, tail = self.prefix.match(toks, p - 1)
+                    if full or tail:
+                        self.allocator.share(
+                            b, full + ([tail[0]] if tail else []))
+                    if tail is not None:
+                        # the hit ends mid-page: the slot's first write
+                        # (position hit, offset hit % page) lands inside
+                        # the matched page — swap in a private copy
+                        # before any kernel can write it
+                        src, dst = self.allocator.cow(b, len(full))
+                        cow_src[b], cow_dst[b] = src, dst
+                        any_cow = True
+                    pos0[b] = hit
+                    hits[b] = hit
+                    self._host_prompt[b, :p] = toks
                 if not self.allocator.alloc(
-                        b, self.allocator.pages_for(int(plen[b]))):
+                        b, self.allocator.pages_for(p)):
                     raise RuntimeError("page accounting violated its "
                                        "feasibility check")  # unreachable
                 self._host_active[b] = True
-                self._host_pos[b] = 0
-                self._host_plen[b] = int(plen[b])
+                self._host_pos[b] = int(pos0[b])
+                self._host_plen[b] = p
                 self._host_new[b] = int(mnew[b])
             self._table_stale = True
             self._sync_table()
+            if any_cow:
+                # dispatch the page copy BEFORE _update resets the slot
+                # and before any prefill: the data dependence through
+                # the donated pool orders the src read ahead of every
+                # later write, even if src is evicted and handed to
+                # another slot inside this same admission batch
+                self.cache = self._copy(self.cache, jnp.asarray(cow_src),
+                                        jnp.asarray(cow_dst))
         self.state, self.cache = self._update(
             self.cache, self.state, jnp.asarray(rel), jnp.asarray(adm),
             jnp.asarray(prompt), jnp.asarray(plen), jnp.asarray(mnew),
             jnp.asarray(temp), jnp.asarray(topk), jnp.asarray(skey),
-            jnp.asarray(draft))
+            jnp.asarray(draft), jnp.asarray(pos0))
+        return hits
 
     def _default_draft(self) -> bool:
         """Whether an admission with no explicit `draft` option drafts
@@ -745,15 +926,18 @@ class EnsembleEngine:
             return []
         if len(prompts) > self.n_slots:
             raise ValueError(f"{len(prompts)} prompts > {self.n_slots} slots")
-        self.update_slots(
+        hits = self.update_slots(
             release=range(self.n_slots),
             admits=[(i, p, max_new) for i, p in enumerate(prompts)])
         plens = [len(np.reshape(p, -1)) for p in prompts]
         if self.prefill_chunk > 0:
             # chunked prefill emits each slot's first token; decode does
-            # the remaining max_new - 1
+            # the remaining max_new - 1.  Prefix-cache hits shorten a
+            # slot's walk: it starts at the hit boundary, and hit <=
+            # plen - 1 guarantees at least one chunk always runs
             for i, plen in enumerate(plens):
-                for _ in range(-(-plen // self.prefill_chunk)):
+                left = plen - hits.get(i, 0)
+                for _ in range(-(-left // self.prefill_chunk)):
                     self.prefill(i)
             steps = max_new - 1
         else:
@@ -845,6 +1029,13 @@ class EnsembleEngine:
             # the stub encoder context is a function of the params;
             # recompute it so decode reads the new model's encodings
             self.cache["enc"] = self._encode_stub(self.n_slots)
+        if self.paged and self.prefix is not None:
+            # cached prefix pages hold the OLD model's KV: a round-t
+            # prefix must never serve round t+1.  Flush the trie; pages
+            # still referenced by in-flight slots are disowned and free
+            # on their release (drain first — Router.rollout does —
+            # when zero stale pages may survive the swap).
+            self.allocator.flush_cache()
         self.swaps_done += 1
 
     def set_quorum(self, mask: Sequence[float]):

@@ -317,6 +317,13 @@ class Router:
         backlog, for a single replica — absorbs arrivals).  The swap
         itself reuses the replica's compiled kernels: same shapes, same
         jitted callables, zero recompiles.
+
+        Prefix-cache replicas additionally flush their trie inside
+        swap_params — cached pages hold the OLD model's KV — and
+        because the replica is fully drained here, the flush must
+        leave ZERO shared or cached pages behind; a survivor would be
+        a stale round-t prefix able to serve a round-t+1 request, so
+        it is asserted, not assumed.
         """
         for rep in self.replicas:
             self.drain(rep.name)
@@ -326,6 +333,13 @@ class Router:
                         f"replica {rep.name} did not drain within "
                         f"{timeout}s ({rep.in_flight} in flight)")
                 rep.engine.swap_params(new_stacked_params)
+                ps = rep.engine.page_stats()
+                if ps.get("cached_pages", 0) or ps.get("shared_pages", 0):
+                    raise RuntimeError(
+                        f"replica {rep.name}: {ps.get('cached_pages', 0)} "
+                        f"cached / {ps.get('shared_pages', 0)} shared "
+                        f"pages survived a drained rollout — stale "
+                        f"round-t KV would serve round t+1")
             finally:
                 self.rejoin(rep.name)
 

@@ -306,6 +306,19 @@ class FrontendServer:
                     f"repro_serving_free_pages{lab} {ps['free_pages']}",
                     f"repro_serving_low_water_pages{lab} "
                     f"{ps['low_water_pages']}",
+                    f"repro_serving_shared_pages{lab} "
+                    f"{ps['shared_pages']}",
+                ]
+            if "prefix_hit_rate" in ps:
+                lines += [
+                    f"repro_serving_prefix_hit_rate{lab} "
+                    f"{ps['prefix_hit_rate']:.6f}",
+                    f"repro_serving_prefix_cached_pages{lab} "
+                    f"{ps['cached_pages']}",
+                    f"repro_serving_prefix_cow_pages{lab} "
+                    f"{ps['cow_pages']}",
+                    f"repro_serving_prefix_evicted_pages{lab} "
+                    f"{ps['evicted_pages']}",
                 ]
             sp = r.get("spec_stats") or {}
             if sp:

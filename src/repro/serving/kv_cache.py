@@ -21,13 +21,18 @@ swap their per-slot (B, max_seq, ...) rows for a shared page pool —
   paged leaves   (K, count, n_pages, page_size, ...)
   page_table     (K, B, ceil(max_seq/page_size))  logical -> physical
 
-backed by the host-side PageAllocator below (free list + per-slot page
-chains; sentinel id n_pages = unallocated).  Pool bytes then scale with
-the TOKENS IN FLIGHT instead of K x n_slots x max_seq, admission is
-bounded by free pages rather than free slots, and releasing a slot is a
-free-list push — no zeroing, the same stale-entry invariant as the
-contiguous path.  Ring-bounded sliding-window planes and recurrent
-state stay per-slot (transformer.layer_pages).
+backed by the host-side PageAllocator below (refcounted free-list +
+per-slot page chains; sentinel id n_pages = unallocated).  Pool bytes
+then scale with the TOKENS IN FLIGHT instead of K x n_slots x max_seq,
+admission is bounded by free pages rather than free slots, and
+releasing a slot is a refcount decrement — no zeroing, the same
+stale-entry invariant as the contiguous path.  With the prefix trie
+wired in (serving/prefix.py) chains are shared: several slots (and the
+trie) reference the same physical prefix pages, writes into a shared
+page go through copy-on-write (PageAllocator.cow + copy_pages), and
+pages at refcount zero with trie content are kept evictable rather
+than freed.  Ring-bounded sliding-window planes and recurrent state
+stay per-slot (transformer.layer_pages).
 
 Placement: on a ("member", "data") mesh (common.sharding.local_mesh)
 the leading (K,) axis shards over "member" — each device holds only its
@@ -41,7 +46,7 @@ inside a shard_map body on the local shard.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -101,13 +106,14 @@ def _skip_slot_update(name: str) -> bool:
     return name in _POSITIONAL or name.endswith("_pages")
 
 
-def reset_slots(pool: dict, mask: jax.Array) -> dict:
+def reset_slots(pool: dict, mask: jax.Array,
+                start: Optional[jax.Array] = None) -> dict:
     """Recycle slots where mask (B,) is True, across all members.
 
     A strictly per-slot masked update: rows where the mask is False ride
     through BIT-IDENTICAL (tests/test_serving_paged.py pins this), so
     releasing one slot can never perturb the B-1 in-flight neighbors.
-    Rewinding idx to 0 is enough for attention state: each KV entry the
+    Rewinding idx is enough for attention state: each KV entry the
     new request can attend to is overwritten before it first becomes
     visible, so the (large) positional planes are left untouched and
     admission cost stays proportional to the (small) recurrent state.
@@ -116,9 +122,19 @@ def reset_slots(pool: dict, mask: jax.Array) -> dict:
     previous occupant leaks into the next request.  Paged planes have no
     slot axis (pages are reassigned by the host allocator) and the page
     table is host-owned — neither is touched here.
+
+    start (B,): per-slot restart position, default 0.  A prefix-cache
+    hit admits a request at its hit boundary (serving/prefix.py): the
+    positions below `start` are served by SHARED pages whose content is
+    already valid, so idx rewinds to the hit, not to 0.  Only engines
+    whose every layer pages may pass start > 0 — recurrent state resets
+    to step-0 here regardless, which is exactly why prefix caching is
+    gated on all-paged configs (engine._prefix_ineligible).
     """
     out = dict(pool)
-    out["idx"] = jnp.where(mask[None, :], 0, pool["idx"])
+    zero = jnp.zeros_like(pool["idx"])
+    tgt = zero if start is None else zero + start[None, :]
+    out["idx"] = jnp.where(mask[None, :], tgt, pool["idx"])
 
     def z(path, x):  # leaves are (K, count, B, ...)
         if _skip_slot_update(_leaf_name(path)):
@@ -287,17 +303,31 @@ def restore_positions(pool: dict, snap: dict, start: jax.Array,
 
 
 class PageAllocator:
-    """Free-list allocator behind the paged pool's page table.
+    """Refcounting free-list allocator behind the paged pool's table.
 
     Pure host policy — nothing here is traced.  Physical pages are ids
     in [0, n_pages); the sentinel id `n_pages` marks an unallocated
     page-table entry (paged kernels clamp + mask reads through it and
-    drop writes).  Each slot owns a chain of pages, one per logical
-    page, grown strictly in order (sequence positions only ever advance)
-    and returned to the free list in one `release` — no zeroing, the
-    next owner overwrites every entry before the position bookkeeping
-    makes it visible, the same invariant the contiguous pool recycles
-    slots with.
+    drop writes).  Each slot holds a chain of pages, one per logical
+    page, grown strictly in order (sequence positions only ever
+    advance).  Pages are REFCOUNTED, not owned: a chain page fresh from
+    `alloc` carries refcount 1 (the old exclusive-ownership behavior,
+    bit-identical for chains that never share), while `share` attaches
+    pages of an existing prefix — the same physical page then appears
+    in several chains and in the prefix trie, and `release`/`truncate`
+    become refcount decrements that only free a page at zero.  `cow`
+    is the copy-on-write step: a slot about to write into a shared page
+    swaps a fresh page into its chain first (the engine dispatches the
+    device copy).  No zeroing anywhere: the next owner overwrites every
+    entry before the position bookkeeping makes it visible, the same
+    invariant the contiguous pool recycles slots with.
+
+    With a PrefixCache wired in (`self.cache`, engine-owned), pages
+    whose refcount drops to zero while the trie owns them become
+    EVICTABLE instead of free — their KV content is kept for future
+    sharers and reclaimed LRU leaf-first only when the free list runs
+    dry (`alloc` calls `cache.reclaim`).  `available_pages` is
+    therefore free + evictable: the admission headroom.
 
     The same id space addresses every paged layer's plane (each layer
     has its own (n_pages, page_size, ...) physical pool, all indexed by
@@ -317,12 +347,18 @@ class PageAllocator:
         # pop() takes the lowest id first — keeps tables human-readable
         self._free: List[int] = list(range(self.n_pages - 1, -1, -1))
         self._chain: List[List[int]] = [[] for _ in range(self.n_slots)]
+        self._ref: List[int] = [0] * self.n_pages
+        # prefix trie (serving/prefix.PrefixCache), wired by the engine
+        # when prefix caching is on; None keeps pure free-list behavior
+        self.cache = None
         self._dirty = True
         self._table: Optional[np.ndarray] = None
         # fewest free pages ever observed after an alloc — how close
         # the pool came to preemption over its lifetime (capacity
         # telemetry; client.print_report surfaces it)
         self.low_water = self.n_pages
+        self.shared_attach_count = 0  # pages attached via share()
+        self.cow_count = 0            # pages copied via cow()
 
     @property
     def free_pages(self) -> int:
@@ -331,6 +367,21 @@ class PageAllocator:
     @property
     def used_pages(self) -> int:
         return self.n_pages - len(self._free)
+
+    @property
+    def available_pages(self) -> int:
+        """Free-list pages plus trie-cached pages no slot references —
+        everything an alloc can hand out (admission headroom)."""
+        return len(self._free) + (self.cache.evictable
+                                  if self.cache is not None else 0)
+
+    @property
+    def shared_pages(self) -> int:
+        """Pages currently referenced by more than one chain."""
+        return sum(1 for r in self._ref if r > 1)
+
+    def ref(self, page: int) -> int:
+        return self._ref[page]
 
     def pages_for(self, n_tokens: int) -> int:
         """Pages covering n_tokens positions from 0."""
@@ -343,52 +394,184 @@ class PageAllocator:
     def held_pages(self, slot: int) -> int:
         return len(self._chain[slot])
 
-    def alloc(self, slot: int, n_logical: int) -> bool:
-        """Grow `slot` to cover >= n_logical logical pages.
+    def chain(self, slot: int) -> Tuple[int, ...]:
+        """`slot`'s physical page chain in logical order (a copy)."""
+        return tuple(self._chain[slot])
 
-        All-or-nothing: returns False (state untouched) when the free
-        list cannot cover the growth or n_logical exceeds the per-slot
-        table width — the caller (engine/scheduler) then preempts or
-        queues instead of partially admitting.
+    def alloc(self, slot: int, n_logical: int) -> bool:
+        """Grow `slot` to cover >= n_logical logical pages (fresh pages,
+        refcount 1).
+
+        All-or-nothing: returns False (state untouched) when free +
+        evictable pages cannot cover the growth or n_logical exceeds
+        the per-slot table width — the caller (engine/scheduler) then
+        preempts or queues instead of partially admitting.  When the
+        free list alone is short, trie-cached unreferenced pages are
+        evicted (LRU leaf-first) to cover the difference — the prefix
+        cache yields to live requests, never the other way around.
         """
         need = int(n_logical) - len(self._chain[slot])
         if need <= 0:
             return True
-        if n_logical > self.pages_per_slot or need > len(self._free):
+        if n_logical > self.pages_per_slot or need > self.available_pages:
             return False
+        if need > len(self._free):
+            self._free.extend(
+                reversed(self.cache.reclaim(need - len(self._free))))
         for _ in range(need):
-            self._chain[slot].append(self._free.pop())
+            p = self._free.pop()
+            self._ref[p] = 1
+            self._chain[slot].append(p)
         self._dirty = True
         self.low_water = min(self.low_water, len(self._free))
         return True
 
+    def share(self, slot: int, pages: Sequence[int]) -> None:
+        """Attach an existing prefix's pages to `slot`'s chain (in
+        logical order, extending the tail) and take a reference on
+        each.  The pages' KV content is someone else's work — the slot
+        may READ through them but must never write below its admission
+        hit (engine admission guarantees writes start at the hit; the
+        partial tail page goes through `cow` first).
+        """
+        chain = self._chain[slot]
+        if len(chain) + len(pages) > self.pages_per_slot:
+            raise ValueError(
+                f"share would grow slot {slot} past pages_per_slot="
+                f"{self.pages_per_slot}")
+        for p in pages:
+            p = int(p)
+            self._ref[p] += 1
+            if self._ref[p] == 1 and self.cache is not None \
+                    and self.cache.owns(p):
+                self.cache.page_referenced(p)
+            chain.append(p)
+        self.shared_attach_count += len(pages)
+        self._dirty = True
+
+    def cow(self, slot: int, logical: int) -> Optional[Tuple[int, int]]:
+        """Copy-on-write: give `slot` an exclusive copy of its logical
+        page `logical` before its first divergent write lands there.
+
+        If the current page is shared (refcount > 1, or cached in the
+        trie where future sharers could pick it up), a fresh page is
+        swapped into the chain and (src, dst) returned — the CALLER
+        copies the device content (engine._copy) before dispatching any
+        write.  An already-exclusive page returns None (write in
+        place).  Raises when no page is available: admission accounting
+        charges the COW destination as part of the non-shared suffix,
+        so a caller that checked available_pages never trips this.
+        """
+        src = self._chain[slot][logical]
+        shared = self._ref[src] > 1 or (self.cache is not None
+                                        and self.cache.owns(src))
+        if not shared:
+            return None
+        if not self._free and self.cache is not None:
+            self._free.extend(reversed(self.cache.reclaim(1)))
+        if not self._free:
+            raise RuntimeError(
+                f"cow: no page available for slot {slot} (pool "
+                f"{self.n_pages}, all referenced)")
+        dst = self._free.pop()
+        self._ref[dst] = 1
+        self._chain[slot][logical] = dst
+        self._unref(src)
+        self.cow_count += 1
+        self.low_water = min(self.low_water, len(self._free))
+        self._dirty = True
+        return src, dst
+
+    def _unref(self, page: int) -> bool:
+        """Drop one reference; at zero the page goes to the free list —
+        or to the trie's evictable pool when the trie owns it (content
+        kept for future sharers).  -> True when the page left the
+        chain's accounting (always; return is for symmetry/clarity)."""
+        self._ref[page] -= 1
+        if self._ref[page] < 0:
+            raise AssertionError(f"page {page} refcount underflow")
+        if self._ref[page] == 0:
+            if self.cache is not None and self.cache.owns(page):
+                self.cache.page_unreferenced(page)
+            else:
+                self._free.append(page)
+        return True
+
     def truncate(self, slot: int, n_logical: int) -> int:
-        """Shrink `slot` back to n_logical pages; -> pages reclaimed.
+        """Shrink `slot` back to n_logical pages; -> pages dropped from
+        the chain (freed immediately unless still shared/cached).
 
         The speculative engine reserves pages for the full gamma-token
         lookahead before a step; a short accepted prefix leaves the tail
         pages holding only rejected (stale-masked) writes, so the
         scheduler hands them back here after harvest.  Chains only ever
-        shrink from the tail (positions are append-only), and already-
-        short chains are a no-op.
+        shrink from the tail (positions are append-only) — decode-tail
+        pages are refcount-1 and never trie-cached (a chain's shared
+        prefix sits strictly below the prompt, and the accepted length
+        is >= the prompt), so a spec-decode rollback frees exactly what
+        the pre-refcount allocator freed.  Already-short chains are a
+        no-op.
         """
         n = len(self._chain[slot]) - max(int(n_logical), 0)
         if n <= 0:
             return 0
         tail = self._chain[slot][-n:]
         self._chain[slot] = self._chain[slot][:-n]
-        self._free.extend(reversed(tail))
+        freed = [p for p in reversed(tail)
+                 if self._ref[p] == 1 and not (
+                     self.cache is not None and self.cache.owns(p))]
+        for p in tail:
+            if p in freed:
+                self._ref[p] = 0
+            else:
+                self._unref(p)
+        self._free.extend(freed)
         self._dirty = True
         return n
 
     def release(self, slot: int) -> int:
-        """Return all of `slot`'s pages to the free list; -> count."""
-        n = len(self._chain[slot])
+        """Drop `slot`'s references to its whole chain; -> chain length.
+        Pages nobody else references return to the free list (reversed,
+        so the lowest id pops first, as before refcounting) — unless
+        the trie owns them, in which case they become evictable with
+        their content intact (that is how a released request's prefix
+        stays warm for the next sharer)."""
+        chain = self._chain[slot]
+        n = len(chain)
         if n:
-            self._free.extend(reversed(self._chain[slot]))
+            freed = [p for p in reversed(chain)
+                     if self._ref[p] == 1 and not (
+                         self.cache is not None and self.cache.owns(p))]
+            for p in chain:
+                if self._ref[p] == 1 and p in freed:
+                    self._ref[p] = 0
+                else:
+                    self._unref(p)
+            self._free.extend(freed)
             self._chain[slot] = []
             self._dirty = True
         return n
+
+    def reclaimable_pages(self, slot: int) -> int:
+        """Chain pages a release would push onto the FREE list right
+        now: refcount exactly 1 and not trie-owned.  (Trie-owned pages
+        go evictable instead — still admission headroom, but counted by
+        `available_pages` once they get there, so counting them here
+        would double-book.)  Scheduler admission adds this for slots in
+        its release batch."""
+        return sum(1 for p in self._chain[slot]
+                   if self._ref[p] == 1 and not (
+                       self.cache is not None and self.cache.owns(p)))
+
+    def flush_cache(self) -> int:
+        """Drop the prefix trie (engine.swap_params: cached pages hold
+        the old model's KV) and return its unreferenced pages to the
+        free list; -> pages freed.  No-op without a trie."""
+        if self.cache is None:
+            return 0
+        pages = self.cache.flush()
+        self._free.extend(sorted(pages, reverse=True))
+        return len(pages)
 
     def table(self) -> np.ndarray:
         """(n_slots, pages_per_slot) int32 logical->physical map,
@@ -403,6 +586,37 @@ class PageAllocator:
             self._table = t
             self._dirty = False
         return self._table
+
+
+def copy_pages(pool: dict, src: jax.Array, dst: jax.Array,
+               n_pages: int) -> dict:
+    """Copy whole physical pages src[i] -> dst[i] in every paged plane.
+
+    src, dst: (B,) int32 physical ids, sentinel (n_pages) rows are
+    no-ops (reads clamp, writes drop — the same convention the paged
+    kernels use).  This is the device half of copy-on-write: the
+    allocator swaps a fresh dst page into a chain (PageAllocator.cow)
+    and the engine dispatches this copy BEFORE any kernel that writes
+    the page, so the data dependence through the donated pool orders
+    the read of src ahead of every later write — even if src is evicted
+    and handed to another slot in the same admission batch.  Entries
+    past the matched prefix length r are copied garbage; they sit at
+    positions >= the sharer's hit and stay masked until the sharer's
+    own prefill overwrites them.  Traced; compiled once by the engine
+    with fixed (B,) shapes so any COW pattern reuses one program.
+    """
+    out = dict(pool)
+    src_c = jnp.clip(src, 0, n_pages - 1)
+
+    def cp(path, x):  # paged leaves are (K, count, n_pages, page, ...)
+        if not _leaf_name(path).endswith("_pages"):
+            return x
+        rows = x[:, :, src_c]                        # (K, count, B, pg, ..)
+        return x.at[:, :, dst].set(rows, mode="drop")
+
+    out["segments"] = jax.tree_util.tree_map_with_path(
+        cp, pool["segments"])
+    return out
 
 
 def slot_positions(pool: dict) -> jax.Array:

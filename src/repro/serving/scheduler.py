@@ -231,11 +231,10 @@ class Scheduler:
         avail = 0
         if self.engine.paged:
             # pages the combined release+admit dispatch below can hand
-            # out: the free list plus the chains of slots being released
-            # in the same call (update_slots recycles before it admits)
-            avail = self.engine.free_pages + sum(
-                self.engine.allocator.held_pages(b)
-                for b in self._to_release)
+            # out: free list + evictable prefix pages + what the slots
+            # being released in the same call certainly return
+            # (update_slots recycles before it admits)
+            avail = self.engine.admission_headroom(self._to_release)
         for b in range(self.engine.n_slots):
             if self.slots[b] is None and self.pending:
                 nxt = self.pending[0]
@@ -243,8 +242,10 @@ class Scheduler:
                     # admit by free pages, not free slots — and strictly
                     # FIFO (no skip-ahead past a request that does not
                     # fit: that is how short requests would starve a
-                    # long one forever)
-                    need = self.engine.allocator.pages_for(len(nxt.tokens))
+                    # long one forever).  admit_cost charges only the
+                    # non-shared suffix when the prefix cache holds
+                    # pages a live slot already references.
+                    need = self.engine.admit_cost(nxt.tokens)
                     if need > avail:
                         break
                     avail -= need
@@ -261,8 +262,17 @@ class Scheduler:
                     req, now,
                     prefill_left=len(req.tokens) if chunked else 0)
         if admits or self._to_release:
-            self.engine.update_slots(release=self._to_release, admits=admits)
+            hits = self.engine.update_slots(
+                release=self._to_release, admits=admits)
             self._to_release = []
+            if chunked:
+                # prefix-cache hits skip prefill for the shared prefix:
+                # the slot starts its chunk walk at the hit boundary,
+                # so it owes only the non-shared suffix
+                for b, hit in hits.items():
+                    if self.slots[b] is not None and hit > 0:
+                        self.slots[b].prefill_left = max(
+                            self.slots[b].prefill_left - int(hit), 1)
         self.peak_in_flight = max(self.peak_in_flight, self.live_slots)
 
     def _ensure_decode_pages(self):

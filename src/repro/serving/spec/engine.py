@@ -97,6 +97,15 @@ class SpeculativeEngine(EnsembleEngine):
                  spec_sampling: bool = False, **kw):
         if gamma < 1:
             raise ValueError(f"gamma must be >= 1, got {gamma}")
+        if kw.get("prefix_cache"):
+            # the draft pool is slot-contiguous: a prefix hit would skip
+            # prefill for positions the DRAFT cache never saw, so the
+            # student would draft from blank context.  Per-draft prefix
+            # state is a follow-up (ROADMAP).
+            raise ValueError("speculative serving does not support "
+                             "prefix_cache (the draft cache is "
+                             "slot-contiguous; hit-skipped positions "
+                             "would leave it blank)")
         self.gamma = int(gamma)
         self.spec_sampling = bool(spec_sampling)
         super().__init__(cfg, stacked_params, **kw)
@@ -473,7 +482,7 @@ class SpeculativeEngine(EnsembleEngine):
             opts = dict(entry[3]) if len(entry) > 3 and entry[3] else {}
             opts.setdefault("draft", True)
             norm.append((entry[0], entry[1], entry[2], opts))
-        super().update_slots(release=release, admits=norm)
+        hits = super().update_slots(release=release, admits=norm)
         adm = np.zeros((self.n_slots,), bool)
         for b in release:
             self._host_draft[int(b)] = False
@@ -485,6 +494,7 @@ class SpeculativeEngine(EnsembleEngine):
         if adm.any():
             self.draft_cache = self._dreset(self.draft_cache,
                                             jnp.asarray(adm))
+        return hits
 
     def spec_stats(self) -> dict:
         """Acceptance / pruning telemetry, one device transfer.

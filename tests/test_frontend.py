@@ -393,6 +393,58 @@ def test_router_drain_leaves_zero_orphaned_pages(params_k2):
         srv.shutdown()
 
 
+def test_rollout_flushes_prefix_trie_zero_stale_pages(params_k2):
+    """ISSUE 7 satellite: a cached prefix from round t must never serve
+    round t+1.  After a drained rollout the prefix trie is empty and
+    ZERO shared/cached pages survive (Router.rollout asserts it); a
+    repeat of the round-t workload then matches a cold engine built on
+    the NEW params — token-exact, not served from stale KV."""
+    cfg = registry.get_config("deepseek-7b", reduced=True).with_(
+        dtype="float32")
+    p_old = _params(2, cfg=cfg)
+    p_new = _params(2, seed=11, cfg=cfg)
+    kw = dict(n_slots=2, max_prompt=16, max_out=6, prefill_chunk=4,
+              paged=True, page_size=4, prefix_cache=True)
+    shared = list(range(50, 62))
+    prompts = [np.array(shared + [7, 8], np.int32),
+               np.array(shared + [9], np.int32)]
+    refs_new = [EnsembleEngine(cfg, p_new, **kw).generate(
+        [p], max_new=4)[0].tolist() for p in prompts]
+
+    eng = EnsembleEngine(cfg, p_old, **kw)
+    srv, router, reps = _start_frontend([eng])
+    try:
+        done = threading.Semaphore(0)
+        for p in prompts * 2:  # round t: warm the trie, share pages
+            router.submit(p, 4, on_done=lambda c: done.release())
+        for _ in range(4):
+            assert done.acquire(timeout=60.0)
+        # the online loop batches releases; poll until the round-t
+        # chains are back and their prefixes sit cached in the trie
+        deadline = time.time() + 30.0
+        while (eng.page_stats()["cached_pages"] == 0
+               and time.time() < deadline):
+            time.sleep(0.01)
+        assert eng.page_stats()["cached_pages"] > 0
+
+        router.rollout(p_new)  # round t+1 (asserts zero survivors)
+        ps = eng.page_stats()
+        assert ps["cached_pages"] == 0 and ps["shared_pages"] == 0
+
+        outs = {}
+        for i, p in enumerate(prompts):  # same workload, new round
+            router.submit(
+                p, 4, on_done=lambda c, i=i: (
+                    outs.__setitem__(i, c.tokens.tolist()),
+                    done.release()))
+        for _ in prompts:
+            assert done.acquire(timeout=60.0)
+        for i in range(len(prompts)):
+            assert outs[i] == refs_new[i]  # new model, not stale KV
+    finally:
+        srv.shutdown()
+
+
 def test_replica_loop_crash_leaves_rotation(params_k2):
     """A crashed replica loop (engine exception out of tick) must latch
     failed + draining so the router stops routing to it — not hang

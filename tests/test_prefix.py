@@ -1,0 +1,336 @@
+"""Prefix caching (ISSUE 7): refcounted COW pages + shared-prefix trie.
+
+Three layers of evidence, cheapest first:
+
+  - host-only unit tests of the PrefixCache trie and the refcounted
+    PageAllocator (match/insert/dedup, COW accounting, LRU eviction,
+    flush) — no device work at all;
+  - a 10k-request churn storm over the allocator+trie pair with mixed
+    shared prefixes, cancellations (release mid-prompt) and
+    preemptions: afterwards every refcount is zero and the free list
+    is whole — the no-leak guarantee admission accounting leans on;
+  - engine/scheduler equivalence on a real (reduced, float32) GQA
+    config: the warm path must be TOKEN-EXACT against the cold path —
+    sharing pages, COW-isolating divergent writers and skipping
+    prefill below the hit may change latency, never tokens — and the
+    prefix-cache-off engine must not change behavior at all.
+
+MLA-layout exactness and the >= 5x TTFT gate live in
+benchmarks/serving_bench.py --prefix (scripts/ci.sh runs it, also
+under a forced-2-device mesh).
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import registry
+from repro.models import transformer as tf
+from repro.serving import EnsembleEngine, PrefixCache, Scheduler
+from repro.serving.kv_cache import PageAllocator
+
+CFG = registry.get_config("deepseek-7b", reduced=True).with_(
+    dtype="float32")
+
+
+def _params(K, seed=0, cfg=CFG):
+    return jax.vmap(lambda k: tf.init(k, cfg))(
+        jax.random.split(jax.random.PRNGKey(seed), K))
+
+
+@pytest.fixture(scope="module")
+def params_k2():
+    return _params(2)
+
+
+def _wired(n_pages=32, page=4, n_slots=4, pps=8):
+    """An allocator with a trie wired in, the engine's arrangement."""
+    a = PageAllocator(n_pages, page, n_slots, pps)
+    a.cache = PrefixCache(page)
+    return a
+
+
+# -- trie unit tests ---------------------------------------------------------
+
+
+def test_trie_match_insert_roundtrip_and_partial_tail():
+    c = PrefixCache(4)
+    toks = list(range(10))  # 2 full pages + 2-token partial leaf
+    assert c.insert(toks, [7, 3, 9]) == 3
+    # full-page hit, capped below the partial leaf
+    hit, full, tail = c.match(toks[:8] + [99], 8)
+    assert (hit, full, tail) == (8, [7, 3], None)
+    # token-granular tail: 9 shared tokens = 2 full pages + 1 in-page
+    hit, full, tail = c.match(toks[:9] + [99, 98], 10)
+    assert (hit, full) == (9, [7, 3]) and tail == (9, 1)
+    # the max_hit cap truncates INSIDE a full page -> tail into it
+    hit, full, tail = c.match(toks, 6)
+    assert (hit, full) == (6, [7]) and tail == (3, 2)
+    # disjoint prompt: no hit
+    assert c.match([55, 56, 57], 3)[0] == 0
+
+
+def test_trie_dedup_is_content_addressed():
+    c = PrefixCache(4)
+    assert c.insert(list(range(8)), [0, 1]) == 2
+    # same content, different pages: nothing claimed, dedup counted
+    assert c.insert(list(range(8)), [5, 6]) == 0
+    assert c.deduped_pages == 2
+    # shared first page, divergent second -> one new node
+    assert c.insert(list(range(4)) + [9, 9, 9, 9], [7, 8]) == 1
+    hit, full, _ = c.match(list(range(4)) + [9, 9, 9, 9], 8)
+    assert (hit, full) == (8, [0, 8])
+
+
+def test_trie_peek_has_no_side_effects():
+    c = PrefixCache(2)
+    c.insert([1, 2, 3, 4], [0, 1])
+    before = (c.lookups, c.hits, list(c._lru))
+    assert c.peek([1, 2, 3, 4], 3) == c.match([1, 2, 3, 4], 3)
+    # match counted and LRU-touched; the peek before it did neither
+    assert (c.lookups, c.hits) == (before[0] + 1, before[1] + 1)
+    c2 = PrefixCache(2)
+    c2.insert([1, 2, 3, 4], [0, 1])
+    c2.insert([5, 6], [2])
+    order0 = list(c2._lru)
+    c2.peek([1, 2], 2)
+    assert list(c2._lru) == order0  # peek must not reorder eviction
+
+
+def test_trie_reclaim_lru_leaf_first_and_flush():
+    c = PrefixCache(2)
+    c.insert([1, 2, 3, 4], [0, 1])   # chain 0 -> 1
+    c.insert([1, 2, 9, 9], [0, 2])   # sibling leaf 2 under 0
+    for p in (0, 1, 2):
+        c.page_unreferenced(p)
+    assert c.evictable == 3
+    # oldest leaf first: page 1 (leaf) goes before page 0 (its parent)
+    assert c.reclaim(1) == [1]
+    assert c.reclaim(2) == [2, 0]
+    assert c.cached_pages == 0 and c.evicted_pages == 3
+    # flush returns only unreferenced pages; referenced ones are
+    # disowned (their unref later frees them at the allocator)
+    c.insert([1, 2, 3, 4], [4, 5])
+    c.page_unreferenced(4)
+    assert sorted(c.flush()) == [4]
+    assert c.cached_pages == 0 and c.owns(5) is False
+
+
+# -- allocator refcount / COW / accounting -----------------------------------
+
+
+def test_share_refcounts_and_release_order_preserved():
+    a = _wired()
+    assert a.alloc(0, 3)
+    chain = list(a.chain(0))
+    a.share(1, chain[:2])
+    assert a.ref(chain[0]) == 2 and a.shared_pages == 2
+    # slot 0 releases: shared pages live on (ref 1), its private page
+    # frees; nothing reaches the trie (it owns none of these)
+    a.release(0)
+    assert a.ref(chain[0]) == 1 and a.ref(chain[2]) == 0
+    a.release(1)
+    assert all(a.ref(p) == 0 for p in chain)
+    assert a.free_pages == a.n_pages
+    # free-list pop order unchanged from the pre-refcount allocator:
+    # lowest id comes back out first
+    assert a.alloc(2, 1) and a.chain(2) == (0,)
+
+
+def test_cow_swaps_private_page_and_keeps_src():
+    a = _wired()
+    assert a.alloc(0, 2)
+    src = a.chain(0)[1]
+    a.share(1, a.chain(0))          # both pages now shared (ref 2)
+    pair = a.cow(1, 1)
+    assert pair is not None and pair[0] == src
+    assert a.chain(1)[1] == pair[1] != src
+    assert a.ref(src) == 1 and a.ref(pair[1]) == 1
+    assert a.cow_count == 1
+    # exclusive page: no copy needed
+    assert a.cow(1, 1) is None
+
+
+def test_trie_owned_pages_become_evictable_not_free():
+    a = _wired(n_pages=8, page=4, n_slots=2, pps=4)
+    assert a.alloc(0, 2)
+    chain = list(a.chain(0))
+    a.cache.insert(list(range(8)), chain)
+    a.release(0)
+    # pages kept by the trie: not free, but still available
+    assert a.free_pages == 6 and a.available_pages == 8
+    assert a.cache.evictable == 2
+    # allocs drain the free list first...
+    assert a.alloc(1, 2) and a.free_pages == 4
+    assert a.alloc(0, 4) and a.free_pages == 0
+    # ...then the cached pages yield to a live request (LRU reclaim)
+    assert a.alloc(1, 4)
+    assert a.cache.cached_pages == 0 and a.available_pages == 0
+
+
+def test_flush_cache_returns_unreferenced_pages():
+    a = _wired(n_pages=6, page=2, n_slots=2, pps=3)
+    assert a.alloc(0, 2)
+    a.cache.insert(list(range(4)), a.chain(0))
+    a.release(0)                       # both pages now evictable
+    assert a.alloc(1, 1)               # slot 1 holds one fresh page
+    assert a.flush_cache() == 2
+    assert a.free_pages == 5 and a.cache.cached_pages == 0
+
+
+# -- 10k churn: no leaks -----------------------------------------------------
+
+
+def test_allocator_trie_churn_10k_no_leak():
+    """10k requests with mixed shared prefixes, churned through admit /
+    cancel-mid-prompt / preempt / complete against a small pool: after
+    the storm every refcount is zero, the trie holds only evictable
+    pages, and flushing returns the free list to WHOLE — the no-leak
+    invariant admission accounting (admit_cost/admission_headroom)
+    silently assumes on every tick."""
+    rng = np.random.default_rng(0)
+    page, n_slots, pps = 4, 8, 8
+    a = _wired(n_pages=64, page=page, n_slots=n_slots, pps=pps)
+    prefixes = [list(rng.integers(1, 1000, rng.integers(4, 20)))
+                for _ in range(6)]
+    live = {}  # slot -> (tokens, written)
+    for i in range(10_000):
+        b = int(rng.integers(n_slots))
+        if b in live:  # churn the occupant out: cancel / preempt / done
+            toks, written = live.pop(b)
+            if written > 0:
+                n = -(-written // page)
+                if len(a.chain(b)) >= n:
+                    a.cache.insert(toks[:written], a.chain(b)[:n])
+            a.release(b)
+        pre = prefixes[int(rng.integers(len(prefixes)))]
+        toks = list(pre) + list(rng.integers(1, 1000, rng.integers(1, 8)))
+        plen = len(toks)
+        hit, full, tail = a.cache.match(toks, plen - 1)
+        want = -(-plen // page)
+        cost = want - sum(1 for p in full if a.ref(p) > 0)
+        if cost > a.available_pages:
+            continue  # queue would hold it; nothing mutated
+        if full or tail:
+            a.share(b, full + ([tail[0]] if tail else []))
+        if tail is not None:
+            assert a.cow(b, len(full)) is not None
+        assert a.alloc(b, want)
+        # cancel mid-prompt sometimes: written < plen at next churn
+        written = int(rng.integers(hit, plen + 1))
+        live[b] = (toks, written)
+    for b in list(live):
+        a.release(b)
+    assert all(r == 0 for r in a._ref)
+    assert a.cache.evictable == a.cache.cached_pages
+    a.flush_cache()
+    assert a.free_pages == a.n_pages
+    assert sorted(a._free) == list(range(a.n_pages))
+    assert a.cow_count > 0 and a.cache.evicted_pages > 0  # paths hit
+
+
+# -- engine equivalence (GQA, reduced, float32) ------------------------------
+
+_KW = dict(n_slots=3, max_prompt=24, max_out=6, prefill_chunk=4,
+           paged=True, page_size=4, seed=0)
+
+
+def test_engine_warm_token_exact_vs_cold_and_cow_isolation(params_k2):
+    """The warm path returns the SAME tokens as a cold engine — across
+    full-page hits, partial-page (COW) hits, and concurrent divergent
+    sharers in one batch (a writer behind a COW page must never mutate
+    a neighbor reading the shared original)."""
+    shared = list(range(100, 118))                    # 18-token prefix
+    p1 = np.array(shared + [7, 8], np.int32)
+    p2 = np.array(shared + [9, 10, 11], np.int32)     # diverges at 18
+    p3 = np.array(shared[:10] + [3, 4], np.int32)     # mid-page split
+    cold = EnsembleEngine(CFG, params_k2, **_KW)
+    ref = cold.generate([p1, p2, p3], 5)
+
+    warm = EnsembleEngine(CFG, params_k2, prefix_cache=True, **_KW)
+    np.testing.assert_array_equal(ref[0], warm.generate([p1], 5)[0])
+    # p2 and p3 admit TOGETHER, both sharing p1's cached chain; p2's
+    # divergence lands mid-page -> COW; p3 splits inside page 2
+    out = warm.generate([p2, p3], 5)
+    np.testing.assert_array_equal(ref[1], out[0])
+    np.testing.assert_array_equal(ref[2], out[1])
+    ps = warm.page_stats()
+    assert ps["prefix_hits"] >= 2 and ps["cow_pages"] >= 1
+    # and the original is intact: p1 replays warm, token-exact, off
+    # the same cached pages the divergent writers shared
+    np.testing.assert_array_equal(ref[0], warm.generate([p1], 5)[0])
+
+
+def test_scheduler_prefix_on_equals_off_under_pressure(params_k2):
+    """Continuous batching over a prefix-cache engine with a pool too
+    small for the queue (preemptions live) returns the identical
+    completions as the prefix-off run, and leaks nothing."""
+    rng = np.random.default_rng(1)
+    shared = list(range(200, 216))
+    reqs = []
+    for i in range(9):
+        tail = list(rng.integers(1, 99, 1 + int(rng.integers(6))))
+        cut = int(rng.integers(4, len(shared) + 1))
+        reqs.append((np.array(shared[:cut] + tail, np.int32),
+                     2 + i % 4))
+    outs = {}
+    for on in (False, True):
+        eng = EnsembleEngine(CFG, params_k2, prefix_cache=on,
+                             n_pages=14, **_KW)
+        sched = Scheduler(eng)
+        rids = [sched.submit(t, m) for t, m in reqs]
+        done = sched.run()
+        outs[on] = [done[r].tokens for r in rids]
+        eng.update_slots(release=range(eng.n_slots))
+        assert eng.allocator.available_pages == eng.n_pages  # no leak
+        assert all(r == 0 for r in eng.allocator._ref)
+    for a, b in zip(outs[False], outs[True]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_prefix_cache_requires_eligible_config(params_k2):
+    with pytest.raises(ValueError, match="paged=True"):
+        EnsembleEngine(CFG, params_k2, n_slots=2, max_prompt=8,
+                       max_out=4, prefix_cache=True)
+    g = registry.get_config("gemma3-1b", reduced=True).with_(
+        dtype="float32")
+    # max_seq=24 > gemma3's reduced local_window=16, so the sliding
+    # window layers keep per-slot rings a hit could not skip
+    with pytest.raises(ValueError, match="per-slot"):
+        EnsembleEngine(g, _params(2, cfg=g), n_slots=2, max_prompt=16,
+                       max_out=8, paged=True, page_size=4,
+                       prefix_cache=True)
+
+
+def test_speculative_engine_rejects_prefix_cache(params_k2):
+    from repro.serving import SpeculativeEngine
+    one = jax.tree.map(lambda x: x[:1], params_k2)
+    with pytest.raises(ValueError, match="prefix_cache"):
+        SpeculativeEngine(CFG, params_k2, one, prefix_cache=True,
+                          paged=True, page_size=4, n_slots=2,
+                          max_prompt=8, max_out=4, prefill_chunk=4)
+
+
+# -- prefill chunk autotune (carry-over satellite) ---------------------------
+
+
+def test_prefill_chunk_autotune_and_override(params_k2):
+    # short prompts keep the proven floor of 32 (clamped to max_prompt)
+    e = EnsembleEngine(CFG, params_k2, n_slots=2, max_prompt=24,
+                       max_out=4)
+    assert e.prefill_chunk == 24  # min(max(32, 6), 24)
+    # long prompts: a quarter of max_prompt...
+    e = EnsembleEngine(CFG, params_k2, n_slots=2, max_prompt=160,
+                       max_out=4)
+    assert e.prefill_chunk == 40
+    # ...rounded up to a whole page on paged engines
+    e = EnsembleEngine(CFG, params_k2, n_slots=2, max_prompt=160,
+                       max_out=4, paged=True, page_size=16)
+    assert e.prefill_chunk == 48
+    # an explicit value always wins, including the 0 reference path
+    e = EnsembleEngine(CFG, params_k2, n_slots=2, max_prompt=160,
+                       max_out=4, prefill_chunk=8)
+    assert e.prefill_chunk == 8
+    e = EnsembleEngine(CFG, params_k2, n_slots=2, max_prompt=24,
+                       max_out=4, prefill_chunk=0)
+    assert e.prefill_chunk == 0
