@@ -97,5 +97,24 @@ timeout -k 30 900 env JAX_PLATFORMS=cpu \
     XLA_FLAGS="--xla_force_host_platform_device_count=2" \
     python benchmarks/serving_bench.py --prefix --prefix-only
 
+# fleet stage: multi-process replicas over sockets — cancellation,
+# backpressure and the SIGKILL+restart soak (tests/test_fleet.py), then
+# the --fleet bench gate (disconnect reclaims slot+pages, kill/restart
+# recovers token-exact, 429 only past the queue depth).  Generous caps:
+# each replica is a fresh process that compiles its own engine.  The
+# forced-2-device rerun gives every child a 2-device host, so each
+# replica's member-sharded engine runs REAL collectives in its own
+# process (children inherit XLA_FLAGS through the environment).
+timeout -k 30 1800 env JAX_PLATFORMS=cpu \
+    python -m pytest -x -q tests/test_fleet.py
+timeout -k 30 900 env JAX_PLATFORMS=cpu \
+    python benchmarks/serving_bench.py --fleet --fleet-only
+timeout -k 30 1800 env JAX_PLATFORMS=cpu \
+    XLA_FLAGS="--xla_force_host_platform_device_count=2" \
+    python -m pytest -x -q tests/test_fleet.py
+timeout -k 30 900 env JAX_PLATFORMS=cpu \
+    XLA_FLAGS="--xla_force_host_platform_device_count=2" \
+    python benchmarks/serving_bench.py --fleet --fleet-only
+
 # docs must not reference symbols that no longer exist
 python scripts/check_docs.py

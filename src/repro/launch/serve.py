@@ -52,7 +52,7 @@ def serve_http(args, cfg, build_engine):
     replicas = [Replica(f"r{i}", build_engine(),
                         prefill_budget=args.prefill_budget)
                 for i in range(max(1, args.replicas))]
-    router = Router(replicas)
+    router = Router(replicas, max_queue_depth=args.max_queue_depth)
     srv = serve_frontend(router, host=args.host, port=args.port,
                          verbose=not args.load)
     print(f"frontend: {srv.url}  ({len(replicas)} replica(s), "
@@ -73,7 +73,7 @@ def serve_http(args, cfg, build_engine):
                 srv.url, reqs, concurrency=2 * len(replicas)))
             return 0
         if args.watch_ckpt:
-            watch_checkpoints(args.watch_ckpt, router)
+            watch_checkpoints(args.watch_ckpt, router, canary=args.canary)
         else:
             while True:
                 time.sleep(3600)
@@ -85,9 +85,113 @@ def serve_http(args, cfg, build_engine):
     return 0
 
 
-def watch_checkpoints(root: str, router, poll_s: float = 5.0):
+def serve_fleet(args, cfg):
+    """--fleet: each replica its own OS process behind a FleetRouter.
+
+    The processes rebuild bit-identical engines from one EngineSpec
+    (seed-pinned init), so a request retried after a crash is
+    token-exact.  --load drives the synthetic requests through the
+    fleet with crash-retry and 429 backoff; --watch-ckpt rolls new
+    rounds out over POST /admin/swap (with --canary staging).
+    """
+    import threading
+
+    from repro.serving import client
+    from repro.serving.frontend import EngineSpec, FleetRouter
+
+    spec = EngineSpec(
+        arch=args.arch, reduced=args.reduced,
+        members=args.members if args.ensemble else 1, seed=args.seed,
+        n_slots=args.batch, max_prompt=args.prompt_len,
+        max_out=args.steps, prefill_chunk=args.prefill_chunk,
+        temperature=args.temperature, top_k=args.top_k,
+        eos_id=args.eos_id,
+        quorum=([float(x) for x in args.quorum.split(",")]
+                if args.quorum else None),
+        mesh=args.mesh, paged=args.paged, page_size=args.page_size,
+        n_pages=args.n_pages, prefix_cache=args.prefix_cache,
+        draft_member0=(args.draft_ckpt == "member0"),
+        gamma=args.gamma, spec_sampling=args.spec_sampling,
+        ckpt=(args.draft_ckpt if args.draft_ckpt
+              not in ("", "member0") else ""),
+        prefill_budget=args.prefill_budget)
+    fleet = FleetRouter(spec, n=max(1, args.replicas), host=args.host,
+                        max_queue_depth=args.max_queue_depth)
+    print(f"spawning {max(1, args.replicas)} replica process(es) "
+          f"(K={spec.members} members each) ...")
+    fleet.start()
+    for p in fleet.procs:
+        print(f"  {p.name}: pid {p.proc.pid}  {p.url}")
+    try:
+        if args.load:
+            reqs = client.make_requests(
+                args.requests, cfg.vocab_size,
+                prompt_len=(max(2, args.prompt_len // 4), args.prompt_len),
+                max_new=(max(1, args.steps // 2), args.steps),
+                seed=args.seed)
+            done, errs = [], []
+            lock = threading.Lock()
+            nxt = {"i": 0}
+
+            def worker():
+                while True:
+                    with lock:
+                        i = nxt["i"]
+                        if i >= len(reqs):
+                            return
+                        nxt["i"] += 1
+                    try:
+                        out = fleet.generate(*reqs[i])
+                        with lock:
+                            done.append(out)
+                    except Exception as e:  # noqa: BLE001
+                        with lock:
+                            errs.append(repr(e))
+
+            t0 = time.time()
+            threads = [threading.Thread(target=worker, daemon=True)
+                       for _ in range(2 * len(fleet.procs))]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            wall = time.time() - t0
+            n_tok = sum(r["n_gen"] for r in done)
+            s = fleet.stats()
+            print(f"fleet served {len(done)}/{len(reqs)} requests "
+                  f"({len(errs)} errors) | {n_tok} tokens in "
+                  f"{wall:.2f}s = {n_tok / max(wall, 1e-9):.1f} tok/s")
+            print(f"  retried {s['retried']}, 429 backoffs "
+                  f"{s['backoffs']}, latched {s['latched']}")
+            return 1 if errs else 0
+        if args.watch_ckpt:
+            from repro.checkpoint.store import latest_step
+            served = None
+            while True:
+                latest = latest_step(args.watch_ckpt)
+                if latest is not None and latest != served:
+                    fleet.rollout(ckpt=args.watch_ckpt, step=latest,
+                                  canary=args.canary)
+                    served = latest
+                    print(f"rolled out round {served} fleet-wide")
+                time.sleep(5.0)
+        else:
+            while True:
+                time.sleep(3600)
+    except KeyboardInterrupt:
+        print("\nterminating fleet ...")
+    finally:
+        fleet.stop()
+    print("fleet down; bye")
+    return 0
+
+
+def watch_checkpoints(root: str, router, poll_s: float = 5.0,
+                      canary: float = 0.0):
     """Poll a CheckpointManager root; hot-swap each newly committed
     round into the fleet (drain -> swap -> rejoin, zero drops).
+    canary > 0 routes that traffic fraction at one swapped replica
+    first and aborts the rollout if it fails.
 
     The round already on disk at startup is rolled in FIRST: a
     restarted server must serve the trained weights, not the random
@@ -103,7 +207,7 @@ def watch_checkpoints(root: str, router, poll_s: float = 5.0):
         if latest is not None and latest != served:
             template = router.replicas[0].engine.params
             new_params = restore_checkpoint(root, latest, template)
-            router.rollout(new_params)
+            router.rollout(new_params, canary=canary)
             served = latest
             print(f"rolled out round {served} "
                   f"(swaps: "
@@ -182,6 +286,19 @@ def main():
     ap.add_argument("--replicas", type=int, default=1,
                     help="engine replicas behind the frontend router "
                          "(--http); each gets its own cache pool")
+    ap.add_argument("--fleet", action="store_true",
+                    help="with --http: run each replica as its own OS "
+                         "PROCESS (engine + scheduler + HTTP surface) "
+                         "behind a crash-latching FleetRouter instead "
+                         "of threads in this one")
+    ap.add_argument("--max-queue-depth", type=int, default=None,
+                    help="backpressure: past this fleet-wide queue "
+                         "depth, POST /v1/generate answers 429 with "
+                         "Retry-After instead of queueing")
+    ap.add_argument("--canary", type=float, default=0.0,
+                    help="rollout canary fraction: swap one replica "
+                         "first and route this share of traffic at it "
+                         "before the fleet-wide swap (--watch-ckpt)")
     ap.add_argument("--load", action="store_true",
                     help="with --http: drive the synthetic requests "
                          "through the HTTP path and print the report "
@@ -199,6 +316,10 @@ def main():
     from repro.serving import EnsembleEngine, client
 
     cfg = registry.get_config(args.arch, reduced=args.reduced)
+    if args.http and args.fleet:
+        # fleet mode: the replica PROCESSES build the engines; the
+        # parent never initializes params at all
+        return serve_fleet(args, cfg)
     key = jax.random.PRNGKey(args.seed)
     K = args.members if args.ensemble else 1
     params = jax.vmap(lambda k: tf.init(k, cfg))(jax.random.split(key, K))

@@ -124,6 +124,18 @@ def print_report(r: dict):
 # client would see.
 
 
+class Backpressure(RuntimeError):
+    """The frontend answered 429 (router queue depth at its limit).
+    .retry_after carries the server's Retry-After hint in seconds —
+    callers back off that long and retry instead of hammering a
+    saturated fleet (FleetRouter.generate does exactly that)."""
+
+    def __init__(self, retry_after: float, detail: str):
+        super().__init__(f"HTTP 429: {detail} (retry after "
+                         f"{retry_after:.2f}s)")
+        self.retry_after = retry_after
+
+
 def parse_sse(raw: bytes) -> List[Tuple[str, dict]]:
     """Parse a Server-Sent-Events body -> [(event, data), ...]
     ("message" for bare data events)."""
@@ -169,6 +181,16 @@ def http_generate(url: str, tokens, max_new: int,
         conn.request("POST", "/v1/generate", body=body,
                      headers={"Content-Type": "application/json"})
         resp = conn.getresponse()
+        if resp.status == 429:
+            # backpressure is typed, not a generic failure: the caller
+            # can honor the server's backoff hint and retry
+            try:
+                detail = json.loads(resp.read())
+                retry_after = float(detail.get("retry_after", 1.0))
+                msg = detail.get("error", "queue full")
+            except (ValueError, json.JSONDecodeError):
+                retry_after, msg = 1.0, "queue full"
+            raise Backpressure(retry_after, msg)
         if resp.status != 200:
             err = resp.read().decode()
             raise RuntimeError(f"HTTP {resp.status}: {err}")

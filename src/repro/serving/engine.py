@@ -666,6 +666,27 @@ class EnsembleEngine:
     def free_pages(self) -> int:
         return self.allocator.free_pages if self.paged else -1
 
+    def assert_pool_whole(self) -> None:
+        """Drained-state check: no slot holds pages, the pool's global
+        accounting is consistent (kv_cache.PageAllocator
+        .check_invariants), and every page is free or trie-evictable.
+        Raises AssertionError naming the leak.  The fleet soak, the
+        cancellation tests, and a replica's post-drain hygiene all gate
+        on this — a page that survives a full drain is a leak the
+        admission headroom would silently repay forever.  No-op on
+        contiguous engines (nothing to leak)."""
+        if not self.paged:
+            return
+        a = self.allocator
+        held = {b: a.held_pages(b) for b in range(self.n_slots)
+                if a.held_pages(b)}
+        assert not held, f"drained engine still holds pages: {held}"
+        a.check_invariants()
+        assert a.available_pages == a.n_pages, \
+            (f"{a.n_pages - a.available_pages} pages neither free nor "
+             f"evictable after drain ({a.free_pages} free, "
+             f"{a.available_pages} available of {a.n_pages})")
+
     def page_stats(self) -> dict:
         """Free-list occupancy telemetry (placement summaries, client
         reports).  Empty on contiguous engines."""

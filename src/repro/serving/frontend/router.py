@@ -31,6 +31,27 @@ reaches a serving fleet mid-traffic this way (launch/serve.py wires
 the flag).  With a single replica the router parks incoming requests
 in a backlog while it drains and flushes them to the swapped replica
 on rejoin: still zero drops, at the cost of queueing delay.
+
+`rollout(..., canary=0.25)` swaps ONE replica first and routes that
+fraction of traffic to the new round; only once the canary has served
+`canary_requests` completions without its loop failing does the
+drain-swap proceed fleet-wide — a bad round is caught while the rest
+of the fleet still serves the old one.
+
+Overload is shed, not queued without bound: with `max_queue_depth`
+set, submit() raises QueueFull once fleet-wide queue depth (in-flight
++ backlog) crosses the threshold; the HTTP layer answers 429 with
+Retry-After.  Cancellation propagates the other way — `cancel(name,
+rid)` forwards a client disconnect to the owning replica's
+Scheduler.cancel (or unparks a backlog ticket), releasing the slot and
+its pages mid-decode.
+
+The same boundary also runs over sockets: frontend/replica.py promotes
+each replica to its own OS process (engine, mesh, page pool, and
+serve_forever loop behind the replica's own HTTP surface) with the
+fleet router speaking HTTP/SSE to replica ports — see ReplicaProcess /
+FleetRouter there.  This module stays the in-process tier both build
+on.
 """
 from __future__ import annotations
 
@@ -42,6 +63,22 @@ from typing import List, Optional, Sequence, Tuple
 from repro.serving.engine import EnsembleEngine
 from repro.serving.scheduler import (Completion, DoneCallback, Scheduler,
                                      TokenCallback)
+
+
+class QueueFull(RuntimeError):
+    """Backpressure: Router.submit refused because fleet queue depth
+    crossed max_queue_depth.  .retry_after (seconds) is the router's
+    drain estimate — the HTTP layer forwards it as a 429 Retry-After
+    header so well-behaved clients back off instead of retry-storming
+    a saturated fleet."""
+
+    def __init__(self, depth: int, limit: int, retry_after: float):
+        super().__init__(
+            f"queue depth {depth} >= max_queue_depth {limit}; "
+            f"retry after {retry_after:.2f}s")
+        self.depth = depth
+        self.limit = limit
+        self.retry_after = retry_after
 
 
 class Replica:
@@ -129,6 +166,7 @@ class Replica:
             "live_slots": s.live_slots,
             "pending": len(s.pending),
             "completed": s.n_completed,
+            "cancelled": s.n_cancelled,
             "preemptions": s.preemptions,
             "peak_in_flight": s.peak_in_flight,
             "streamed_tokens": s.n_streamed,
@@ -149,21 +187,38 @@ class Replica:
 class Router:
     """Fan N replicas behind one thread-safe submit()/stream door."""
 
-    def __init__(self, replicas: Sequence[Replica]):
+    def __init__(self, replicas: Sequence[Replica],
+                 max_queue_depth: Optional[int] = None):
         if not replicas:
             raise ValueError("router needs at least one replica")
         names = [r.name for r in replicas]
         if len(set(names)) != len(names):
             raise ValueError(f"replica names must be unique: {names}")
+        if max_queue_depth is not None and max_queue_depth < 1:
+            raise ValueError(
+                f"max_queue_depth must be >= 1, got {max_queue_depth}")
         self.replicas: List[Replica] = list(replicas)
         self._by_name = {r.name: r for r in self.replicas}
         self._lock = threading.Lock()
         # requests that arrived while every replica was draining park
-        # here and flush on the next rejoin — drained, never dropped
+        # here and flush on the next rejoin — drained, never dropped.
+        # Entries carry their router-level ticket so cancel("backlog",
+        # ticket) can unpark one before a replica picks it up.
         self._backlog: deque = deque()
+        # backpressure: past this fleet-wide depth (in-flight across
+        # replicas + backlog) submit() sheds with QueueFull instead of
+        # queueing without bound; None = never shed
+        self.max_queue_depth = max_queue_depth
         self.n_submitted = 0
         self.n_completed = 0
-        self.n_rejected = 0
+        self.n_rejected = 0   # door validation failures (HTTP 400)
+        self.n_shed = 0       # backpressure rejections (HTTP 429)
+        self.n_cancelled_backlog = 0  # tickets cancelled while parked
+        # canary rollout state: while set, _route sends ~frac of
+        # submissions to the named (already-swapped) replica
+        self._canary: Optional[str] = None
+        self._canary_frac = 0.0
+        self._canary_credit = 0.0
         self._started = False
 
     # -- lifecycle ----------------------------------------------------------
@@ -189,7 +244,26 @@ class Router:
         live = [r for r in self.replicas if r.routable]
         if not live:
             return None
+        if self._canary is not None:
+            canary = self._by_name.get(self._canary)
+            if canary is not None and canary.routable:
+                # deterministic fractional routing: accumulate credit
+                # per submission, send one to the canary each time it
+                # crosses 1.0 — no RNG, exact fraction over any window
+                self._canary_credit += self._canary_frac
+                if self._canary_credit >= 1.0:
+                    self._canary_credit -= 1.0
+                    return canary
+                rest = [r for r in live if r.name != canary.name]
+                if rest:
+                    return min(rest, key=Replica.load_key)
         return min(live, key=Replica.load_key)
+
+    @property
+    def queue_depth(self) -> int:
+        """Fleet-wide demand: queued + live requests across replicas,
+        plus the backlog — the number max_queue_depth sheds against."""
+        return sum(r.in_flight for r in self.replicas) + len(self._backlog)
 
     def submit(self, tokens, max_new: int,
                on_token: Optional[TokenCallback] = None,
@@ -208,10 +282,24 @@ class Router:
         rejoin — the returned name is then "backlog" and the rid is a
         router-level ticket (on_done/on_token still fire normally once
         a replica picks it up).
+
+        With max_queue_depth set, raises QueueFull (not ValueError)
+        once fleet-wide queue depth reaches the threshold — the caller
+        answers 429 + Retry-After instead of parking another handler
+        on a saturated fleet.
         """
         sample_kw = dict(temperature=temperature, top_k=top_k,
                          seed=seed, draft=draft)
         with self._lock:
+            if self.max_queue_depth is not None:
+                depth = self.queue_depth
+                if depth >= self.max_queue_depth:
+                    self.n_shed += 1
+                    # drain estimate: current depth at ~20 req/s/fleet
+                    # is deliberately coarse — the header's job is to
+                    # spread the retry herd, not to be a promise
+                    raise QueueFull(depth, self.max_queue_depth,
+                                    max(0.1, 0.05 * depth))
             rep = self._route()
             if rep is None:
                 # validate at the door even while parked, so a bad
@@ -223,7 +311,7 @@ class Router:
                 self.n_submitted += 1
                 done = self._count_done(on_done)
                 self._backlog.append(
-                    (tokens, max_new, on_token, done, sample_kw))
+                    (ticket, tokens, max_new, on_token, done, sample_kw))
                 return ("backlog", ticket)
             # count only after validation inside submit() passes —
             # door-rejected requests must not inflate the counter (the
@@ -258,15 +346,69 @@ class Router:
                 on_done(comp)
         return counting
 
+    def cancel(self, name: str, rid: int) -> bool:
+        """Propagate a client disconnect: forward to the owning
+        replica's Scheduler.cancel (which releases the slot, pages,
+        and prefix refs at its next tick), or unpark a "backlog"
+        ticket before any replica picks it up.  -> False when the
+        request already finished (benign race) or the name is gone."""
+        if name == "backlog":
+            with self._lock:
+                for entry in self._backlog:
+                    if entry[0] == rid:
+                        self._backlog.remove(entry)
+                        self.n_cancelled_backlog += 1
+                        return True
+            return False
+        rep = self._by_name.get(name)
+        return rep.scheduler.cancel(rid) if rep is not None else False
+
     def _flush_backlog_locked(self):
         while self._backlog:
             rep = self._route()
             if rep is None:
                 return
-            (tokens, max_new, on_token, done,
+            (_, tokens, max_new, on_token, done,
              sample_kw) = self._backlog.popleft()
             rep.scheduler.submit(tokens, max_new, on_token=on_token,
                                  on_done=done, **sample_kw)
+
+    # -- elastic membership -------------------------------------------------
+
+    def add_replica(self, rep: Replica):
+        """Grow the fleet under traffic: register (and start, if the
+        router is running) a new replica and hand it any backlog.  The
+        elastic scale-out step — FleetRouter drives the process-backed
+        equivalent from queue depth."""
+        with self._lock:
+            if rep.name in self._by_name:
+                raise ValueError(f"replica name {rep.name!r} already "
+                                 f"in the fleet")
+            self.replicas.append(rep)
+            self._by_name[rep.name] = rep
+            if self._started:
+                rep.start()
+            self._flush_backlog_locked()
+
+    def remove_replica(self, name: str, timeout: float = 120.0) -> Replica:
+        """Retire one replica gracefully: drain -> wait -> stop -> drop
+        from rotation; -> the detached Replica (its engine can be
+        reused or discarded).  Refuses to empty the fleet."""
+        rep = self._by_name[name]
+        with self._lock:
+            if len(self.replicas) <= 1:
+                raise ValueError("cannot retire the last replica")
+        self.drain(name)
+        if not self.wait_drained(name, timeout=timeout):
+            raise TimeoutError(
+                f"replica {name} did not drain within {timeout}s "
+                f"({rep.in_flight} in flight); still in rotation "
+                f"(draining)")
+        rep.stop()
+        with self._lock:
+            self.replicas.remove(rep)
+            self._by_name.pop(name)
+        return rep
 
     # -- draining + rollout -------------------------------------------------
 
@@ -288,26 +430,57 @@ class Router:
 
     def wait_drained(self, name: str, timeout: float = 120.0,
                      poll: float = 0.005) -> bool:
-        """Block until a draining replica has no queued or live work."""
-        rep = self._by_name[name]
-        deadline = time.time() + timeout
-        while not rep.idle:
-            if time.time() > deadline:
-                return False
-            time.sleep(poll)
-        return True
+        """Block until a draining replica has no queued or live work
+        AND its loop has flushed every pending page release — event-
+        based (Scheduler.wait_quiesced): the loop signals its own park,
+        so this waits on the state transition itself, not on a
+        wall-clock sleep happening to land after it.  `poll` is kept
+        for signature compatibility; the quiesce event supersedes it."""
+        del poll
+        return self._by_name[name].scheduler.wait_quiesced(timeout)
 
     def wait_idle(self, timeout: float = 120.0, poll: float = 0.005) -> bool:
-        """Block until every replica (and the backlog) is quiet."""
+        """Block until every replica is quiesced (idle, releases
+        flushed) and the backlog is empty."""
+        del poll
         deadline = time.time() + timeout
-        while (self._backlog
-               or any(not r.idle for r in self.replicas)):
-            if time.time() > deadline:
+        while time.time() <= deadline:
+            if not all(r.scheduler.wait_quiesced(
+                    max(0.0, deadline - time.time()))
+                    for r in self.replicas):
                 return False
-            time.sleep(poll)
-        return True
+            with self._lock:
+                # a backlog flush re-fills replicas; re-check quiesce
+                # on the next pass if anything moved
+                if not self._backlog:
+                    if all(not r.scheduler.has_work for r in self.replicas):
+                        return True
+        return False
 
-    def rollout(self, new_stacked_params, timeout: float = 120.0):
+    def _swap_one(self, rep: Replica, new_stacked_params,
+                  timeout: float):
+        """The rollout unit step: drain -> wait -> swap -> assert zero
+        stale pages -> rejoin, for one replica."""
+        self.drain(rep.name)
+        try:
+            if not self.wait_drained(rep.name, timeout=timeout):
+                raise TimeoutError(
+                    f"replica {rep.name} did not drain within "
+                    f"{timeout}s ({rep.in_flight} in flight)")
+            rep.engine.swap_params(new_stacked_params)
+            ps = rep.engine.page_stats()
+            if ps.get("cached_pages", 0) or ps.get("shared_pages", 0):
+                raise RuntimeError(
+                    f"replica {rep.name}: {ps.get('cached_pages', 0)} "
+                    f"cached / {ps.get('shared_pages', 0)} shared "
+                    f"pages survived a drained rollout — stale "
+                    f"round-t KV would serve round t+1")
+        finally:
+            self.rejoin(rep.name)
+
+    def rollout(self, new_stacked_params, timeout: float = 120.0,
+                canary: float = 0.0, canary_requests: int = 8,
+                canary_timeout: float = 120.0):
         """Zero-downtime model rollout: drain -> swap -> rejoin, one
         replica at a time, under live traffic.
 
@@ -318,6 +491,18 @@ class Router:
         itself reuses the replica's compiled kernels: same shapes, same
         jitted callables, zero recompiles.
 
+        canary > 0 (multi-replica fleets): swap ONE replica first and
+        route that fraction of incoming traffic to it until it has
+        served `canary_requests` completions on the new round; only
+        then does the fleet-wide drain-swap proceed.  A canary whose
+        loop fails aborts the rollout with the REST of the fleet still
+        on the old round (the canary stays latched out of rotation) —
+        the blast radius of a bad round is the traffic fraction, not
+        the fleet.  The canary window needs live traffic to observe;
+        without any it times out (canary_timeout) and aborts the same
+        way.  canary on a single-replica fleet degrades to the plain
+        rollout (there is no old-round fleet to protect).
+
         Prefix-cache replicas additionally flush their trie inside
         swap_params — cached pages hold the OLD model's KV — and
         because the replica is fully drained here, the flush must
@@ -325,23 +510,38 @@ class Router:
         a stale round-t prefix able to serve a round-t+1 request, so
         it is asserted, not assumed.
         """
-        for rep in self.replicas:
-            self.drain(rep.name)
+        remaining = list(self.replicas)
+        if canary > 0 and len(remaining) > 1:
+            first = remaining[0]
+            self._swap_one(first, new_stacked_params, timeout)
+            base = first.scheduler.n_completed
+            with self._lock:
+                self._canary = first.name
+                self._canary_frac = float(min(canary, 1.0))
+                self._canary_credit = 0.0
             try:
-                if not self.wait_drained(rep.name, timeout=timeout):
-                    raise TimeoutError(
-                        f"replica {rep.name} did not drain within "
-                        f"{timeout}s ({rep.in_flight} in flight)")
-                rep.engine.swap_params(new_stacked_params)
-                ps = rep.engine.page_stats()
-                if ps.get("cached_pages", 0) or ps.get("shared_pages", 0):
-                    raise RuntimeError(
-                        f"replica {rep.name}: {ps.get('cached_pages', 0)} "
-                        f"cached / {ps.get('shared_pages', 0)} shared "
-                        f"pages survived a drained rollout — stale "
-                        f"round-t KV would serve round t+1")
+                deadline = time.time() + canary_timeout
+                while first.scheduler.n_completed - base < canary_requests:
+                    if first.failed is not None:
+                        raise RuntimeError(
+                            f"canary replica {first.name} failed on the "
+                            f"new round ({first.failed}); rollout "
+                            f"aborted with the rest of the fleet on the "
+                            f"old round")
+                    if time.time() > deadline:
+                        raise TimeoutError(
+                            f"canary window saw only "
+                            f"{first.scheduler.n_completed - base}/"
+                            f"{canary_requests} completions in "
+                            f"{canary_timeout}s (a canary needs live "
+                            f"traffic); rollout aborted")
+                    time.sleep(0.005)
             finally:
-                self.rejoin(rep.name)
+                with self._lock:
+                    self._canary = None
+            remaining = remaining[1:]
+        for rep in remaining:
+            self._swap_one(rep, new_stacked_params, timeout)
 
     # -- telemetry ----------------------------------------------------------
 
@@ -353,6 +553,12 @@ class Router:
             "submitted": self.n_submitted,
             "completed": self.n_completed,
             "rejected": self.n_rejected,
+            "shed": self.n_shed,
+            "cancelled": (sum(r["cancelled"] for r in reps)
+                          + self.n_cancelled_backlog),
+            "queue_depth": self.queue_depth,
+            "max_queue_depth": self.max_queue_depth,
+            "canary": self._canary,
             "backlog": len(self._backlog),
             "live_slots": sum(r["live_slots"] for r in reps),
             "pending": sum(r["pending"] for r in reps),

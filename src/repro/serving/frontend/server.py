@@ -15,9 +15,27 @@ Endpoints (token-id API; tokenizers are out of scope repo-wide):
               event: done
               data: {"tokens": [...], "n_gen": ..., ...}
   GET /healthz          liveness + per-replica drain state (200, or
-                        503 once shutdown begins)
+                        503 once shutdown begins); paged replicas also
+                        report page accounting (n_pages/free/available)
+                        so a supervisor can check for leaks remotely
   GET /metrics          Prometheus-style text: requests, tokens,
                         live slots, free pages, preemptions, ...
+  POST /admin/swap      (servers built with an admin_swap hook —
+                        replica processes wire one in)
+                        roll a new round into this process's fleet:
+                        body {"seed": s} rebuilds the K-member stack
+                        from that init seed, {"ckpt": root, "step": n}
+                        restores a CheckpointManager round; the swap
+                        runs the router's drain -> swap -> rejoin
+
+A client that disconnects mid-SSE-stream CANCELS its request: the
+write failure surfaces as BrokenPipeError in the handler, which
+forwards Router.cancel -> Scheduler.cancel, releasing the slot, its
+pages, and any prefix-trie refs mid-decode instead of finishing a
+stream nobody is reading.  Backpressure composes at the same door:
+when the router's queue depth crosses its threshold, POST /v1/generate
+answers 429 with a Retry-After header instead of parking another
+handler thread on a saturated fleet.
 
 Built on http.server.ThreadingHTTPServer: one handler thread per
 connection parks on a queue.Queue that the scheduler loop feeds via
@@ -41,7 +59,7 @@ import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Optional
 
-from repro.serving.frontend.router import Router
+from repro.serving.frontend.router import QueueFull, Router
 
 _DONE = object()  # queue sentinel: completion follows no more tokens
 
@@ -74,11 +92,14 @@ class _Handler(BaseHTTPRequestHandler):
 
     # -- plumbing -----------------------------------------------------------
 
-    def _send_json(self, code: int, payload: dict):
+    def _send_json(self, code: int, payload: dict,
+                   headers: Optional[dict] = None):
         body = json.dumps(payload).encode()
         self.send_response(code)
         self.send_header("Content-Type", "application/json")
         self.send_header("Content-Length", str(len(body)))
+        for k, v in (headers or {}).items():
+            self.send_header(k, v)
         self.end_headers()
         self.wfile.write(body)
 
@@ -95,16 +116,34 @@ class _Handler(BaseHTTPRequestHandler):
         if self.path == "/healthz":
             stats = self.router.stats()
             alive = not self.frontend.draining
+            reps = []
+            for r in stats["replicas"]:
+                rep = {"name": r["name"], "draining": r["draining"],
+                       "failed": r["failed"],
+                       "live_slots": r["live_slots"], "pending": r["pending"],
+                       "completed": r["completed"],
+                       "cancelled": r["cancelled"],
+                       "members": r["members"], "n_slots": r["n_slots"],
+                       "swaps_done": r["swaps_done"]}
+                ps = r["page_stats"]
+                if ps:
+                    # page accounting over the wire: a fleet supervisor
+                    # asserts available_pages == n_pages on a drained
+                    # replica process without reaching into it
+                    rep["n_pages"] = ps["n_pages"]
+                    rep["free_pages"] = ps["free_pages"]
+                    rep["available_pages"] = ps["available_pages"]
+                    rep["shared_pages"] = ps["shared_pages"]
+                    rep["cached_pages"] = ps.get("cached_pages", 0)
+                reps.append(rep)
             payload = {
                 "ok": alive,
                 "draining": self.frontend.draining,
-                "replicas": [
-                    {"name": r["name"], "draining": r["draining"],
-                     "failed": r["failed"],
-                     "live_slots": r["live_slots"], "pending": r["pending"],
-                     "members": r["members"], "n_slots": r["n_slots"],
-                     "swaps_done": r["swaps_done"]}
-                    for r in stats["replicas"]],
+                "queue_depth": stats["queue_depth"],
+                "cancelled": stats["cancelled"],
+                "shed": stats["shed"],
+                "completed": stats["completed"],
+                "replicas": reps,
             }
             self._send_json(200 if alive else 503, payload)
         elif self.path == "/metrics":
@@ -118,6 +157,9 @@ class _Handler(BaseHTTPRequestHandler):
             self._send_json(404, {"error": f"no route {self.path}"})
 
     def do_POST(self):
+        if self.path == "/admin/swap":
+            self._do_admin_swap()
+            return
         if self.path != "/v1/generate":
             self._send_json(404, {"error": f"no route {self.path}"})
             return
@@ -161,6 +203,11 @@ class _Handler(BaseHTTPRequestHandler):
                 if stream else None,
                 on_done=lambda comp: q.put((_DONE, comp)),
                 **sample_kw)
+        except QueueFull as e:  # backpressure: shed, don't park
+            self._send_json(
+                429, {"error": str(e), "retry_after": e.retry_after},
+                headers={"Retry-After": str(max(1, round(e.retry_after)))})
+            return
         except ValueError as e:  # validate_request rejected at the door
             self.router.count_rejected()
             self._send_json(400, {"error": str(e)})
@@ -219,7 +266,33 @@ class _Handler(BaseHTTPRequestHandler):
                     + b"\n\n")
                 self.wfile.flush()
         except (BrokenPipeError, ConnectionResetError):
-            return  # client went away; the request still completes
+            # client went away mid-stream: cancel instead of finishing
+            # a stream nobody reads — the replica's next tick releases
+            # the slot, its pages, and any prefix-trie refs
+            self.router.cancel(replica, rid)
+            return
+
+    def _do_admin_swap(self):
+        """POST /admin/swap — replica-process model rollout over the
+        wire.  Only servers constructed with an admin_swap hook expose
+        it (frontend/replica.py wires one in); the hook owns building
+        the new round's params and calling Router.rollout."""
+        if self.frontend.admin_swap is None:
+            self._send_json(404, {"error": "no admin endpoints here"})
+            return
+        body = self._read_body()
+        if body is None:
+            self._send_json(400, {"error": "body must be JSON"})
+            return
+        try:
+            result = self.frontend.admin_swap(body)
+        except ValueError as e:
+            self._send_json(400, {"error": str(e)})
+            return
+        except Exception as e:  # swap failed mid-flight: report, don't die
+            self._send_json(500, {"error": repr(e)})
+            return
+        self._send_json(200, {"ok": True, **(result or {})})
 
 
 class _Server(ThreadingHTTPServer):
@@ -237,9 +310,15 @@ class FrontendServer:
     """
 
     def __init__(self, router: Router, host: str = "127.0.0.1",
-                 port: int = 0, verbose: bool = False):
+                 port: int = 0, verbose: bool = False,
+                 admin_swap=None):
         self.router = router
         self.verbose = verbose
+        # optional POST /admin/swap hook: callable(body_dict) -> dict,
+        # raising ValueError for bad bodies.  Replica processes wire
+        # one in (frontend/replica.py); plain frontends leave it off
+        # and the route 404s.
+        self.admin_swap = admin_swap
         self.draining = False
         handler = type("BoundHandler", (_Handler,),
                        {"router": router, "frontend": self})
@@ -282,8 +361,14 @@ class FrontendServer:
             f"repro_serving_requests_completed {s['completed']}",
             "# TYPE repro_serving_requests_rejected counter",
             f"repro_serving_requests_rejected {s['rejected']}",
+            "# TYPE repro_serving_requests_shed counter",
+            f"repro_serving_requests_shed {s['shed']}",
+            "# TYPE repro_serving_requests_cancelled counter",
+            f"repro_serving_requests_cancelled {s['cancelled']}",
             "# TYPE repro_serving_backlog gauge",
             f"repro_serving_backlog {s['backlog']}",
+            "# TYPE repro_serving_queue_depth gauge",
+            f"repro_serving_queue_depth {s['queue_depth']}",
             "# TYPE repro_serving_streamed_tokens counter",
             f"repro_serving_streamed_tokens {s['streamed_tokens']}",
         ]
@@ -294,6 +379,7 @@ class FrontendServer:
                 f"repro_serving_pending{lab} {r['pending']}",
                 f"repro_serving_peak_in_flight{lab} {r['peak_in_flight']}",
                 f"repro_serving_preemptions{lab} {r['preemptions']}",
+                f"repro_serving_cancelled{lab} {r['cancelled']}",
                 f"repro_serving_steps_run{lab} {r['steps_run']}",
                 f"repro_serving_swaps_done{lab} {r['swaps_done']}",
                 f"repro_serving_draining{lab} {int(r['draining'])}",
@@ -303,7 +389,10 @@ class FrontendServer:
             ps = r["page_stats"]
             if ps:
                 lines += [
+                    f"repro_serving_total_pages{lab} {ps['n_pages']}",
                     f"repro_serving_free_pages{lab} {ps['free_pages']}",
+                    f"repro_serving_available_pages{lab} "
+                    f"{ps['available_pages']}",
                     f"repro_serving_low_water_pages{lab} "
                     f"{ps['low_water_pages']}",
                     f"repro_serving_shared_pages{lab} "

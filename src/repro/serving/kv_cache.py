@@ -573,6 +573,52 @@ class PageAllocator:
         self._free.extend(sorted(pages, reverse=True))
         return len(pages)
 
+    def check_invariants(self) -> None:
+        """Assert the pool's global accounting is consistent; raises
+        AssertionError naming the first violation.
+
+        The conservation law every admit/share/cow/cancel/preempt/
+        release interleaving must preserve (the cancellation path and
+        the fleet soak gate on this, and the hypothesis property test
+        drives random op sequences through it):
+
+          - every page's refcount equals the number of chains holding
+            it (the trie owns content, never references);
+          - the free list is disjoint from every chain and from the
+            trie, and holds no duplicates;
+          - refcount 0 <=> free or trie-evictable: every page is
+            exactly one of free / chain-referenced / cached-unref;
+          - the trie's evictable count matches its ref-0 owned pages.
+        """
+        chain_refs = [0] * self.n_pages
+        for b, chain in enumerate(self._chain):
+            for p in chain:
+                assert 0 <= p < self.n_pages, \
+                    f"slot {b} chain holds invalid page id {p}"
+                chain_refs[p] += 1
+        free = set(self._free)
+        assert len(free) == len(self._free), "free list holds duplicates"
+        owned = (self.cache.owned_pages() if self.cache is not None
+                 else set())
+        evictable = 0
+        for p in range(self.n_pages):
+            assert self._ref[p] == chain_refs[p], \
+                (f"page {p}: refcount {self._ref[p]} != "
+                 f"{chain_refs[p]} chain references")
+            if p in free:
+                assert chain_refs[p] == 0, \
+                    f"page {p} is free but referenced by a chain"
+                assert p not in owned, \
+                    f"page {p} is free but the trie still owns it"
+            elif chain_refs[p] == 0:
+                assert p in owned, \
+                    f"page {p} leaked: not free, not referenced, not cached"
+                evictable += 1
+        if self.cache is not None:
+            assert evictable == self.cache.evictable, \
+                (f"trie evictable counter {self.cache.evictable} != "
+                 f"{evictable} ref-0 owned pages")
+
     def table(self) -> np.ndarray:
         """(n_slots, pages_per_slot) int32 logical->physical map,
         sentinel-filled (n_pages) where unallocated.  Cached; rebuilt

@@ -113,6 +113,12 @@ class PrefixCache:
     def cached_pages(self) -> int:
         return len(self._lru)
 
+    def owned_pages(self) -> set:
+        """Physical ids the trie currently owns (a copy).  The
+        allocator's invariant checker partitions the pool with this:
+        a ref-0 page must be either free or in here, never both."""
+        return set(self._lru)
+
     # -- lookup -------------------------------------------------------------
 
     def _walk(self, tokens: Sequence[int], max_hit: int, touch: bool

@@ -59,8 +59,16 @@ greedy-regeneration contract; with temperature > 0 a preempted stream
 may diverge from its already-emitted prefix — prefer temperature=0 for
 streaming under memory pressure).
 
+Requests can also leave early: `cancel(rid)` (thread-safe) marks a
+request abandoned — a queued one is dropped before it can admit, a
+live one releases its slot, pages, and prefix-trie references at the
+next tick boundary through the same path preemption uses, so
+cancellation composes with preemption, prefix sharing (refcount
+decrements), and the speculative engine's rollback.  The HTTP frontend
+drives this from client disconnects mid-SSE.
+
 Threading contract: ONE thread drives tick()/run()/serve_forever();
-any number of threads may call submit()/stop().  Slot state,
+any number of threads may call submit()/cancel()/stop().  Slot state,
 completions, and the engine are touched only by the driving thread;
 callbacks (on_token/on_done) fire on the driving thread, so they must
 be quick and non-blocking (push to a queue, set an event).
@@ -171,15 +179,24 @@ class Scheduler:
         self.preemptions = 0     # paged: decode-time evictions to queue
         self.peak_in_flight = 0  # max concurrently admitted requests
         self.n_streamed = 0      # tokens delivered through on_token
+        self.n_cancelled = 0     # requests cancelled before completion
         # per-rid stream high-water mark: survives preemption so a
         # re-generated (greedy-identical) prefix is never re-emitted
         self._streamed: Dict[int, int] = {}
+        # rids cancel() has marked; the loop thread applies them at the
+        # next tick boundary (queue removal or slot+page release)
+        self._cancel_req: set = set()
         # submit() may be called from any thread while ONE loop thread
         # drives tick(); the lock guards rid allocation + enqueue, the
         # event wakes an idle serve_forever out of its park
         self._lock = threading.Lock()
         self._wake = threading.Event()
         self._stop = threading.Event()
+        # set by serve_forever when it parks with nothing queued, live,
+        # or pending release — the observable "quiesced" state
+        # wait_quiesced blocks on (event-based drain/idle checks
+        # instead of wall-clock sleeps)
+        self._idle = threading.Event()
 
     # -- submission ---------------------------------------------------------
 
@@ -219,8 +236,54 @@ class Scheduler:
                 on_token=on_token, on_done=on_done,
                 temperature=temperature, top_k=top_k, seed=seed,
                 draft=draft))
+        self._idle.clear()
         self._wake.set()
         return rid
+
+    def cancel(self, rid: int) -> bool:
+        """Abandon a request mid-flight (client disconnect, shed load).
+        Thread-safe; the loop thread applies it at the next tick
+        boundary: a queued request is removed before it can admit, a
+        live one releases its slot, its pages, and any prefix-trie
+        references mid-decode (or mid-prefill-chunk) through the same
+        release path preemption uses — so cancellation composes with
+        preemption, COW sharing, and the spec engine's rollback for
+        free.  No Completion is delivered and no callback fires.
+
+        -> False when the rid is already finished (or unknown): the
+        race where the last token beat the disconnect is benign — the
+        completed slot was already harvested — so callers need not
+        distinguish.  Cancelling an already-cancelled rid is a no-op.
+        """
+        with self._lock:
+            found = any(r.rid == rid for r in self.pending) or any(
+                m is not None and m.req.rid == rid for m in self.slots)
+            if found:
+                self._cancel_req.add(int(rid))
+        self._wake.set()
+        return found
+
+    def _apply_cancels(self):
+        """Loop-thread half of cancel(): drop marked rids from the
+        queue, release marked live slots.  Runs at the top of tick()
+        (a cancelled queued request must never admit) and again from
+        the harvest path (a cancel that lands mid-tick frees its pages
+        this iteration, not the next).  Unknown rids — completed or
+        cancelled while the request raced to done — dissolve here."""
+        with self._lock:
+            if not self._cancel_req:
+                return
+            wanted, self._cancel_req = self._cancel_req, set()
+        survivors = [r for r in self.pending if r.rid not in wanted]
+        if len(survivors) != len(self.pending):
+            self.n_cancelled += len(self.pending) - len(survivors)
+            self.pending = deque(survivors)
+        for b, meta in enumerate(self.slots):
+            if meta is not None and meta.req.rid in wanted:
+                self.slots[b] = None
+                self._to_release.append(b)
+                self._streamed.pop(meta.req.rid, None)
+                self.n_cancelled += 1
 
     # -- scheduling loop ----------------------------------------------------
 
@@ -343,6 +406,7 @@ class Scheduler:
             self.n_streamed += int(n_gen) - seen
 
     def _harvest(self):
+        self._apply_cancels()  # free cancelled slots this iteration
         st = self.engine.state
         # ONE device transfer per iteration: finished slots' outputs ride
         # along with the done/n_gen flags instead of a per-slot fetch
@@ -398,6 +462,7 @@ class Scheduler:
         Returns whether any engine program was dispatched (False means
         the caller may idle).
         """
+        self._apply_cancels()  # a cancelled queued request never admits
         self._fill_slots()
         stepped = False
         if self._decode_ready():  # skip decode while all mid-prompt
@@ -437,12 +502,37 @@ class Scheduler:
         """
         while not self._stop.is_set():
             if self.has_work:
+                self._idle.clear()
                 self.tick()
             else:
                 self._flush_release()
+                self._apply_cancels()  # queue-only cancels while parked
+                if not self.has_work:  # a cancel can't create work, but
+                    self._idle.set()   # a racing submit can
                 self._wake.wait(idle_wait)
                 self._wake.clear()
         self._flush_release()
+        self._idle.set()
+
+    def wait_quiesced(self, timeout: float = 120.0) -> bool:
+        """Block until the serve_forever loop has parked with nothing
+        queued, live, or awaiting release — i.e. every admitted page is
+        back in the pool, not merely every request delivered.  Event-
+        based: the loop signals its own park, so tests and drains wait
+        on the actual state transition instead of sleeping fixed
+        wall-clock intervals and hoping the loop got there.  Returns
+        False on timeout (and when no loop is running to signal)."""
+        deadline = time.time() + timeout
+        while True:
+            remaining = deadline - time.time()
+            if remaining <= 0:
+                return False
+            if not self._idle.wait(min(remaining, 0.05)):
+                continue
+            # the flag can be stale for one race window: a submit that
+            # landed after the park clears it and re-wakes the loop
+            if not self.has_work and not self._to_release:
+                return True
 
     def stop(self):
         """Ask serve_forever to exit after its current iteration.

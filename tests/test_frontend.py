@@ -114,10 +114,10 @@ def test_submit_while_serve_forever_runs(params_k2):
                      on_done=lambda c: (out.setdefault("c", c), done.set()))
         assert done.wait(60.0)
         np.testing.assert_array_equal(out["c"].tokens, ref)
-        # idle loop must not dispatch: step counter freezes
-        deadline = time.time() + 5.0
-        while sched.has_work and time.time() < deadline:
-            time.sleep(0.01)
+        # idle loop must not dispatch: quiesce on the scheduler's idle
+        # event (drained + releases flushed — no has_work polling),
+        # then the step counter freezes
+        assert sched.wait_quiesced(60.0)
         steps = eng.steps_run
         time.sleep(0.2)
         assert eng.steps_run == steps
@@ -380,11 +380,10 @@ def test_router_drain_leaves_zero_orphaned_pages(params_k2):
         for name in ("r0", "r1"):
             router.drain(name)
             assert router.wait_drained(name, timeout=60.0)
-        # the loops flush releases when idle; poll for the last one
-        deadline = time.time() + 30.0
-        while (any(e.free_pages != e.n_pages for e in engines)
-               and time.time() < deadline):
-            time.sleep(0.01)
+        # quiesce = drained AND the release batch flushed — the idle
+        # event replaces the old free_pages wall-clock poll
+        for r in reps:
+            assert r.scheduler.wait_quiesced(60.0)
         for e in engines:
             assert e.free_pages == e.n_pages  # zero orphaned pages
             assert all(e.allocator.held_pages(b) == 0
@@ -419,12 +418,9 @@ def test_rollout_flushes_prefix_trie_zero_stale_pages(params_k2):
             router.submit(p, 4, on_done=lambda c: done.release())
         for _ in range(4):
             assert done.acquire(timeout=60.0)
-        # the online loop batches releases; poll until the round-t
-        # chains are back and their prefixes sit cached in the trie
-        deadline = time.time() + 30.0
-        while (eng.page_stats()["cached_pages"] == 0
-               and time.time() < deadline):
-            time.sleep(0.01)
+        # quiesce flushes the batched releases, which insert the round-t
+        # chains into the trie — cached_pages is then deterministic
+        assert reps[0].scheduler.wait_quiesced(60.0)
         assert eng.page_stats()["cached_pages"] > 0
 
         router.rollout(p_new)  # round t+1 (asserts zero survivors)

@@ -9,6 +9,11 @@ Three layers of evidence, cheapest first:
     shared prefixes, cancellations (release mid-prompt) and
     preemptions: afterwards every refcount is zero and the free list
     is whole — the no-leak guarantee admission accounting leans on;
+  - a hypothesis property test (skipped where hypothesis is missing)
+    over the same pair: random short interleavings of admit / share /
+    cow / grow / rollback / release / flush, with
+    PageAllocator.check_invariants() asserted after every single step
+    and violating sequences shrunk to minimal reproductions;
   - engine/scheduler equivalence on a real (reduced, float32) GQA
     config: the warm path must be TOKEN-EXACT against the cold path —
     sharing pages, COW-isolating divergent writers and skipping
@@ -227,6 +232,85 @@ def test_allocator_trie_churn_10k_no_leak():
     assert a.free_pages == a.n_pages
     assert sorted(a._free) == list(range(a.n_pages))
     assert a.cow_count > 0 and a.cache.evicted_pages > 0  # paths hit
+
+
+# -- property test: every interleaving keeps the pool partitioned ------------
+
+
+def test_allocator_trie_property_random_interleavings():
+    """Hypothesis drives random admit / share / cow / grow / rollback /
+    cancel / release / flush interleavings through the wired
+    allocator+trie pair and runs PageAllocator.check_invariants()
+    after EVERY step: at all times each page is live (ref > 0), free,
+    or trie-owned — exactly one of the three — and the free list holds
+    no duplicates.  The churn storm above checks the end state of one
+    long run; this checks every intermediate state of many short ones,
+    and hypothesis shrinks any violating interleaving to a minimal
+    reproduction.  Skips cleanly where hypothesis isn't installed
+    (importorskip inside the test keeps the rest of this module
+    running)."""
+    hypothesis = pytest.importorskip(
+        "hypothesis", reason="property test needs hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    page, n_slots, pps = 4, 4, 6
+    prefixes = [list(range(1000, 1000 + n)) for n in (5, 9, 14)]
+    op = st.tuples(
+        # touch = admit a free slot / churn out a live one (cancel,
+        # preempt and complete all take the insert-then-release path)
+        st.sampled_from(["touch", "grow", "rollback", "flush"]),
+        st.integers(0, n_slots - 1),         # slot
+        st.integers(0, len(prefixes) - 1),   # shared-prefix family
+        st.lists(st.integers(1, 999), min_size=1, max_size=5),  # tail
+        st.integers(0, 100),                 # % of post-hit toks written
+    )
+
+    @hypothesis.settings(max_examples=60, deadline=None)
+    @hypothesis.given(st.lists(op, max_size=80))
+    def prop(ops):
+        a = PageAllocator(16, page, n_slots, pps)
+        a.cache = PrefixCache(page)
+        live = {}  # slot -> (tokens, written, prompt_pages)
+        for kind, b, fam, tail, wpct in ops:
+            if kind == "touch" and b in live:  # cancel/preempt/complete
+                toks, written, _ = live.pop(b)
+                if written > 0:
+                    n = -(-written // page)
+                    if len(a.chain(b)) >= n:
+                        a.cache.insert(toks[:written], a.chain(b)[:n])
+                a.release(b)
+            elif kind == "touch":              # admit, engine-style
+                toks = prefixes[fam] + tail
+                plen = len(toks)
+                hit, full, t = a.cache.match(toks, plen - 1)
+                want = -(-plen // page)
+                cost = want - sum(1 for p in full if a.ref(p) > 0)
+                if want > pps or cost > a.available_pages:
+                    continue  # queued; nothing mutated
+                if full or t:
+                    a.share(b, full + ([t[0]] if t else []))
+                if t is not None:
+                    assert a.cow(b, len(full)) is not None
+                assert a.alloc(b, want)
+                written = hit + (plen - hit) * wpct // 100
+                live[b] = (toks, written, want)
+            elif kind == "grow" and b in live:  # decode page growth
+                want = len(a.chain(b)) + 1
+                if want <= pps and a.available_pages >= 1:
+                    assert a.alloc(b, want)
+            elif kind == "rollback" and b in live:  # spec-decode undo
+                a.truncate(b, live[b][2])
+            elif kind == "flush":
+                a.flush_cache()
+            a.check_invariants()
+        for b in list(live):
+            a.release(b)
+        a.check_invariants()
+        a.flush_cache()
+        assert a.free_pages == a.n_pages
+        assert sorted(a._free) == list(range(a.n_pages))
+
+    prop()
 
 
 # -- engine equivalence (GQA, reduced, float32) ------------------------------
