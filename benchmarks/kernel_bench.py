@@ -109,6 +109,23 @@ def bench_paged_decode(fast):
                f"dense reads {hbm_dense/2**20:.1f}MiB -> paged "
                f"{hbm_paged/2**20:.1f}MiB ({S_max/live:.0f}x fewer)")
 
+        # int8 variant: quantize the same pages per-token/per-head, feed
+        # the kernel the int8 planes + f32 scale sidecars, compare with
+        # the f32 answer above.  DMA moves 1-byte K/V elements plus one
+        # f32 scale per (token, head) — ~4x fewer bytes at dh=64.
+        from repro.models.attention import kv_quantize
+        kq, ks = kv_quantize(jnp.asarray(kp), jnp.int8)
+        vq, vs = kv_quantize(jnp.asarray(vp), jnp.int8)
+        got_q = pk(jnp.asarray(q), kq, vq, jnp.asarray(table),
+                   jnp.asarray(lens), k_scale=ks, v_scale=vs)
+        err_q = float(jnp.abs(got_q[0] - want).max())
+        hbm_int8 = B * live * Hkv * (2 * 1 * dh + 2 * 4)  # planes+scales
+        report(f"paged_decode int8 B{B} S{S_max} len{live}", flops,
+               hbm_int8, vmem, err_q,
+               f"f32 reads {hbm_paged/2**20:.2f}MiB -> int8 "
+               f"{hbm_int8/2**20:.2f}MiB "
+               f"({hbm_paged/hbm_int8:.1f}x fewer)")
+
 
 def bench_distill(fast):
     from repro.kernels.distill_loss import fused_distill_loss

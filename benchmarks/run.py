@@ -30,8 +30,8 @@ def main():
         ("Kernel structural roofline", kernel_bench.main, flag),
         ("Dry-run roofline table", roofline.main, flag),
         ("Serving: engine vs member loop", serving_bench.main,
-         flag + ["--spec", "--prefix", "--fleet", "--json",
-                 SERVING_JSON]),
+         flag + ["--spec", "--prefix", "--fleet", "--kv-quant",
+                 "--json", SERVING_JSON]),
     ]
     failures = 0
     for name, fn, argv in suite:

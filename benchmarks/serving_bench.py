@@ -46,6 +46,14 @@ Gates:
     pages (reclaim latency recorded), SIGKILL + restart must recover
     to a token-exact completion, and backpressure must answer 429
     only past the configured queue depth, with zero hard errors.
+  - quantized pages + absorbed MLA (ISSUE 9, --kv-quant): at EQUAL
+    pool bytes an int8 paged pool must admit >= 2x the concurrent
+    requests of the f32 paged pool (deepseek-7b: the page-bytes win
+    turned into admission), int8 greedy output must agree with the
+    f32 contiguous reference within a bounded quality delta, and the
+    absorbed-MLA paged decode (deepseek-v2) must stay token-exact vs
+    the contiguous engine at f32 while its per-step FLOPs stay flat
+    as max_seq grows (the O(max_seq) gather+expand is gone).
 
 --json PATH writes the machine-readable metrics (tok/s, TTFT p50/p99,
 admissible concurrency, per-device cache bytes, gate results) so the
@@ -294,6 +302,131 @@ def bench_paged(K=4, seed=0):
     lines.append(f"paged acceptance (token-exact, equal bytes, >= 2x "
                  f"concurrency): {'PASS' if gate else 'FAIL'}")
     return gate, lines
+
+
+def bench_kv_quant(K=4, seed=0):
+    """Quantized-pages + absorbed-MLA acceptance (ISSUE 9).
+
+    (a) quality: deepseek-7b int8 paged greedy output vs the f32
+        contiguous reference — the per-token agreement delta must stay
+        bounded (tiny random-init members sit near argmax ties, so a
+        small bound, not zero, is the honest gate);
+    (b) concurrency: at EQUAL pool bytes, the int8 paged pool must
+        admit >= 2x the concurrent requests of the f32 paged pool —
+        the ~3.5x page-bytes shrink turned into admission headroom;
+    (c) absorbed MLA: deepseek-v2 paged f32 must stay TOKEN-EXACT vs
+        contiguous (the absorbed reassociation may not change greedy
+        output), and the compiled decode step's FLOPs must stay ~flat
+        as max_seq grows 4x — the expanded path's per-step
+        gather+kv_up matmul put O(max_seq) FLOPs on the hot loop
+        (ratio ~3.4x at these shapes); absorbed is ~1.3x.
+    -> (ok, lines, metrics).
+    """
+    from repro.serving import Scheduler
+    from repro.serving import kv_cache
+    lines, metrics = [], {}
+
+    # (a) int8 quality delta vs f32 contiguous reference
+    cfg = registry.get_config("deepseek-7b", reduced=True).with_(
+        dtype="float32")
+    params = jax.vmap(lambda k: tf.init(k, cfg))(
+        jax.random.split(jax.random.PRNGKey(seed), K))
+    prompts = [np.arange(1, 12) % cfg.vocab_size, np.arange(2, 5),
+               np.arange(3, 10), np.arange(1, 7)]
+    kw = dict(n_slots=4, max_prompt=12, max_out=8, prefill_chunk=4)
+    ref = EnsembleEngine(cfg, params, **kw).generate(prompts, max_new=8)
+    got = EnsembleEngine(cfg, params, paged=True, page_size=4,
+                         kv_dtype="int8", **kw).generate(prompts,
+                                                         max_new=8)
+    agree = float(np.mean([np.mean(np.asarray(a) == np.asarray(b))
+                           for a, b in zip(got, ref)]))
+    delta = 1.0 - agree
+    metrics["kv_quant_quality_delta"] = delta
+    q_ok = delta <= 0.25
+    lines.append(f"kv-quant K={K} deepseek-7b int8: token agreement "
+                 f"{agree:.3f} vs f32 contiguous (delta {delta:.3f}, "
+                 f"bound 0.25)")
+
+    # (b) equal-bytes admissible concurrency: both engines paged, same
+    # page-pool bytes; int8 pages are ~3.5x smaller so the same bytes
+    # buy ~3.5x the pages.  Short requests (<= 1 page each) against an
+    # oversubscribed pool make admission page-bound on both sides.
+    page = 16
+    size = dict(max_prompt=96, max_out=32)          # max_seq = 128
+    n_f32 = 8                                        # oversubscribed
+    probe32 = kv_cache.init_pool(cfg, 1, 1, 128, page_size=page,
+                                 n_pages=2, kv_dtype="f32")
+    probe8 = kv_cache.init_pool(cfg, 1, 1, 128, page_size=page,
+                                n_pages=2, kv_dtype="int8")
+    pb_f32 = kv_cache.page_bytes(probe32, 2)
+    pb_int8 = kv_cache.page_bytes(probe8, 2)
+    n_int8 = (n_f32 * pb_f32) // pb_int8             # equal pool bytes
+    e_f32 = EnsembleEngine(cfg, params, n_slots=32, prefill_chunk=16,
+                           paged=True, page_size=page, n_pages=n_f32,
+                           **size)
+    e_int8 = EnsembleEngine(cfg, params, n_slots=32, prefill_chunk=16,
+                            paged=True, page_size=page, n_pages=n_int8,
+                            kv_dtype="int8", **size)
+    reqs = client.make_requests(24, cfg.vocab_size, prompt_len=(4, 8),
+                                max_new=(4, 8), seed=seed)
+    s_f, s_i = Scheduler(e_f32), Scheduler(e_int8)
+    for t, m in reqs:
+        s_f.submit(t, m)
+        s_i.submit(t, m)
+    s_f.run()
+    s_i.run()
+    conc = s_i.peak_in_flight / max(s_f.peak_in_flight, 1)
+    metrics["kv_quant_concurrency_x"] = conc
+    metrics["kv_quant_bytes_per_token_f32"] = pb_f32 // page
+    metrics["kv_quant_bytes_per_token_int8"] = pb_int8 // page
+    c_ok = conc >= 2.0
+    lines.append(
+        f"kv-quant admission: {n_f32} f32 pages ({pb_f32} B each) = "
+        f"{n_int8} int8 pages ({pb_int8} B each), short requests: "
+        f"{s_f.peak_in_flight} -> {s_i.peak_in_flight} concurrent "
+        f"({conc:.2f}x, >= 2x)")
+
+    # (c) absorbed-MLA: token-exact at f32 + step FLOPs flat in max_seq
+    cfg2 = registry.get_config("deepseek-v2-236b", reduced=True).with_(
+        dtype="float32")
+    params2 = jax.vmap(lambda k: tf.init(k, cfg2))(
+        jax.random.split(jax.random.PRNGKey(seed), K))
+    ref2 = EnsembleEngine(cfg2, params2, **kw).generate(prompts,
+                                                        max_new=8)
+    got2 = EnsembleEngine(cfg2, params2, paged=True, page_size=4,
+                          **kw).generate(prompts, max_new=8)
+    exact = all(np.array_equal(np.asarray(a), np.asarray(b))
+                for a, b in zip(got2, ref2))
+    lines.append(f"absorbed-MLA K={K} deepseek-v2 f32: tokens "
+                 f"{'match (exact)' if exact else 'MISMATCH'} vs "
+                 f"contiguous engine")
+
+    p_abs = tf.absorb_mla_params(cfg2, jax.tree.map(lambda x: x[0],
+                                                    params2))
+
+    def step_flops(max_seq):
+        cache = tf.init_slot_cache(cfg2, 2, max_seq, page_size=16,
+                                   n_pages=2 * (max_seq // 16))
+        toks = jnp.zeros((2, 1), jnp.int32)
+        comp = jax.jit(
+            lambda p, c, t: tf.decode_step_paged(p, cfg2, c, t)
+        ).lower(p_abs, cache, toks).compile()
+        ca = comp.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        return float(ca.get("flops", 0.0))
+
+    f_lo, f_hi = step_flops(128), step_flops(512)
+    flat = f_hi / max(f_lo, 1.0)
+    metrics["mla_absorbed_step_flat"] = flat
+    m_ok = exact and flat <= 2.0
+    lines.append(f"absorbed-MLA step FLOPs: max_seq 128 -> 512 (4x) "
+                 f"grows {flat:.2f}x (<= 2x; expanded path ~3.4x)")
+
+    ok = q_ok and c_ok and m_ok
+    lines.append(f"kv-quant acceptance (quality delta <= 0.25, >= 2x "
+                 f"equal-bytes concurrency, absorbed-MLA exact + flat):"
+                 f" {'PASS' if ok else 'FAIL'}")
+    return ok, lines, metrics
 
 
 def bench_spec(K=4, seed=0, gamma=8, batch=4, plen=8, steps=64, repeats=8):
@@ -909,6 +1042,14 @@ def main(argv=None):
                          "past the queue depth with zero hard errors")
     ap.add_argument("--fleet-only", action="store_true",
                     help="run only the fleet stage")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="also gate quantized KV pages + absorbed MLA: "
+                         "int8 quality delta bounded vs f32, >= 2x "
+                         "admissible concurrency at equal pool bytes, "
+                         "absorbed-MLA token-exact + step-FLOPs flat "
+                         "in max_seq")
+    ap.add_argument("--kv-quant-only", action="store_true",
+                    help="run only the kv-quant stage")
     ap.add_argument("--spec", action="store_true",
                     help="also gate speculative decoding: student-drafted "
                          "ensemble must be bit-identical and >= 2x decode "
@@ -949,6 +1090,11 @@ def main(argv=None):
         return finish(ok)
     if args.prefix_only:
         ok, lines, m = bench_prefix()
+        metrics.update(m)
+        print("\n".join(lines))
+        return finish(ok)
+    if args.kv_quant_only:
+        ok, lines, m = bench_kv_quant()
         metrics.update(m)
         print("\n".join(lines))
         return finish(ok)
@@ -1059,6 +1205,12 @@ def main(argv=None):
         metrics.update(m)
         print("\n".join(lines))
         ok &= px_ok
+
+    if args.kv_quant:
+        kq_ok, lines, m = bench_kv_quant()
+        metrics.update(m)
+        print("\n".join(lines))
+        ok &= kq_ok
 
     if args.spec:
         sp_ok, lines, m = bench_spec(gamma=args.gamma)

@@ -116,5 +116,25 @@ timeout -k 30 900 env JAX_PLATFORMS=cpu \
     XLA_FLAGS="--xla_force_host_platform_device_count=2" \
     python benchmarks/serving_bench.py --fleet --fleet-only
 
+# quantized-pages + absorbed-MLA stage: roundtrip error bounds, pool
+# layout/dtype accounting, quantized kernel-vs-ref equivalence, engine
+# quality across GQA/MLA archs, f32 bit-identity, absorbed-MLA
+# token-exactness + step-FLOPs-flat regression, COW/prefix/spec
+# composition with quantized pages (tests/test_kv_quant.py), then the
+# --kv-quant bench gate (int8 quality delta bounded, >= 2x admissible
+# concurrency at equal pool bytes, absorbed-MLA exact + flat).  The
+# forced-2-device rerun shards the quantized planes AND their scale
+# sidecars over a REAL member axis.
+timeout -k 30 1200 env JAX_PLATFORMS=cpu \
+    python -m pytest -x -q tests/test_kv_quant.py
+timeout -k 30 900 env JAX_PLATFORMS=cpu \
+    python benchmarks/serving_bench.py --kv-quant --kv-quant-only
+timeout -k 30 1200 env JAX_PLATFORMS=cpu \
+    XLA_FLAGS="--xla_force_host_platform_device_count=2" \
+    python -m pytest -x -q tests/test_kv_quant.py
+timeout -k 30 900 env JAX_PLATFORMS=cpu \
+    XLA_FLAGS="--xla_force_host_platform_device_count=2" \
+    python benchmarks/serving_bench.py --kv-quant --kv-quant-only
+
 # docs must not reference symbols that no longer exist
 python scripts/check_docs.py

@@ -43,7 +43,7 @@ def flash_attention(q, k, v, causal: bool = True, window: int = 0,
 
 
 def paged_attention(q, k_pages, v_pages, table, lens, window: int = 0,
-                    scale=None):
+                    scale=None, k_scale=None, v_scale=None, k_extra=None):
     """Decode attention over a paged KV pool (q: one token per slot).
 
     TPU / REPRO_USE_PALLAS=1: the Pallas kernel walks only each slot's
@@ -51,15 +51,23 @@ def paged_attention(q, k_pages, v_pages, table, lens, window: int = 0,
     masked softmax (kernels/ref.py) — O(max_seq) reads like the
     contiguous path, but bit-identical numerics, which is what the
     paged-vs-contiguous engine equivalence tests pin.
+
+    k_scale/v_scale: per-token absmax scales of a quantized pool
+    (n_pages, page, Hkv); dequant happens inside the kernel.  k_extra:
+    unquantized extra key features (absorbed-MLA rope keys).  None ==
+    unquantized pool, exact current program.
     """
     if pallas_enabled():
         from repro.kernels import paged_attention as pa
         return pa.paged_attention(q, k_pages, v_pages, table, lens,
                                   window=window, scale=scale,
-                                  interpret=_interpret())
+                                  k_scale=k_scale, v_scale=v_scale,
+                                  k_extra=k_extra, interpret=_interpret())
     from repro.kernels import ref
     return ref.paged_attention(q, k_pages, v_pages, table, lens,
-                               window=window, scale=scale)
+                               window=window, scale=scale,
+                               k_scale=k_scale, v_scale=v_scale,
+                               k_extra=k_extra)
 
 
 def fused_distill_loss(logits, labels, pseudo, lam):

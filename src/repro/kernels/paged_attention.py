@@ -47,8 +47,13 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -2.0 ** 30
 
 
-def _paged_kernel(table_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
-                  m_s, l_s, acc_s, *, page, hkv, scale, window):
+def _paged_kernel(table_ref, lens_ref, q_ref, k_ref, v_ref, *rest,
+                  page, hkv, scale, window, quant, extra):
+    opt = iter(rest[:-4])
+    ks_ref = next(opt) if quant else None
+    vs_ref = next(opt) if quant else None
+    ke_ref = next(opt) if extra else None
+    o_ref, m_s, l_s, acc_s = rest[-4:]
     bh = pl.program_id(0)
     j = pl.program_id(1)
     b = bh // hkv
@@ -64,12 +69,30 @@ def _paged_kernel(table_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(j < live)
     def _accumulate():
-        q = q_ref[0, 0].astype(jnp.float32)      # (g, dk)
+        q = q_ref[0, 0].astype(jnp.float32)      # (g, dk [+ dr])
         k = k_ref[0, 0].astype(jnp.float32)      # (page, dk)
         v = v_ref[0, 0].astype(jnp.float32)      # (page, dv)
         g = q.shape[0]
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32) * scale
+        if quant:
+            # per-token absmax scales ride next to the page: dequant in
+            # VMEM right after the (cheap) quantized DMA
+            k = k * ks_ref[0, 0][:, None]        # (page,) -> column bcast
+            v = v * vs_ref[0, 0][:, None]
+        if extra:
+            # unquantized extra key features (absorbed-MLA rope keys):
+            # score = q_main . k_deq + q_extra . k_extra
+            dk = k.shape[1]
+            s = jax.lax.dot_general(
+                q[:, :dk], k, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            s = s + jax.lax.dot_general(
+                q[:, dk:], ke_ref[0, 0].astype(jnp.float32),
+                (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            s = s * scale
+        else:
+            s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32) * scale
         k_pos = j * page + jax.lax.broadcasted_iota(jnp.int32, (g, page), 1)
         ok = k_pos < length
         if window > 0:
@@ -92,18 +115,30 @@ def _paged_kernel(table_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
 
 @functools.partial(jax.jit, static_argnames=("window", "scale", "interpret"))
 def paged_attention(q, k_pages, v_pages, table, lens, window: int = 0,
-                    scale: float | None = None, interpret: bool = True):
+                    scale: float | None = None, k_scale=None, v_scale=None,
+                    k_extra=None, interpret: bool = True):
     """q: (B, H, dk); k_pages: (n_pages, page, Hkv, dk); v_pages:
     (n_pages, page, Hkv, dv); table: (B, P) int32 (>= n_pages means
-    unallocated); lens: (B,) int32 valid entries -> (B, H, dv)."""
-    B, H, dk = q.shape
-    n_pages, page, Hkv, _ = k_pages.shape
+    unallocated); lens: (B,) int32 valid entries -> (B, H, dv).
+
+    Quantized pools pass k_scale/v_scale (n_pages, page, Hkv) per-token
+    absmax scales; each scale page is a tiny extra input block indexed
+    by the SAME table lookup as its plane, so dequant (value * scale)
+    happens in VMEM after the ~4x-smaller quantized DMA.  k_extra
+    (n_pages, page, Hkv, dr) is an unquantized extra key block
+    (absorbed-MLA rope keys); q then carries dk + dr features and the
+    score is the sum of the two dots.  All three default to None ==
+    today's exact unquantized program."""
+    B, H, dkq = q.shape
+    n_pages, page, Hkv, dk = k_pages.shape
     dv = v_pages.shape[-1]
     g = H // Hkv
     P = table.shape[1]
-    scale = scale if scale is not None else dk ** -0.5
+    scale = scale if scale is not None else dkq ** -0.5
+    quant = k_scale is not None
+    extra = k_extra is not None
 
-    q2 = q.reshape(B, Hkv, g, dk)                     # group-major rows
+    q2 = q.reshape(B, Hkv, g, dkq)                    # group-major rows
     kp = k_pages.transpose(0, 2, 1, 3)                # (n_pages, Hkv, page, dk)
     vp = v_pages.transpose(0, 2, 1, 3)
 
@@ -117,17 +152,33 @@ def paged_attention(q, k_pages, v_pages, table, lens, window: int = 0,
         phys = jnp.clip(table_ref[b, jj], 0, n_pages - 1)
         return (phys, h, 0, 0)
 
+    def scale_index(bh, j, table_ref, lens_ref):
+        phys, h, _, _ = kv_index(bh, j, table_ref, lens_ref)
+        return (phys, h, 0)
+
     def q_index(bh, j, table_ref, lens_ref):
         return (bh // Hkv, bh % Hkv, 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, dkq), q_index),
+        pl.BlockSpec((1, 1, page, dk), kv_index),
+        pl.BlockSpec((1, 1, page, dv), kv_index),
+    ]
+    operands = [q2, kp, vp]
+    if quant:
+        in_specs += [pl.BlockSpec((1, 1, page), scale_index),
+                     pl.BlockSpec((1, 1, page), scale_index)]
+        operands += [k_scale.transpose(0, 2, 1),      # (n_pages, Hkv, page)
+                     v_scale.transpose(0, 2, 1)]
+    if extra:
+        dr = k_extra.shape[-1]
+        in_specs += [pl.BlockSpec((1, 1, page, dr), kv_index)]
+        operands += [k_extra.transpose(0, 2, 1, 3)]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B * Hkv, P),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, dk), q_index),
-            pl.BlockSpec((1, 1, page, dk), kv_index),
-            pl.BlockSpec((1, 1, page, dv), kv_index),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, dv), q_index),
         scratch_shapes=[
             pltpu.VMEM((g,), jnp.float32),
@@ -136,7 +187,8 @@ def paged_attention(q, k_pages, v_pages, table, lens, window: int = 0,
         ],
     )
     kern = functools.partial(_paged_kernel, page=page, hkv=Hkv,
-                             scale=scale, window=window)
+                             scale=scale, window=window,
+                             quant=quant, extra=extra)
     out = pl.pallas_call(
         kern,
         grid_spec=grid_spec,
@@ -144,5 +196,5 @@ def paged_attention(q, k_pages, v_pages, table, lens, window: int = 0,
         interpret=interpret,
         compiler_params=None if interpret else pltpu.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
-    )(table.astype(jnp.int32), lens.astype(jnp.int32), q2, kp, vp)
+    )(table.astype(jnp.int32), lens.astype(jnp.int32), *operands)
     return out.reshape(B, H, dv)

@@ -42,7 +42,8 @@ def attention(q, k, v, causal: bool = True, window: int = 0,
 
 
 def paged_attention(q, k_pages, v_pages, table, lens, window: int = 0,
-                    scale: float | None = None) -> jax.Array:
+                    scale: float | None = None, k_scale=None, v_scale=None,
+                    k_extra=None) -> jax.Array:
     """Decode attention over a paged KV pool (the kernel's oracle).
 
     q:       (B, H, dk)            one query per slot (the decode step)
@@ -54,6 +55,14 @@ def paged_attention(q, k_pages, v_pages, table, lens, window: int = 0,
                                    token written this step)
     -> (B, H, dv)
 
+    Quantized pools pass k_scale/v_scale (n_pages, page, Hkv) per-token
+    absmax scales: pages dequantize to f32 (value * scale) right after
+    the gather, so the softmax math is identical to an f32 pool holding
+    the dequantized values.  k_extra (n_pages, page, Hkv, dr) is an
+    UNQUANTIZED extra key-feature block (absorbed-MLA rope keys)
+    concatenated after the dequantized main block; q then carries
+    dk + dr features.  All three default to None = today's exact path.
+
     The gather materializes every slot's P*page logical entries —
     O(max_seq) reads, same as the dense masked decode it replaces; the
     Pallas kernel (kernels/paged_attention.py) is what cuts reads to
@@ -62,23 +71,32 @@ def paged_attention(q, k_pages, v_pages, table, lens, window: int = 0,
     softmax, so they contribute exactly 0 — bit-identical to attending
     over a contiguous cache row.
     """
-    B, H, dk = q.shape
-    n_pages, page, Hkv, _ = k_pages.shape
+    B, H, dkq = q.shape
+    n_pages, page, Hkv, dk = k_pages.shape
     dv = v_pages.shape[-1]
     g = H // Hkv
     P = table.shape[1]
     S = P * page
-    scale = scale if scale is not None else dk ** -0.5
+    scale = scale if scale is not None else dkq ** -0.5
     t = jnp.clip(table, 0, n_pages - 1)
     # (B, P, page, Hkv, d) -> (B, S, Hkv, d), logical position order
     k = k_pages[t].reshape(B, S, Hkv, dk)
     v = v_pages[t].reshape(B, S, Hkv, dv)
+    if k_scale is not None:
+        k = k.astype(jnp.float32) * k_scale[t].reshape(B, S, Hkv)[..., None]
+    if v_scale is not None:
+        v = v.astype(jnp.float32) * v_scale[t].reshape(B, S, Hkv)[..., None]
+    if k_extra is not None:
+        dr = k_extra.shape[-1]
+        ke = k_extra[t].reshape(B, S, Hkv, dr)
+        k = jnp.concatenate([k.astype(jnp.float32),
+                             ke.astype(jnp.float32)], -1)
     kp = jnp.arange(S)
     ok = kp[None, :] < lens[:, None]
     if window > 0:
         ok &= kp[None, :] > (lens[:, None] - 1 - window)
     bias = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)  # (B, S)
-    qf = q.astype(jnp.float32).reshape(B, Hkv, g, dk)
+    qf = q.astype(jnp.float32).reshape(B, Hkv, g, dkq)
     s = jnp.einsum("bhgd,bkhd->bhgk", qf, k.astype(jnp.float32)) * scale
     s = s + bias[:, None, None]
     p = jax.nn.softmax(s, axis=-1)

@@ -110,6 +110,7 @@ def serve_fleet(args, cfg):
                 if args.quorum else None),
         mesh=args.mesh, paged=args.paged, page_size=args.page_size,
         n_pages=args.n_pages, prefix_cache=args.prefix_cache,
+        kv_dtype=args.kv_dtype,
         draft_member0=(args.draft_ckpt == "member0"),
         gamma=args.gamma, spec_sampling=args.spec_sampling,
         ckpt=(args.draft_ckpt if args.draft_ckpt
@@ -245,6 +246,14 @@ def main():
                          "slots x ceil(max_seq/page) = full capacity, "
                          "smaller oversubscribes and relies on "
                          "preemption)")
+    ap.add_argument("--kv-dtype", default="f32",
+                    choices=["f32", "bf16", "int8", "fp8"],
+                    help="paged KV page storage format (--paged): f32 "
+                         "keeps the bit-exact native planes; int8/fp8 "
+                         "quantize pages with per-token absmax scale "
+                         "sidecars dequantized inside the kernel, "
+                         "~4x/~4x fewer cache bytes per token so the "
+                         "same pool admits ~4x the concurrency")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="share KV pages across requests with a common "
                          "prompt prefix (--paged only): a shared-prefix "
@@ -352,7 +361,8 @@ def main():
             temperature=args.temperature, top_k=args.top_k,
             eos_id=args.eos_id, quorum=quorum, seed=args.seed, mesh=mesh,
             paged=args.paged, page_size=args.page_size,
-            n_pages=args.n_pages, prefix_cache=args.prefix_cache)
+            n_pages=args.n_pages, prefix_cache=args.prefix_cache,
+            kv_dtype=args.kv_dtype)
         if draft_params is not None:
             from repro.serving import SpeculativeEngine
             return SpeculativeEngine(cfg, params, draft_params,
@@ -377,6 +387,9 @@ def main():
               f"{ps['page_size']} tok ({ps['pages_per_slot']} pages/slot "
               f"max), free list {ps['free_pages']}/{ps['n_pages']} "
               f"({ps['used_pages'] / max(ps['n_pages'], 1):.0%} used)")
+        print(f"kv pages: {ps['kv_dtype']} storage, "
+              f"{ps['page_bytes']} B/page, "
+              f"{ps['bytes_per_token']} B/token across all paged layers")
 
     if args.continuous:
         reqs = client.make_requests(

@@ -407,6 +407,26 @@ def _mla_expand(params, c_kv, a: AttnConfig):
     return k_c, v
 
 
+def mla_absorbed(params: dict, a: AttnConfig) -> Tuple[jax.Array, jax.Array]:
+    """(W_UK (r, H, nope), W_UV (r, H, v)) — kv_up split for the
+    absorbed decode form.
+
+    Instead of expanding every cached latent to per-head K/V
+    (`_mla_expand`, O(S) work per decode step), W_UK folds into the
+    query (q_lat[b,h] = q_nope[b,h] @ W_UK[:,h,:]^T, so scores are
+    q_lat · c_kv — the latent IS the key) and W_UV folds into the
+    output (o[b,h] = o_lat[b,h] @ W_UV[:,h,:], the latent IS the
+    value).  Same linear algebra, contraction order swapped.  Prefers
+    the precomputed leaves a serving engine installs once per
+    swap_params (transformer.absorb_mla_params); the reshape fallback
+    keeps the function usable on raw trees.
+    """
+    if "kv_uk" in params:
+        return params["kv_uk"], params["kv_uv"]
+    w = params["kv_up"].reshape(-1, a.n_heads, a.qk_nope_dim + a.v_head_dim)
+    return w[..., :a.qk_nope_dim], w[..., a.qk_nope_dim:]
+
+
 def mla_apply(params: dict, x: jax.Array, a: AttnConfig, cfg: ModelConfig,
               positions: jax.Array, theta: float) -> jax.Array:
     B, T, _ = x.shape
@@ -503,20 +523,107 @@ def mla_prefill(params: dict, x: jax.Array, cache: dict, idx: jax.Array,
 # pool relies on.
 
 
+# -- quantized pages --------------------------------------------------------
+# kv_dtype selects the STORAGE format of paged planes only ("f32" = the
+# model's native dtype, today's layout, bit-identical).  int8/fp8 planes
+# carry a per-token, per-kv-head absmax scale in a sidecar plane named
+# `<plane>_scale_pages` with the page axes leading — the "_pages" suffix
+# means every pool helper (reset/slot_row/copy_pages/snapshot) already
+# treats a sidecar exactly like its plane, and per-token granularity
+# makes single-token scatter writes rescale-free: a write never has to
+# requantize its page neighbors.  Sliding-window rings and recurrent
+# state are NOT quantized (they are already O(window)/O(1) and live
+# outside the paged pool).
+
+KV_DTYPES = ("f32", "bf16", "int8", "fp8")
+_INT8_MAX = 127.0
+_FP8_MAX = 448.0  # float8_e4m3fn finite max
+
+
+def fp8_dtype():
+    dt = getattr(jnp, "float8_e4m3fn", None)
+    if dt is None:
+        raise ValueError("kv_dtype='fp8' needs jax.numpy.float8_e4m3fn, "
+                         "which this platform's jax does not provide — "
+                         "use 'int8'")
+    return dt
+
+
+def kv_quantized(kv_dtype: str) -> bool:
+    return kv_dtype in ("int8", "fp8")
+
+
+def kv_storage_dtype(kv_dtype: str, dtype):
+    """Storage dtype of a paged K/V plane under `kv_dtype` ('f32' keeps
+    the model's native dtype)."""
+    if kv_dtype == "f32":
+        return dtype
+    if kv_dtype == "bf16":
+        return jnp.bfloat16
+    if kv_dtype == "int8":
+        return jnp.int8
+    if kv_dtype == "fp8":
+        return fp8_dtype()
+    raise ValueError(f"kv_dtype must be one of {KV_DTYPES}, "
+                     f"got {kv_dtype!r}")
+
+
+def kv_quantize(vals: jax.Array, qdtype) -> Tuple[jax.Array, jax.Array]:
+    """(..., d) -> ((..., d) qdtype, (...,) f32 absmax scale).
+
+    scale = absmax(vals)/Q over the trailing feature axis, one scale per
+    token (and per kv head, since the head axis precedes the feature
+    axis in every paged plane).  An all-zero vector quantizes to zeros
+    with scale 0 — dequant reproduces the zeros exactly.
+    """
+    v = vals.astype(jnp.float32)
+    qmax = _INT8_MAX if jnp.issubdtype(qdtype, jnp.integer) else _FP8_MAX
+    scale = jnp.max(jnp.abs(v), axis=-1) / qmax
+    q = v / jnp.maximum(scale, 1e-30)[..., None]
+    if jnp.issubdtype(qdtype, jnp.integer):
+        q = jnp.round(q).clip(-_INT8_MAX, _INT8_MAX)
+    return q.astype(qdtype), scale
+
+
+def kv_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of kv_quantize: f32 values (math stays f32 in-register)."""
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+def _scale_name(name: str) -> str:
+    return name[: -len("_pages")] + "_scale_pages"
+
+
 def gqa_paged_cache_init(a: AttnConfig, n_pages: int, page_size: int,
-                         dtype) -> dict:
+                         dtype, kv_dtype: str = "f32") -> dict:
+    sdtype = kv_storage_dtype(kv_dtype, dtype)
     shape = (n_pages, page_size, a.n_kv_heads, a.head_dim)
-    return {"k_pages": jnp.zeros(shape, dtype),
-            "v_pages": jnp.zeros(shape, dtype)}
+    c = {"k_pages": jnp.zeros(shape, sdtype),
+         "v_pages": jnp.zeros(shape, sdtype)}
+    if kv_quantized(kv_dtype):
+        ss = (n_pages, page_size, a.n_kv_heads)
+        c["k_scale_pages"] = jnp.zeros(ss, jnp.float32)
+        c["v_scale_pages"] = jnp.zeros(ss, jnp.float32)
+    return c
 
 
 def mla_paged_cache_init(a: AttnConfig, n_pages: int, page_size: int,
-                         dtype) -> dict:
-    # pages hold the latent (MLA's point: r + rope_dim per token)
-    return {"c_kv_pages": jnp.zeros((n_pages, page_size, a.kv_lora_rank),
-                                    dtype),
-            "k_r_pages": jnp.zeros((n_pages, page_size, a.qk_rope_dim),
-                                   dtype)}
+                         dtype, kv_dtype: str = "f32") -> dict:
+    # pages hold the latent (MLA's point: r + rope_dim per token).  The
+    # rope keys stay in the native dtype under int8/fp8: they are
+    # rope_dim/kv_lora_rank of the bytes and feed the kernel as the
+    # unquantized `k_extra` feature block, so the dominant latent plane
+    # quantizes without a second scale family.
+    sdtype = kv_storage_dtype(kv_dtype, dtype)
+    rdtype = dtype if kv_quantized(kv_dtype) else sdtype
+    c = {"c_kv_pages": jnp.zeros((n_pages, page_size, a.kv_lora_rank),
+                                 sdtype),
+         "k_r_pages": jnp.zeros((n_pages, page_size, a.qk_rope_dim),
+                                rdtype)}
+    if kv_quantized(kv_dtype):
+        c["c_kv_scale_pages"] = jnp.zeros((n_pages, page_size),
+                                          jnp.float32)
+    return c
 
 
 def _scatter_token(plane: jax.Array, vals: jax.Array, table: jax.Array,
@@ -550,6 +657,70 @@ def _gather_pages(plane: jax.Array, table: jax.Array) -> jax.Array:
     out = plane[t]
     lead = table.shape[:-1]
     return out.reshape(lead + (table.shape[-1] * page,) + plane.shape[2:])
+
+
+# -- quantize-on-write / dequantize-on-read wrappers ------------------------
+# Every paged write/read goes through these: when the layer's cache
+# carries a `<plane>_scale_pages` sidecar the values are quantized on
+# the way in (one absmax scale per token written) and dequantized to
+# f32 on the way out; otherwise the plane's dtype is a plain cast
+# (no-op for kv_dtype='f32', preserving bit-identity with the
+# unquantized layout).  Each wrapper returns the dict of UPDATED leaves
+# so callers can merge plane + sidecar updates in one place.
+
+
+def paged_write_token(cache: dict, name: str, vals: jax.Array,
+                      table: jax.Array, pos: jax.Array) -> dict:
+    plane = cache[name]
+    sname = _scale_name(name)
+    if sname in cache:
+        q, s = kv_quantize(vals, plane.dtype)
+        return {name: _scatter_token(plane, q, table, pos),
+                sname: _scatter_token(cache[sname], s, table, pos)}
+    return {name: _scatter_token(plane, vals.astype(plane.dtype), table,
+                                 pos)}
+
+
+def paged_write_chunk(cache: dict, name: str, chunk: jax.Array,
+                      table: jax.Array, idx: jax.Array,
+                      n_tok: jax.Array) -> dict:
+    plane = cache[name]
+    sname = _scale_name(name)
+    if sname in cache:
+        q, s = kv_quantize(chunk, plane.dtype)
+        return {name: chunk_cache_write_paged(plane, q, table, idx, n_tok),
+                sname: chunk_cache_write_paged(cache[sname], s, table, idx,
+                                               n_tok)}
+    return {name: chunk_cache_write_paged(plane, chunk.astype(plane.dtype),
+                                          table, idx, n_tok)}
+
+
+def paged_write_batch(cache: dict, name: str, chunk: jax.Array,
+                      table: jax.Array, pos: jax.Array,
+                      n_tok: jax.Array) -> dict:
+    plane = cache[name]
+    sname = _scale_name(name)
+    if sname in cache:
+        q, s = kv_quantize(chunk, plane.dtype)
+        return {name: chunk_scatter_batch(plane, q, table, pos, n_tok),
+                sname: chunk_scatter_batch(cache[sname], s, table, pos,
+                                           n_tok)}
+    return {name: chunk_scatter_batch(plane, chunk.astype(plane.dtype),
+                                      table, pos, n_tok)}
+
+
+def paged_gather(cache: dict, name: str, table: jax.Array,
+                 out_dtype=None) -> jax.Array:
+    """_gather_pages + dequantization for the dense (prefill/verify)
+    read paths.  out_dtype casts the logical view to the compute dtype
+    (no-op when the plane already stores it, i.e. kv_dtype='f32')."""
+    out = _gather_pages(cache[name], table)
+    sname = _scale_name(name)
+    if sname in cache:
+        out = kv_dequantize(out, _gather_pages(cache[sname], table))
+    if out_dtype is not None and out.dtype != out_dtype:
+        out = out.astype(out_dtype)
+    return out
 
 
 def chunk_cache_write_paged(plane: jax.Array, chunk: jax.Array,
@@ -628,13 +799,15 @@ def gqa_decode_paged(params: dict, x: jax.Array, cache: dict,
         k = apply_rope(k, pos2, theta)
     k = constrain(k, None, None, kv, None)
     v = constrain(v, None, None, kv, None)
-    ck = _scatter_token(cache["k_pages"], k[:, 0], table, pos)
-    cv = _scatter_token(cache["v_pages"], v[:, 0], table, pos)
+    upd = paged_write_token(cache, "k_pages", k[:, 0], table, pos)
+    upd.update(paged_write_token(cache, "v_pages", v[:, 0], table, pos))
     scale = 1.0 / math.sqrt(a.head_dim)
-    o = ops.paged_attention(q[:, 0], ck, cv, table, pos + 1,
-                            window=window, scale=scale)
+    o = ops.paged_attention(q[:, 0], upd["k_pages"], upd["v_pages"],
+                            table, pos + 1, window=window, scale=scale,
+                            k_scale=upd.get("k_scale_pages"),
+                            v_scale=upd.get("v_scale_pages"))
     o = o.reshape(B, 1, -1) @ params["w_o"]
-    return o, {"k_pages": ck, "v_pages": cv}
+    return o, upd
 
 
 def gqa_prefill_paged(params: dict, x: jax.Array, cache: dict,
@@ -664,8 +837,9 @@ def gqa_prefill_paged(params: dict, x: jax.Array, cache: dict,
         k = apply_rope(k, pos, theta, a.mrope_sections)
     k = constrain(k, None, None, kv, None)
     v = constrain(v, None, None, kv, None)
-    k_cache = _gather_pages(cache["k_pages"], table[None])  # (1, S, kv, dh)
-    v_cache = _gather_pages(cache["v_pages"], table[None])
+    k_cache = paged_gather(cache, "k_pages", table[None],
+                           k.dtype)            # (1, S, kv, dh)
+    v_cache = paged_gather(cache, "v_pages", table[None], v.dtype)
     S = k_cache.shape[1]
     pos1d = pos if a.mrope_sections is None else pos[0]
     t = jnp.arange(C)
@@ -679,23 +853,28 @@ def gqa_prefill_paged(params: dict, x: jax.Array, cache: dict,
     o = attend(q, k_all, v_all, pos1d[0], k_pos, window=window, causal=True,
                scale=scale, force_dense=(S + C) <= ATTN_CHUNK * 4)
     o = o.reshape(B, C, -1) @ params["w_o"]
-    ck = chunk_cache_write_paged(cache["k_pages"], k[0], table, idx, n_tok)
-    cv = chunk_cache_write_paged(cache["v_pages"], v[0], table, idx, n_tok)
-    return o, {"k_pages": ck, "v_pages": cv}
+    upd = paged_write_chunk(cache, "k_pages", k[0], table, idx, n_tok)
+    upd.update(paged_write_chunk(cache, "v_pages", v[0], table, idx, n_tok))
+    return o, upd
 
 
 def mla_decode_paged(params: dict, x: jax.Array, cache: dict,
                      pos: jax.Array, table: jax.Array, a: AttnConfig,
                      cfg: ModelConfig,
                      theta: float) -> Tuple[jax.Array, dict]:
-    """MLA one-token decode over paged LATENT planes, per-row positions.
+    """MLA one-token decode over paged LATENT planes in the ABSORBED
+    projection form, per-row positions.
 
     The pages hold the compressed latent (c_kv, k_r); the step scatters
-    the new token's latent, gathers this batch's pages and expands them
-    on the fly exactly like mla_decode — same math, paged memory.
-    (Routing the expansion through the Pallas kernel needs the absorbed
-    q/out-projection form, which changes numerics — ROADMAP follow-up;
-    the kernel's dk != dv support is tested at MLA shapes directly.)
+    the new token's latent and feeds the latent pages to
+    ops.paged_attention DIRECTLY: W_UK is folded into the queries and
+    W_UV into the output (mla_absorbed), so attention runs at
+    dk = kv_lora_rank + rope_dim / dv = kv_lora_rank with the rope keys
+    as the kernel's unquantized `k_extra` block — no `_mla_expand` of
+    the whole gathered sequence on the hot path.  Per-step work is
+    O(1) in max_seq (plus the kernel's O(len) page walk); greedy output
+    is token-exact vs the expanded path at f32 (same linear algebra,
+    reassociated contractions).
     """
     B = x.shape[0]
     q, c_kv, k_r = _mla_qkv(params, x, a)
@@ -703,20 +882,22 @@ def mla_decode_paged(params: dict, x: jax.Array, cache: dict,
     q_c, q_r = q[..., :a.qk_nope_dim], q[..., a.qk_nope_dim:]
     q_r = apply_rope(q_r, pos2, theta)
     k_r = apply_rope(k_r[..., None, :], pos2, theta)[..., 0, :]
-    cc = _scatter_token(cache["c_kv_pages"], c_kv[:, 0], table, pos)
-    cr = _scatter_token(cache["k_r_pages"], k_r[:, 0], table, pos)
-    lat = _gather_pages(cc, table)   # (B, S, r)
-    rop = _gather_pages(cr, table)   # (B, S, rope)
-    S = lat.shape[1]
-    k_c, v = _mla_expand(params, lat, a)
-    q_full = jnp.concatenate([q_c, q_r], -1)
-    k_full = jnp.concatenate(
-        [k_c, jnp.broadcast_to(rop[..., None, :],
-                               k_c.shape[:-1] + (a.qk_rope_dim,))], -1)
+    upd = paged_write_token(cache, "c_kv_pages", c_kv[:, 0], table, pos)
+    upd.update(paged_write_token(cache, "k_r_pages", k_r[:, 0], table, pos))
+    w_uk, w_uv = mla_absorbed(params, a)
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_c[:, 0], w_uk)
+    q_abs = jnp.concatenate([q_lat, q_r[:, 0]], -1)  # (B, H, r + rope)
     scale = 1.0 / math.sqrt(a.qk_nope_dim + a.qk_rope_dim)
-    o = _attend_dense(q_full, k_full, v, _rows_bias(pos + 1, S, 0), scale)
+    c_scale = upd.get("c_kv_scale_pages")
+    o_lat = ops.paged_attention(
+        q_abs, upd["c_kv_pages"][:, :, None], upd["c_kv_pages"][:, :, None],
+        table, pos + 1, scale=scale,
+        k_scale=None if c_scale is None else c_scale[:, :, None],
+        v_scale=None if c_scale is None else c_scale[:, :, None],
+        k_extra=upd["k_r_pages"][:, :, None])  # (B, H, r)
+    o = jnp.einsum("bhr,rhv->bhv", o_lat, w_uv)
     o = o.reshape(B, 1, -1) @ params["w_o"]
-    return o, {"c_kv_pages": cc, "k_r_pages": cr}
+    return o, upd
 
 
 def mla_prefill_paged(params: dict, x: jax.Array, cache: dict,
@@ -732,12 +913,14 @@ def mla_prefill_paged(params: dict, x: jax.Array, cache: dict,
     q_c, q_r = q[..., :a.qk_nope_dim], q[..., a.qk_nope_dim:]
     q_r = apply_rope(q_r, pos, theta)
     k_r = apply_rope(k_r[..., None, :], pos, theta)[..., 0, :]
-    cc = chunk_cache_write_paged(cache["c_kv_pages"], c_kv[0], table, idx,
-                                 n_tok)
-    cr = chunk_cache_write_paged(cache["k_r_pages"], k_r[0], table, idx,
-                                 n_tok)
-    lat = _gather_pages(cc, table[None])   # (1, S, r)
-    rop = _gather_pages(cr, table[None])
+    upd = paged_write_chunk(cache, "c_kv_pages", c_kv[0], table, idx,
+                            n_tok)
+    upd.update(paged_write_chunk(cache, "k_r_pages", k_r[0], table, idx,
+                                 n_tok))
+    c2 = dict(cache)
+    c2.update(upd)
+    lat = paged_gather(c2, "c_kv_pages", table[None], c_kv.dtype)  # (1,S,r)
+    rop = paged_gather(c2, "k_r_pages", table[None], k_r.dtype)
     S = lat.shape[1]
     k_c, v = _mla_expand(params, lat, a)
     slot_ids = jnp.arange(S)
@@ -750,7 +933,7 @@ def mla_prefill_paged(params: dict, x: jax.Array, cache: dict,
     o = attend(q_full, k_full, v, pos[0], k_pos, window=0, causal=True,
                scale=scale)
     o = o.reshape(B, C, -1) @ params["w_o"]
-    return o, {"c_kv_pages": cc, "k_r_pages": cr}
+    return o, upd
 
 
 # ---------------------------------------------------------------------------
@@ -835,15 +1018,17 @@ def gqa_verify_paged(params: dict, x: jax.Array, cache: dict,
         k = apply_rope(k, rp, theta, a.mrope_sections)
     k = constrain(k, None, None, kv, None)
     v = constrain(v, None, None, kv, None)
-    ck = chunk_scatter_batch(cache["k_pages"], k, table, pos, n_tok)
-    cv = chunk_scatter_batch(cache["v_pages"], v, table, pos, n_tok)
-    kk = _gather_pages(ck, table)           # (B, S, n_kv, dh)
-    vv = _gather_pages(cv, table)
+    upd = paged_write_batch(cache, "k_pages", k, table, pos, n_tok)
+    upd.update(paged_write_batch(cache, "v_pages", v, table, pos, n_tok))
+    c2 = dict(cache)
+    c2.update(upd)
+    kk = paged_gather(c2, "k_pages", table, k.dtype)  # (B, S, n_kv, dh)
+    vv = paged_gather(c2, "v_pages", table, v.dtype)
     scale = 1.0 / math.sqrt(a.head_dim)
     o = _attend_dense(q, kk, vv, _verify_bias(pos, kk.shape[1], C, window),
                       scale)
     o = o.reshape(B, C, -1) @ params["w_o"]
-    return o, {"k_pages": ck, "v_pages": cv}
+    return o, upd
 
 
 def mla_verify_paged(params: dict, x: jax.Array, cache: dict,
@@ -860,10 +1045,13 @@ def mla_verify_paged(params: dict, x: jax.Array, cache: dict,
     q_c, q_r = q[..., :a.qk_nope_dim], q[..., a.qk_nope_dim:]
     q_r = apply_rope(q_r, p2, theta)
     k_r = apply_rope(k_r[..., None, :], p2, theta)[..., 0, :]
-    cc = chunk_scatter_batch(cache["c_kv_pages"], c_kv, table, pos, n_tok)
-    cr = chunk_scatter_batch(cache["k_r_pages"], k_r, table, pos, n_tok)
-    lat = _gather_pages(cc, table)          # (B, S, r)
-    rop = _gather_pages(cr, table)          # (B, S, rope)
+    upd = paged_write_batch(cache, "c_kv_pages", c_kv, table, pos, n_tok)
+    upd.update(paged_write_batch(cache, "k_r_pages", k_r, table, pos,
+                                 n_tok))
+    c2 = dict(cache)
+    c2.update(upd)
+    lat = paged_gather(c2, "c_kv_pages", table, c_kv.dtype)  # (B, S, r)
+    rop = paged_gather(c2, "k_r_pages", table, k_r.dtype)    # (B, S, rope)
     S = lat.shape[1]
     k_c, v = _mla_expand(params, lat, a)
     q_full = jnp.concatenate([q_c, q_r], -1)
@@ -873,7 +1061,7 @@ def mla_verify_paged(params: dict, x: jax.Array, cache: dict,
     scale = 1.0 / math.sqrt(a.qk_nope_dim + a.qk_rope_dim)
     o = _attend_dense(q_full, k_full, v, _verify_bias(pos, S, C, 0), scale)
     o = o.reshape(B, C, -1) @ params["w_o"]
-    return o, {"c_kv_pages": cc, "k_r_pages": cr}
+    return o, upd
 
 
 # ---------------------------------------------------------------------------

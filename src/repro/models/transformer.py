@@ -263,14 +263,15 @@ def layer_pages(cfg: ModelConfig, spec: LayerSpec, max_seq: int) -> bool:
 
 
 def _slot_cache_init(cfg: ModelConfig, spec: LayerSpec, batch, max_seq,
-                     dtype, page_size: int = 0, n_pages: int = 0) -> dict:
+                     dtype, page_size: int = 0, n_pages: int = 0,
+                     kv_dtype: str = "f32") -> dict:
     if page_size > 0 and layer_pages(cfg, spec, max_seq):
         if spec.mixer == "attn" and cfg.attn.kind == "mla":
             c = attn.mla_paged_cache_init(cfg.attn, n_pages, page_size,
-                                          dtype)
+                                          dtype, kv_dtype)
         else:
             c = attn.gqa_paged_cache_init(cfg.attn, n_pages, page_size,
-                                          dtype)
+                                          dtype, kv_dtype)
     elif spec.mixer == "attn":
         if cfg.attn.kind == "mla":
             c = attn.mla_cache_init(cfg.attn, batch, max_seq, dtype)
@@ -293,12 +294,12 @@ def _slot_cache_init(cfg: ModelConfig, spec: LayerSpec, batch, max_seq,
 
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
                enc_len: int = 0, page_size: int = 0,
-               n_pages: int = 0) -> dict:
+               n_pages: int = 0, kv_dtype: str = "f32") -> dict:
     dtype = dtype_of(cfg)
     segments = []
     for count, specs in cfg.segments():
         slot = {f"slot_{i}": _slot_cache_init(cfg, s, batch, max_seq, dtype,
-                                              page_size, n_pages)
+                                              page_size, n_pages, kv_dtype)
                 for i, s in enumerate(specs)}
         segments.append(jax.tree.map(
             lambda x: jnp.broadcast_to(x, (count,) + x.shape), slot))
@@ -383,7 +384,7 @@ def decode_step(params, cfg: ModelConfig, cache: dict,
 
 def init_slot_cache(cfg: ModelConfig, batch: int, max_seq: int,
                     enc_len: int = 0, page_size: int = 0,
-                    n_pages: int = 0) -> dict:
+                    n_pages: int = 0, kv_dtype: str = "f32") -> dict:
     """Slot-addressable decode cache: `idx` is a (batch,) position vector.
 
     Each batch row is an independent *slot* at its own sequence position,
@@ -407,13 +408,51 @@ def init_slot_cache(cfg: ModelConfig, batch: int, max_seq: int,
     many members are LOCAL (all K unsharded; K/M inside a shard_map
     body), so a sharded cache needs no changes here.
     """
-    cache = init_cache(cfg, batch, max_seq, enc_len, page_size, n_pages)
+    cache = init_cache(cfg, batch, max_seq, enc_len, page_size, n_pages,
+                       kv_dtype)
     cache["idx"] = jnp.zeros((batch,), jnp.int32)
     if page_size > 0:
         pages_per_slot = -(-max_seq // page_size)
         cache["page_table"] = jnp.full((batch, pages_per_slot), n_pages,
                                        jnp.int32)
     return cache
+
+
+def absorb_mla_params(cfg: ModelConfig, params: dict) -> dict:
+    """Precompute the absorbed-MLA projections (kv_uk / kv_uv) once.
+
+    mla_decode_paged attends in the latent space: queries are folded
+    through W_UK before the kernel and outputs through W_UV after it, so
+    the per-step gather + kv_up expansion disappears from the hot path.
+    This splits every MLA layer's kv_up (..., r, H*(nope+v)) into
+    kv_uk (..., r, H, nope) and kv_uv (..., r, H, v) and stores them as
+    extra leaves next to kv_up — done once per params install
+    (engine __init__ / swap_params), not per decode step.  Works on
+    per-layer, (count,)-stacked and (K, count)-stacked trees alike
+    (only the trailing dim is reshaped).  No-op for non-MLA archs.
+    """
+    a = cfg.attn
+    if a.kind != "mla":
+        return params
+    params = dict(params)
+    segments = []
+    for seg, (count, specs) in zip(params["segments"], cfg.segments()):
+        seg = dict(seg)
+        for i, spec in enumerate(specs):
+            slot = dict(seg[f"slot_{i}"])
+            p = slot.get("attn")
+            if spec.mixer == "attn" and p is not None and "kv_up" in p:
+                p = dict(p)
+                w = p["kv_up"].reshape(
+                    p["kv_up"].shape[:-1]
+                    + (a.n_heads, a.qk_nope_dim + a.v_head_dim))
+                p["kv_uk"] = w[..., :a.qk_nope_dim]
+                p["kv_uv"] = w[..., a.qk_nope_dim:]
+                slot["attn"] = p
+            seg[f"slot_{i}"] = slot
+        segments.append(seg)
+    params["segments"] = segments
+    return params
 
 
 def slot_cache_axes(cache: dict):

@@ -99,6 +99,9 @@ def print_report(r: dict):
     print(f"  latency p50 {r['latency_p50_ms']:.1f} ms   "
           f"p95 {r['latency_p95_ms']:.1f} ms   "
           f"p99 {r['latency_p99_ms']:.1f} ms")
+    if ps.get("page_bytes") is not None:
+        print(f"  cache   {ps['kv_dtype']} pages, {ps['page_bytes']} "
+              f"B/page, {ps['bytes_per_token']} B/token")
     if r.get("peak_in_flight") is not None:
         low = (f", free-list low water {r['low_water_pages']}"
                f"/{ps['n_pages']} pages"

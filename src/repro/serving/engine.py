@@ -79,6 +79,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.common import sharding as shd
 from repro.common.types import ModelConfig
 from repro.core import ensemble as ens
+from repro.models import attention as attn_mod
 from repro.models import transformer as tf
 from repro.serving import kv_cache, sampling
 from repro.serving import prefix as prefix_mod
@@ -101,6 +102,13 @@ class SlotState(NamedTuple):
     topk: jax.Array        # (B,)   per-request top-k (0 = full vocab)
     skey: jax.Array        # (B,2)  per-request base PRNG key
     draft: jax.Array       # (B,)   speculative drafting enabled
+
+
+def _param_spec(params):
+    """(treedef, [(shape, dtype)]) of a RAW (pre-absorption) stack —
+    what swap_params validates incoming checkpoints against."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    return treedef, [(x.shape, x.dtype) for x in leaves]
 
 
 class EnsembleEngine:
@@ -130,7 +138,7 @@ class EnsembleEngine:
                  quorum: Optional[Sequence[float]] = None, seed: int = 0,
                  mesh=None, paged: bool = False, page_size: int = 16,
                  n_pages: Optional[int] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, kv_dtype: str = "f32"):
         self.cfg = cfg
         self.n_members = jax.tree.leaves(stacked_params)[0].shape[0]
         self.mesh = mesh
@@ -140,6 +148,23 @@ class EnsembleEngine:
             raise ValueError(
                 f"mesh member axis {self.member_shards} does not divide "
                 f"K={self.n_members} members")
+        if kv_dtype not in attn_mod.KV_DTYPES:
+            raise ValueError(
+                f"kv_dtype must be one of {attn_mod.KV_DTYPES}, "
+                f"got {kv_dtype!r}")
+        if kv_dtype != "f32" and not paged:
+            raise ValueError(
+                "kv_dtype != f32 requires paged=True (only paged planes "
+                "are stored quantized; the contiguous pool is the "
+                "bit-exact reference)")
+        if kv_dtype == "fp8":
+            attn_mod.fp8_dtype()  # raises if this jax has no float8
+        self.kv_dtype = kv_dtype
+        # swap_params validates incoming RAW trees against the raw spec
+        # captured here, BEFORE any absorbed-MLA leaves are added
+        self._param_spec = _param_spec(stacked_params)
+        if paged:
+            stacked_params = tf.absorb_mla_params(cfg, stacked_params)
         if mesh is None:
             self.params = stacked_params
         else:
@@ -226,7 +251,8 @@ class EnsembleEngine:
         self.cache = kv_cache.init_pool(
             cfg, self.n_members, n_slots, self.max_seq, mesh=mesh,
             page_size=self.page_size if self.paged else 0,
-            n_pages=self.n_pages if self.paged else 0)
+            n_pages=self.n_pages if self.paged else 0,
+            kv_dtype=kv_dtype)
         if cfg.enc_dec:
             self.cache["enc"] = self._encode_stub(n_slots)
         self.state = self._blank_state(seed)
@@ -693,12 +719,17 @@ class EnsembleEngine:
         if not self.paged:
             return {}
         a = self.allocator
+        pb = kv_cache.page_bytes(self.cache, a.n_pages)
         stats = {"n_pages": a.n_pages, "page_size": a.page_size,
                  "free_pages": a.free_pages, "used_pages": a.used_pages,
                  "available_pages": a.available_pages,
                  "shared_pages": a.shared_pages,
                  "pages_per_slot": a.pages_per_slot,
-                 "low_water_pages": a.low_water}
+                 "low_water_pages": a.low_water,
+                 "kv_dtype": self.kv_dtype,
+                 "kv_quantized": int(self.kv_dtype in ("int8", "fp8")),
+                 "page_bytes": pb,
+                 "bytes_per_token": pb // max(a.page_size, 1)}
         if self.prefix is not None:
             stats.update(self.prefix.stats())
             stats["cow_pages"] = a.cow_count
@@ -1026,19 +1057,25 @@ class EnsembleEngine:
         grow/shrink the stack with `checkpoint.store.reshard_members`
         BEFORE swapping.
         """
-        old_leaves, old_def = jax.tree_util.tree_flatten(self.params)
+        old_def, old_shapes = self._param_spec
         new_leaves, new_def = jax.tree_util.tree_flatten(new_stacked_params)
         if old_def != new_def:
             raise ValueError(
                 f"swap_params: new param tree structure {new_def} does not "
                 f"match the live engine's {old_def}")
-        for i, (o, n) in enumerate(zip(old_leaves, new_leaves)):
-            if o.shape != n.shape or o.dtype != n.dtype:
+        for i, ((oshape, odtype), n) in enumerate(zip(old_shapes,
+                                                      new_leaves)):
+            if oshape != n.shape or odtype != n.dtype:
                 raise ValueError(
                     f"swap_params: leaf {i} is {n.shape}/{n.dtype}, live "
-                    f"engine has {o.shape}/{o.dtype} — a mismatched stack "
+                    f"engine has {oshape}/{odtype} — a mismatched stack "
                     f"would recompile every kernel (use "
                     f"checkpoint.store.reshard_members to change K first)")
+        if self.paged:
+            # re-derive the absorbed projections from the NEW weights
+            # (same leaf shapes as the live tree -> no recompiles)
+            new_stacked_params = tf.absorb_mla_params(self.cfg,
+                                                      new_stacked_params)
         if self.mesh is None:
             self.params = jax.tree.map(jnp.asarray, new_stacked_params)
         else:

@@ -90,6 +90,7 @@ class EngineSpec:
     page_size: int = 4
     n_pages: Optional[int] = None
     prefix_cache: bool = False
+    kv_dtype: str = "f32"  # paged page storage: f32|bf16|int8|fp8
     draft_member0: bool = False  # speculative: member 0 drafts
     gamma: int = 4
     spec_sampling: bool = False
@@ -140,7 +141,8 @@ class EngineSpec:
                   temperature=self.temperature, top_k=self.top_k,
                   eos_id=self.eos_id, quorum=self.quorum, seed=self.seed,
                   mesh=mesh, paged=self.paged, page_size=self.page_size,
-                  n_pages=self.n_pages, prefix_cache=self.prefix_cache)
+                  n_pages=self.n_pages, prefix_cache=self.prefix_cache,
+                  kv_dtype=self.kv_dtype)
         if self.draft_member0:
             from repro.serving.spec.engine import SpeculativeEngine
             draft = jax.tree.map(lambda x: x[0], params)

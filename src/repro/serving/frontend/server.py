@@ -397,6 +397,12 @@ class FrontendServer:
                     f"{ps['low_water_pages']}",
                     f"repro_serving_shared_pages{lab} "
                     f"{ps['shared_pages']}",
+                    f"repro_serving_kv_page_bytes{lab} "
+                    f"{ps['page_bytes']}",
+                    f"repro_serving_kv_bytes_per_token{lab} "
+                    f"{ps['bytes_per_token']}",
+                    f"repro_serving_kv_quantized{lab} "
+                    f"{ps['kv_quantized']}",
                 ]
             if "prefix_hit_rate" in ps:
                 lines += [

@@ -59,7 +59,7 @@ from repro.models import transformer as tf
 
 def init_pool(cfg: ModelConfig, n_members: int, n_slots: int,
               max_seq: int, mesh=None, page_size: int = 0,
-              n_pages: int = 0) -> dict:
+              n_pages: int = 0, kv_dtype: str = "f32") -> dict:
     """Allocate the (K members) x (B slots) cache pool.
 
     With `mesh` (a ("member", "data") mesh) every leaf is placed with
@@ -71,12 +71,20 @@ def init_pool(cfg: ModelConfig, n_members: int, n_slots: int,
     shared by all slots per full-attention layer, plus the per-slot
     page table, initially all-sentinel = nothing allocated).
 
+    kv_dtype picks the paged-plane storage format ("f32" = native, the
+    default; "bf16"; "int8"/"fp8" quantized with per-token absmax
+    scales in `*_scale_pages` sidecar leaves).  Sidecars end in
+    "_pages", so every pool helper (reset, copy_pages COW, snapshot)
+    treats them exactly like the planes they scale; under a member mesh
+    they shard like their planes (leading member axis).  Contiguous
+    planes (sliding-window rings, recurrent state) are never quantized.
+
     enc-dec archs get a zeroed per-member encoder-output plane; the
     engine fills it once at construction (audio frontends are stubs,
     DESIGN §4 — per-request encoder state is a serving follow-up).
     """
     base = tf.init_slot_cache(cfg, n_slots, max_seq, page_size=page_size,
-                              n_pages=n_pages)
+                              n_pages=n_pages, kv_dtype=kv_dtype)
     pool = jax.tree.map(
         lambda x: jnp.broadcast_to(x, (n_members,) + x.shape), base)
     if mesh is not None:
@@ -693,3 +701,31 @@ def pool_bytes(pool: dict, per_device: bool = True) -> int:
             n *= d
         total += n * x.dtype.itemsize
     return total
+
+
+def page_bytes(pool: dict, n_pages: int, per_device: bool = True) -> int:
+    """Real bytes ONE physical page costs across all paged planes.
+
+    Sums every "_pages"-suffixed leaf (quantized planes at their stored
+    itemsize, scale sidecars included) and divides by n_pages — the
+    number admission accounting and the placement summary quote.  A
+    quantized pool's figure is ~4x smaller than f32's, which is exactly
+    the admissible-concurrency win at equal pool bytes.
+    """
+    total = 0
+
+    def acc(path, x):
+        nonlocal total
+        if not _leaf_name(path).endswith("_pages"):
+            return
+        shape = x.shape
+        sh = getattr(x, "sharding", None)
+        if per_device and sh is not None and hasattr(sh, "shard_shape"):
+            shape = sh.shard_shape(x.shape)
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * x.dtype.itemsize
+
+    jax.tree_util.tree_map_with_path(acc, pool["segments"])
+    return total // max(n_pages, 1)
