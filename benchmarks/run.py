@@ -31,7 +31,7 @@ def main():
         ("Dry-run roofline table", roofline.main, flag),
         ("Serving: engine vs member loop", serving_bench.main,
          flag + ["--spec", "--prefix", "--fleet", "--kv-quant",
-                 "--json", SERVING_JSON]),
+                 "--obs", "--json", SERVING_JSON]),
     ]
     failures = 0
     for name, fn, argv in suite:

@@ -50,11 +50,15 @@ def serve_http(args, cfg, build_engine):
     from repro.serving.frontend import Replica, Router, serve_frontend
 
     replicas = [Replica(f"r{i}", build_engine(),
-                        prefill_budget=args.prefill_budget)
+                        prefill_budget=args.prefill_budget,
+                        obs=not args.no_obs,
+                        trace_log=args.trace_log or None,
+                        profile_dir=args.profile_dir or None)
                 for i in range(max(1, args.replicas))]
     router = Router(replicas, max_queue_depth=args.max_queue_depth)
     srv = serve_frontend(router, host=args.host, port=args.port,
-                         verbose=not args.load)
+                         verbose=not args.load,
+                         profile_dir=args.profile_dir or None)
     print(f"frontend: {srv.url}  ({len(replicas)} replica(s), "
           f"K={replicas[0].engine.n_members} members, "
           f"{replicas[0].engine.n_slots} slots each)")
@@ -115,7 +119,9 @@ def serve_fleet(args, cfg):
         gamma=args.gamma, spec_sampling=args.spec_sampling,
         ckpt=(args.draft_ckpt if args.draft_ckpt
               not in ("", "member0") else ""),
-        prefill_budget=args.prefill_budget)
+        prefill_budget=args.prefill_budget,
+        obs=not args.no_obs, trace_log=args.trace_log,
+        profile_dir=args.profile_dir)
     fleet = FleetRouter(spec, n=max(1, args.replicas), host=args.host,
                         max_queue_depth=args.max_queue_depth)
     print(f"spawning {max(1, args.replicas)} replica process(es) "
@@ -316,6 +322,17 @@ def main():
                     help="with --http: poll this CheckpointManager "
                          "root and hot-swap each newly committed round "
                          "into the fleet (drain -> swap -> rejoin)")
+    ap.add_argument("--no-obs", action="store_true",
+                    help="disable the observability layer (request "
+                         "traces, latency histograms, tick-phase "
+                         "profiler); on by default at <2%% overhead")
+    ap.add_argument("--trace-log", default="",
+                    help="append one JSON line per finished request "
+                         "trace to this file (obs must be on)")
+    ap.add_argument("--profile-dir", default="",
+                    help="jax.profiler output dir; arms POST "
+                         "/admin/profile {\"ticks\": N} to capture "
+                         "device traces for N scheduler ticks")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -401,7 +418,8 @@ def main():
         # decode) are built here, not inside the first timed iteration
         engine.generate([reqs[0][0]], max_new=2)
         client.print_report(client.run_load(
-            engine, reqs, prefill_budget=args.prefill_budget))
+            engine, reqs, prefill_budget=args.prefill_budget,
+            obs=not args.no_obs, trace_log=args.trace_log or None))
         return 0
 
     B = args.batch

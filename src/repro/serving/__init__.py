@@ -7,12 +7,20 @@ streaming); the `frontend` subpackage mounts N replicas behind an
 HTTP/SSE server with zero-downtime hot-swap; client drives synthetic
 load — in-process or over HTTP — and reports tok/s / TTFT / latency
 percentiles.  See engine.py for the architecture note.
+
+obs.py is the observability core threaded through all of it:
+per-request lifecycle traces, log-bucketed latency histograms
+(Prometheus exposition on GET /metrics), a tick-phase profiler, and
+the scrape-merge used for fleet-wide aggregation.  On by default;
+Scheduler(obs=False) is the kill-switch.
 """
 from repro.serving.engine import EnsembleEngine, SlotState
+from repro.serving.obs import Histogram, ServingObs, Trace, TraceRing
 from repro.serving.prefix import PrefixCache
 from repro.serving.scheduler import Completion, Request, Scheduler
 from repro.serving.spec import DraftEngine, SpeculativeEngine
 
 __all__ = ["EnsembleEngine", "SlotState", "Scheduler", "Request",
            "Completion", "SpeculativeEngine", "DraftEngine",
-           "PrefixCache"]
+           "PrefixCache", "ServingObs", "Trace", "TraceRing",
+           "Histogram"]

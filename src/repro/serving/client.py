@@ -39,14 +39,20 @@ def percentile(xs: Sequence[float], p: float) -> float:
     return float(np.percentile(np.asarray(xs), p)) if len(xs) else 0.0
 
 
-def run_load(engine: EnsembleEngine, requests, prefill_budget=None) -> dict:
-    """Serve `requests` through a fresh Scheduler; -> stats report dict."""
-    sched = Scheduler(engine, prefill_budget=prefill_budget)
+def run_load(engine: EnsembleEngine, requests, prefill_budget=None,
+             obs: bool = True, trace_log=None) -> dict:
+    """Serve `requests` through a fresh Scheduler; -> stats report dict.
+    obs=False runs the kill-switch scheduler (no traces/histograms) —
+    the baseline side of the serving_bench overhead gate."""
+    sched = Scheduler(engine, prefill_budget=prefill_budget, obs=obs,
+                      trace_log=trace_log)
     for tokens, max_new in requests:
         sched.submit(tokens, max_new)
     t0 = time.time()
     completions = sched.run()
     wall = time.time() - t0
+    if sched.obs is not None and trace_log:
+        sched.obs.close()
     return build_report(completions, wall, engine, sched=sched)
 
 
@@ -239,12 +245,44 @@ def http_get_json(url: str, path: str, timeout: float = 10.0) -> dict:
         return json.loads(r.read())
 
 
+def http_get_text(url: str, path: str, timeout: float = 10.0) -> str:
+    with urllib.request.urlopen(url + path, timeout=timeout) as r:
+        return r.read().decode()
+
+
+def server_percentiles(metrics_text: str) -> dict:
+    """Pull the serving histograms' percentiles out of a /metrics
+    scrape -> {"ttft_p50_ms": ..., "ttft_p99_ms": ..., ...} (empty
+    when the scrape has no samples, e.g. obs disabled)."""
+    from repro.serving import obs as obs_mod
+    out = {}
+    fams = {"ttft": "repro_serving_ttft_seconds",
+            "latency": "repro_serving_e2e_latency_seconds"}
+    for key, fam in fams.items():
+        for p in (50, 95, 99):
+            try:
+                q = obs_mod.histogram_quantile_from_scrape(
+                    metrics_text, fam, p / 100.0)
+            except ValueError:
+                return {}
+            if q is None:
+                return {}
+            out[f"{key}_p{p}_ms"] = q * 1e3
+    return out
+
+
 def run_http_load(url: str, requests, concurrency: int = 8,
                   stream: bool = True) -> dict:
     """Drive `requests` against a live frontend from `concurrency`
     client threads; -> the same report dict run_load builds (fleet
-    shape read from /healthz; scheduler health from /metrics is left
-    to the server logs)."""
+    shape read from /healthz).
+
+    When the server exports latency histograms on /metrics, the
+    report's ttft/latency percentiles come from those server-side
+    histograms (queue-wait included, no client network skew) and the
+    client-measured values move to client_ttft_* keys; a >20%
+    p50/p99 TTFT divergence between the two views is flagged with
+    ttft_divergence_warn."""
     results: List[Optional[dict]] = [None] * len(requests)
     errors: List[Tuple[int, str]] = []
     nxt = {"i": 0}
@@ -282,7 +320,7 @@ def run_http_load(url: str, requests, concurrency: int = 8,
     gen_tokens = sum(r["n_gen"] for r in done)
     ttft = [r["ttft"] for r in done if r["ttft"] is not None]
     lat = [r["latency"] for r in done]
-    return {
+    report = {
         "n_requests": len(done),
         "n_errors": len(errors),
         "errors": errors[:8],
@@ -301,3 +339,33 @@ def run_http_load(url: str, requests, concurrency: int = 8,
         "cache_mb": 0.0,  # engine-side; see /metrics
         "page_stats": {},
     }
+    try:
+        srv = server_percentiles(http_get_text(url, "/metrics"))
+    except Exception:  # noqa: BLE001 — the report must survive a
+        # frontend that predates /metrics histograms or is draining
+        srv = {}
+    if srv and ttft:
+        divs = []
+        for p in (50, 99):
+            c, s = report[f"ttft_p{p}_ms"], srv[f"ttft_p{p}_ms"]
+            if max(c, s) > 0:
+                divs.append(abs(c - s) / max(c, s))
+        report["ttft_p99_divergence"] = (
+            abs(report["ttft_p99_ms"] - srv["ttft_p99_ms"])
+            / max(report["ttft_p99_ms"], srv["ttft_p99_ms"], 1e-9))
+        if any(d > 0.20 for d in divs):
+            report["ttft_divergence_warn"] = True
+            print(f"WARNING: client/server TTFT percentiles diverge "
+                  f">20%: client p50 {report['ttft_p50_ms']:.1f} ms / "
+                  f"p99 {report['ttft_p99_ms']:.1f} ms vs server "
+                  f"p50 {srv['ttft_p50_ms']:.1f} ms / "
+                  f"p99 {srv['ttft_p99_ms']:.1f} ms")
+        # server-side histograms win the headline numbers; keep the
+        # client-clock view for cross-checking
+        for p in (50, 95, 99):
+            report[f"client_ttft_p{p}_ms"] = report[f"ttft_p{p}_ms"]
+            report[f"ttft_p{p}_ms"] = srv[f"ttft_p{p}_ms"]
+            report[f"client_latency_p{p}_ms"] = report[f"latency_p{p}_ms"]
+            report[f"latency_p{p}_ms"] = srv[f"latency_p{p}_ms"]
+        report["latency_source"] = "server"
+    return report

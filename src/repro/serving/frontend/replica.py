@@ -53,6 +53,7 @@ from dataclasses import asdict, dataclass, field
 from typing import Dict, List, Optional
 
 from repro.serving import client as sclient
+from repro.serving import obs as obs_mod
 
 _READY = "REPLICA_READY"
 
@@ -97,6 +98,13 @@ class EngineSpec:
     ckpt: str = ""
     ckpt_step: Optional[int] = None
     prefill_budget: Optional[int] = None
+    # observability: on by default (obs=False is the kill-switch);
+    # trace_log appends one JSONL line per finished request (children
+    # of one fleet may share a path — O_APPEND keeps lines whole);
+    # profile_dir arms POST /admin/profile on the child's frontend
+    obs: bool = True
+    trace_log: str = ""
+    profile_dir: str = ""
     extra: Dict[str, float] = field(default_factory=dict)
 
     def to_json(self) -> str:
@@ -226,11 +234,14 @@ def main(argv: Optional[List[str]] = None) -> int:
     # them now so an idle replica reports a whole page pool from tick one
     engine.update_slots(release=range(engine.n_slots))
 
-    rep = Replica("r0", engine, prefill_budget=spec.prefill_budget)
+    rep = Replica("r0", engine, prefill_budget=spec.prefill_budget,
+                  obs=spec.obs, trace_log=spec.trace_log or None,
+                  profile_dir=spec.profile_dir or None)
     router = Router([rep], max_queue_depth=args.max_queue_depth)
     srv = FrontendServer(router, host=args.host, port=args.port,
                          verbose=args.verbose,
-                         admin_swap=_make_admin_swap(spec, router))
+                         admin_swap=_make_admin_swap(spec, router),
+                         profile_dir=spec.profile_dir or None)
     srv.start()
 
     done = threading.Event()
@@ -401,9 +412,17 @@ class FleetRouter:
         self.n_retried = 0      # requests rerun after a replica death
         self.n_backoffs = 0     # 429s honored with a sleep-and-retry
         self.n_latched = 0      # replicas latched out after crashing
+        self.n_restarts = 0     # replacement processes spawned
+        self.last_sweep_s = 0.0  # wall time of the last health_sweep
         self._canary: Optional[str] = None
         self._canary_frac = 0.0
         self._canary_credit = 0.0
+        # fleet-side request traces: which replica served each request,
+        # every failover hop (replica_failed -> retried), backpressure
+        # waits — the parent's view, complementing the child-side span
+        # chain that rides each completion payload
+        self.traces = obs_mod.TraceRing(keep=256)
+        self._next_trace = 0
 
     def _new_proc(self, name: str) -> ReplicaProcess:
         return ReplicaProcess(name, self.spec, host=self.host,
@@ -483,32 +502,52 @@ class FleetRouter:
         load is delay, not failure).  Raises after `retries`
         crash-retries; the soak harness treats any raise as a dropped
         request, which is the invariant under test.
+
+        The returned dict carries a "fleet_trace": the parent-side span
+        chain (routed -> [replica_failed -> retried ->] done) — a
+        retried request's trace records its failover hops, on top of
+        the child-side trace in the completion payload itself.
         """
+        with self._lock:
+            tid = self._next_trace
+            self._next_trace += 1
+        tr = self.traces.start(tid)
+        tr.add("enqueued")
         crash_left = retries
         avoid = None
         while True:
             p = self._pick(avoid=avoid)
+            tr.add("routed", p.name)
             try:
-                return sclient.http_generate(
+                result = sclient.http_generate(
                     p.url, tokens, max_new, stream=stream,
                     timeout=timeout, **sample_kw)
+                tr.add("done")
+                self.traces.finish(tid)
+                result["fleet_trace"] = tr.to_dict()
+                return result
             except sclient.Backpressure as e:
                 with self._lock:
                     self.n_backoffs += 1
+                tr.add("backpressure", round(e.retry_after, 3))
                 time.sleep(min(e.retry_after, 1.0))
             except (OSError, RuntimeError, http.client.HTTPException) as e:
                 # a SIGKILL surfaces as whatever the socket was doing:
                 # reset (OSError), a mid-SSE close (RuntimeError from
                 # http_generate), or a truncated body (IncompleteRead)
                 self._latch(p)
+                tr.add("replica_failed", p.name)
                 crash_left -= 1
                 if crash_left < 0:
+                    tr.add("failed")
+                    self.traces.finish(tid)
                     raise RuntimeError(
                         f"request failed on {p.name} with no retries "
                         f"left: {e!r}") from e
                 avoid = p.name
                 with self._lock:
                     self.n_retried += 1
+                tr.add("retried")
                 # a dead port refuses connections INSTANTLY — without a
                 # pause the whole retry budget can burn inside the
                 # kill -> poll() observation window
@@ -530,9 +569,13 @@ class FleetRouter:
         """Latch every dead process out of rotation; -> their names.
         Routing already skips dead processes (alive is a poll(), not a
         cache); the sweep exists so supervision logic — restart,
-        autoscale — sees deaths it hasn't tripped over yet."""
+        autoscale — sees deaths it hasn't tripped over yet.  Its wall
+        time lands in last_sweep_s (the fleet scrape's
+        repro_serving_fleet_health_sweep_seconds gauge)."""
+        t0 = time.monotonic()
         dead = [p.name for p in self.procs
                 if p.proc is not None and not p.alive]
+        self.last_sweep_s = time.monotonic() - t0
         return dead
 
     def restart(self, name: str, timeout: float = 600.0) -> ReplicaProcess:
@@ -552,6 +595,7 @@ class FleetRouter:
         with self._lock:
             self.procs[idx] = fresh
             self._in_flight[name] = 0
+            self.n_restarts += 1
         return fresh
 
     def scale_to(self, n: int, timeout: float = 600.0):
@@ -672,6 +716,55 @@ class FleetRouter:
 
     # -- telemetry ----------------------------------------------------------
 
+    def metrics_text(self, timeout: float = 10.0) -> str:
+        """ONE scrape for the whole process tree: GET /metrics from
+        every live child, merge (obs.merge_scrapes) with each sample
+        re-labeled replica=<child name>, a synthesized replica="fleet"
+        row per family (sums for counters/histograms — page, prefix,
+        spec and latency stats included — max for gauges), then the
+        fleet's own gauges appended: retries, restarts, backoffs,
+        latched replicas, canary state, health-sweep latency.  A child
+        that dies mid-scrape is skipped, not fatal."""
+        scrapes = []
+        for p in self.procs:
+            if not p.alive:
+                continue
+            try:
+                scrapes.append(
+                    (p.name,
+                     sclient.http_get_text(p.url, "/metrics",
+                                           timeout=timeout)))
+            except (OSError, http.client.HTTPException):
+                continue
+        merged = obs_mod.merge_scrapes(scrapes)
+        fs = obs_mod.FamilySet()
+        for fam, mtype, val, help in (
+            ("repro_serving_fleet_procs", "gauge", len(self.procs),
+             "Replica processes the fleet tracks (live + dead)."),
+            ("repro_serving_fleet_live_replicas", "gauge",
+             len(self.live()), "Replica processes serving traffic."),
+            ("repro_serving_fleet_queue_depth", "gauge",
+             self.queue_depth, "Parent-side in-flight requests."),
+            ("repro_serving_fleet_retries_total", "counter",
+             self.n_retried, "Requests rerun after a replica death."),
+            ("repro_serving_fleet_restarts_total", "counter",
+             self.n_restarts, "Replacement replica processes spawned."),
+            ("repro_serving_fleet_backoffs_total", "counter",
+             self.n_backoffs, "429 answers honored with a backoff."),
+            ("repro_serving_fleet_latched_total", "counter",
+             self.n_latched, "Replicas latched out after crashing."),
+            ("repro_serving_fleet_health_sweep_seconds", "gauge",
+             self.last_sweep_s, "Wall time of the last health_sweep."),
+        ):
+            fs.declare(fam, mtype, help)
+            fs.sample(fam, None, val)
+        fs.declare("repro_serving_fleet_canary", "gauge",
+                   "1 while the labeled replica serves as canary.")
+        if self._canary is not None:
+            fs.sample("repro_serving_fleet_canary",
+                      {"replica": self._canary}, 1)
+        return merged + fs.render()
+
     def stats(self) -> dict:
         reps = []
         for p in self.procs:
@@ -689,6 +782,8 @@ class FleetRouter:
             "retried": self.n_retried,
             "backoffs": self.n_backoffs,
             "latched": self.n_latched,
+            "restarts": self.n_restarts,
+            "last_sweep_s": self.last_sweep_s,
             "canary": self._canary,
             "replicas": reps,
         }

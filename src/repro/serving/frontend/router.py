@@ -85,14 +85,20 @@ class Replica:
     """One engine + its online scheduler loop, on its own thread."""
 
     def __init__(self, name: str, engine: EnsembleEngine,
-                 prefill_budget: Optional[int] = None):
+                 prefill_budget: Optional[int] = None,
+                 obs=True, trace_log: Optional[str] = None,
+                 profile_dir: Optional[str] = None):
         self.name = name
         self.engine = engine
         # never retain completions: a replica loop lives for the
         # process lifetime and delivers results via on_done — keeping
-        # every token array in .completions would leak without bound
+        # every token array in .completions would leak without bound.
+        # obs/trace_log/profile_dir ride through to the scheduler's
+        # observability layer (on by default; obs=False kill-switch).
         self.scheduler = Scheduler(engine, prefill_budget=prefill_budget,
-                                   retain_completions=False)
+                                   retain_completions=False, obs=obs,
+                                   trace_log=trace_log,
+                                   profile_dir=profile_dir)
         self.draining = False
         self.failed: Optional[str] = None  # loop-thread crash, if any
         self._thread: Optional[threading.Thread] = None
@@ -544,6 +550,37 @@ class Router:
             self._swap_one(rep, new_stacked_params, timeout)
 
     # -- telemetry ----------------------------------------------------------
+
+    def trace(self, rid: int,
+              replica: Optional[str] = None) -> Optional[Tuple[str, dict]]:
+        """Look up one request's span chain (GET /v1/trace/<rid>).
+        rids are per-replica, so pass `replica` to disambiguate (the
+        completion payload carries both); without it the first replica
+        holding the rid wins.  -> (replica name, trace dict) or None
+        when unknown / already evicted / observability off."""
+        reps = ([self._by_name[replica]]
+                if replica is not None and replica in self._by_name
+                else self.replicas)
+        if replica is not None and replica not in self._by_name:
+            return None
+        for rep in reps:
+            obs = rep.scheduler.obs
+            if obs is None:
+                continue
+            tr = obs.traces.get(rid)
+            if tr is not None:
+                return rep.name, tr.to_dict()
+        return None
+
+    def profile(self, ticks: int, out_dir: Optional[str] = None) -> str:
+        """Arm a jax.profiler window over the next `ticks` tick() calls
+        of the FIRST routable replica (device traces are process-wide —
+        arming several schedulers would double-start the profiler).
+        -> the armed replica's name (POST /admin/profile)."""
+        live = [r for r in self.replicas if r.routable] or self.replicas
+        rep = live[0]
+        rep.scheduler.profile_next_ticks(ticks, out_dir)
+        return rep.name
 
     def stats(self) -> dict:
         reps = [r.stats() for r in self.replicas]

@@ -58,14 +58,16 @@ import queue
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Optional
+from urllib.parse import parse_qs, urlsplit
 
+from repro.serving import obs as obs_mod
 from repro.serving.frontend.router import QueueFull, Router
 
 _DONE = object()  # queue sentinel: completion follows no more tokens
 
 
 def _completion_payload(comp, replica: str, rid: int) -> dict:
-    return {
+    p = {
         "tokens": [int(t) for t in comp.tokens],
         "n_gen": int(len(comp.tokens)),
         "prompt_len": int(comp.prompt_len),
@@ -74,6 +76,12 @@ def _completion_payload(comp, replica: str, rid: int) -> dict:
         "ttft_ms": round(comp.ttft * 1e3, 3),
         "latency_ms": round(comp.latency * 1e3, 3),
     }
+    if comp.trace is not None:
+        # the request's span chain rides the terminal payload (SSE
+        # `event: done` / the non-streamed JSON document) so clients
+        # get their trace without a second round trip
+        p["trace"] = comp.trace
+    return p
 
 
 class _Handler(BaseHTTPRequestHandler):
@@ -153,12 +161,32 @@ class _Handler(BaseHTTPRequestHandler):
             self.send_header("Content-Length", str(len(body)))
             self.end_headers()
             self.wfile.write(body)
+        elif self.path.startswith("/v1/trace/"):
+            url = urlsplit(self.path)
+            rid_s = url.path[len("/v1/trace/"):]
+            if not rid_s.isdigit():
+                self._send_json(400, {"error": "trace id must be an "
+                                               "integer rid"})
+                return
+            qs = parse_qs(url.query)
+            rep = (qs.get("replica") or [None])[0]
+            found = self.router.trace(int(rid_s), replica=rep)
+            if found is None:
+                self._send_json(404, {"error": f"no trace for rid "
+                                               f"{rid_s} (evicted, "
+                                               f"unknown, or obs off)"})
+                return
+            name, trace = found
+            self._send_json(200, {"replica": name, **trace})
         else:
             self._send_json(404, {"error": f"no route {self.path}"})
 
     def do_POST(self):
         if self.path == "/admin/swap":
             self._do_admin_swap()
+            return
+        if self.path == "/admin/profile":
+            self._do_admin_profile()
             return
         if self.path != "/v1/generate":
             self._send_json(404, {"error": f"no route {self.path}"})
@@ -294,6 +322,37 @@ class _Handler(BaseHTTPRequestHandler):
             return
         self._send_json(200, {"ok": True, **(result or {})})
 
+    def _do_admin_profile(self):
+        """POST /admin/profile {"ticks": N[, "dir": path]} — capture a
+        jax.profiler device trace of the next N scheduler ticks into
+        the server's --profile-dir (or the body's override dir).  The
+        window opens at the next tick boundary on the first routable
+        replica and closes N ticks later; load the output directory in
+        TensorBoard's profile plugin."""
+        body = self._read_body()
+        if body is None:
+            self._send_json(400, {"error": "body must be JSON"})
+            return
+        ticks = body.get("ticks")
+        if not isinstance(ticks, int) or isinstance(ticks, bool) \
+                or ticks < 1:
+            self._send_json(400, {"error": "need ticks: int >= 1"})
+            return
+        out_dir = body.get("dir") or self.frontend.profile_dir
+        if not out_dir:
+            self._send_json(400, {"error": "no profile dir: start the "
+                                           "server with --profile-dir "
+                                           "or pass \"dir\" in the "
+                                           "body"})
+            return
+        try:
+            name = self.router.profile(ticks, out_dir)
+        except RuntimeError as e:  # obs=False kill-switch
+            self._send_json(409, {"error": str(e)})
+            return
+        self._send_json(200, {"ok": True, "replica": name,
+                              "ticks": ticks, "dir": str(out_dir)})
+
 
 class _Server(ThreadingHTTPServer):
     daemon_threads = True
@@ -311,9 +370,12 @@ class FrontendServer:
 
     def __init__(self, router: Router, host: str = "127.0.0.1",
                  port: int = 0, verbose: bool = False,
-                 admin_swap=None):
+                 admin_swap=None, profile_dir: Optional[str] = None):
         self.router = router
         self.verbose = verbose
+        # default output dir for POST /admin/profile device traces
+        # (serve.py --profile-dir); a body "dir" still overrides
+        self.profile_dir = profile_dir
         # optional POST /admin/swap hook: callable(body_dict) -> dict,
         # raising ValueError for bad bodies.  Replica processes wire
         # one in (frontend/replica.py); plain frontends leave it off
@@ -351,92 +413,153 @@ class FrontendServer:
             self._thread = None
         self.router.stop(drain=drain, timeout=timeout)
 
+    # fleet-level families (unlabeled singletons)
+    _FLEET_FAMS = (
+        ("repro_serving_requests_submitted", "counter", "submitted",
+         "Requests accepted at the router door."),
+        ("repro_serving_requests_completed", "counter", "completed",
+         "Requests completed across the fleet."),
+        ("repro_serving_requests_rejected", "counter", "rejected",
+         "Requests rejected by door validation (HTTP 400)."),
+        ("repro_serving_requests_shed", "counter", "shed",
+         "Requests shed by backpressure (HTTP 429)."),
+        ("repro_serving_requests_cancelled", "counter", "cancelled",
+         "Requests cancelled before completion."),
+        ("repro_serving_backlog", "gauge", "backlog",
+         "Requests parked in the router backlog."),
+        ("repro_serving_queue_depth", "gauge", "queue_depth",
+         "Fleet-wide queued + in-flight requests."),
+        ("repro_serving_streamed_tokens", "counter", "streamed_tokens",
+         "Tokens delivered through streaming callbacks."),
+    )
+    # per-replica families: (family, type, stats key, help)
+    _REPLICA_FAMS = (
+        ("repro_serving_live_slots", "gauge", "live_slots",
+         "Slots holding an admitted request."),
+        ("repro_serving_pending", "gauge", "pending",
+         "Requests queued on the replica."),
+        ("repro_serving_peak_in_flight", "gauge", "peak_in_flight",
+         "High-water mark of concurrently admitted requests."),
+        ("repro_serving_preemptions", "counter", "preemptions",
+         "Paged decode-time evictions back to the queue."),
+        ("repro_serving_cancelled", "counter", "cancelled",
+         "Requests cancelled on the replica."),
+        ("repro_serving_steps_run", "counter", "steps_run",
+         "Engine decode programs dispatched."),
+        ("repro_serving_swaps_done", "counter", "swaps_done",
+         "Parameter hot-swaps performed."),
+        ("repro_serving_cache_bytes_per_device", "gauge",
+         "cache_bytes_per_device", "KV cache bytes per device."),
+    )
+    _PAGE_FAMS = (
+        ("repro_serving_total_pages", "gauge", "n_pages",
+         "KV pages in the pool."),
+        ("repro_serving_free_pages", "gauge", "free_pages",
+         "KV pages on the free list."),
+        ("repro_serving_available_pages", "gauge", "available_pages",
+         "Free + evictable KV pages."),
+        ("repro_serving_low_water_pages", "gauge", "low_water_pages",
+         "Minimum free pages observed."),
+        ("repro_serving_shared_pages", "gauge", "shared_pages",
+         "Pages referenced by more than one slot (COW)."),
+        ("repro_serving_kv_page_bytes", "gauge", "page_bytes",
+         "Bytes per KV page."),
+        ("repro_serving_kv_bytes_per_token", "gauge", "bytes_per_token",
+         "KV bytes per cached token."),
+        ("repro_serving_kv_quantized", "gauge", "kv_quantized",
+         "1 when paged KV planes are stored quantized."),
+    )
+    _PREFIX_FAMS = (
+        ("repro_serving_prefix_hit_rate", "gauge", "prefix_hit_rate",
+         "Fraction of prompt tokens served from the prefix cache."),
+        ("repro_serving_prefix_cached_pages", "gauge", "cached_pages",
+         "Pages held by the prefix trie."),
+        ("repro_serving_prefix_cow_pages", "counter", "cow_pages",
+         "Copy-on-write page copies performed."),
+        ("repro_serving_prefix_evicted_pages", "counter",
+         "evicted_pages", "Prefix pages evicted (LRU)."),
+    )
+    _SPEC_FAMS = (
+        ("repro_serving_spec_steps", "counter", "spec_steps",
+         "Speculative iterations run."),
+        ("repro_serving_spec_proposed", "counter", "proposed",
+         "Draft tokens proposed."),
+        ("repro_serving_spec_accepted", "counter", "accepted",
+         "Draft tokens accepted."),
+        ("repro_serving_spec_acceptance_rate", "gauge",
+         "acceptance_rate", "Accepted / proposed draft tokens."),
+        ("repro_serving_spec_mean_accepted_len", "gauge",
+         "mean_accepted_len", "Mean tokens emitted per iteration."),
+        ("repro_serving_spec_accepted_len_p50", "gauge",
+         "accepted_len_p50", "Median tokens emitted per iteration."),
+        ("repro_serving_spec_pruned_frac", "gauge", "pruned_frac",
+         "Fraction of member votes provably prunable at verify."),
+    )
+
     def metrics_text(self) -> str:
-        """Prometheus-style exposition of fleet + per-replica health."""
+        """Prometheus text exposition of fleet + per-replica health:
+        exactly one `# HELP`/`# TYPE` per family (no matter how many
+        replica-labeled samples follow), escaped label values, a
+        trailing newline — obs.parse_prometheus round-trips the whole
+        scrape, and the conformance test holds it to that.  Latency
+        histograms (TTFT, queue wait, inter-token, e2e) and the tick-
+        phase profiler ride along from each replica's ServingObs."""
         s = self.router.stats()
-        lines = [
-            "# TYPE repro_serving_requests_submitted counter",
-            f"repro_serving_requests_submitted {s['submitted']}",
-            "# TYPE repro_serving_requests_completed counter",
-            f"repro_serving_requests_completed {s['completed']}",
-            "# TYPE repro_serving_requests_rejected counter",
-            f"repro_serving_requests_rejected {s['rejected']}",
-            "# TYPE repro_serving_requests_shed counter",
-            f"repro_serving_requests_shed {s['shed']}",
-            "# TYPE repro_serving_requests_cancelled counter",
-            f"repro_serving_requests_cancelled {s['cancelled']}",
-            "# TYPE repro_serving_backlog gauge",
-            f"repro_serving_backlog {s['backlog']}",
-            "# TYPE repro_serving_queue_depth gauge",
-            f"repro_serving_queue_depth {s['queue_depth']}",
-            "# TYPE repro_serving_streamed_tokens counter",
-            f"repro_serving_streamed_tokens {s['streamed_tokens']}",
-        ]
+        fs = obs_mod.FamilySet()
+        for fam, mtype, key, help in self._FLEET_FAMS:
+            fs.declare(fam, mtype, help)
+            fs.sample(fam, None, s[key])
+        groups = [(self._REPLICA_FAMS, lambda r: r),
+                  (self._PAGE_FAMS, lambda r: r["page_stats"]),
+                  (self._PREFIX_FAMS, lambda r: r["page_stats"]),
+                  (self._SPEC_FAMS, lambda r: r.get("spec_stats"))]
+        for fams, _ in groups:
+            for fam, mtype, _, help in fams:
+                fs.declare(fam, mtype, help)
+        fs.declare("repro_serving_draining", "gauge",
+                   "1 while the replica refuses new routes.")
         for r in s["replicas"]:
-            lab = f'{{replica="{r["name"]}"}}'
-            lines += [
-                f"repro_serving_live_slots{lab} {r['live_slots']}",
-                f"repro_serving_pending{lab} {r['pending']}",
-                f"repro_serving_peak_in_flight{lab} {r['peak_in_flight']}",
-                f"repro_serving_preemptions{lab} {r['preemptions']}",
-                f"repro_serving_cancelled{lab} {r['cancelled']}",
-                f"repro_serving_steps_run{lab} {r['steps_run']}",
-                f"repro_serving_swaps_done{lab} {r['swaps_done']}",
-                f"repro_serving_draining{lab} {int(r['draining'])}",
-                f"repro_serving_cache_bytes_per_device{lab} "
-                f"{r['cache_bytes_per_device']}",
-            ]
-            ps = r["page_stats"]
-            if ps:
-                lines += [
-                    f"repro_serving_total_pages{lab} {ps['n_pages']}",
-                    f"repro_serving_free_pages{lab} {ps['free_pages']}",
-                    f"repro_serving_available_pages{lab} "
-                    f"{ps['available_pages']}",
-                    f"repro_serving_low_water_pages{lab} "
-                    f"{ps['low_water_pages']}",
-                    f"repro_serving_shared_pages{lab} "
-                    f"{ps['shared_pages']}",
-                    f"repro_serving_kv_page_bytes{lab} "
-                    f"{ps['page_bytes']}",
-                    f"repro_serving_kv_bytes_per_token{lab} "
-                    f"{ps['bytes_per_token']}",
-                    f"repro_serving_kv_quantized{lab} "
-                    f"{ps['kv_quantized']}",
-                ]
-            if "prefix_hit_rate" in ps:
-                lines += [
-                    f"repro_serving_prefix_hit_rate{lab} "
-                    f"{ps['prefix_hit_rate']:.6f}",
-                    f"repro_serving_prefix_cached_pages{lab} "
-                    f"{ps['cached_pages']}",
-                    f"repro_serving_prefix_cow_pages{lab} "
-                    f"{ps['cow_pages']}",
-                    f"repro_serving_prefix_evicted_pages{lab} "
-                    f"{ps['evicted_pages']}",
-                ]
-            sp = r.get("spec_stats") or {}
-            if sp:
-                lines += [
-                    f"repro_serving_spec_steps{lab} {sp['spec_steps']}",
-                    f"repro_serving_spec_proposed{lab} {sp['proposed']}",
-                    f"repro_serving_spec_accepted{lab} {sp['accepted']}",
-                    f"repro_serving_spec_acceptance_rate{lab} "
-                    f"{sp['acceptance_rate']:.6f}",
-                    f"repro_serving_spec_mean_accepted_len{lab} "
-                    f"{sp['mean_accepted_len']:.6f}",
-                    f"repro_serving_spec_accepted_len_p50{lab} "
-                    f"{sp['accepted_len_p50']:.6f}",
-                    f"repro_serving_spec_pruned_frac{lab} "
-                    f"{sp['pruned_frac']:.6f}",
-                ]
-        return "\n".join(lines) + "\n"
+            lab = {"replica": r["name"]}
+            for fams, pick in groups:
+                src = pick(r)
+                if not src:
+                    continue
+                for fam, _, key, _ in fams:
+                    if key in src:
+                        fs.sample(fam, lab, src[key])
+            fs.sample("repro_serving_draining", lab, int(r["draining"]))
+        # per-replica observability: histograms + tick phases
+        fs.declare("repro_serving_tick_phase_seconds_total", "counter",
+                   "Wall seconds spent per tick phase.")
+        fs.declare("repro_serving_tick_phase_count_total", "counter",
+                   "Times each tick phase ran.")
+        fs.declare("repro_serving_tick_phase_ema_seconds", "gauge",
+                   "EMA of per-tick phase wall seconds.")
+        for rep in self.router.replicas:
+            obs = rep.scheduler.obs
+            if obs is None:
+                continue
+            lab = {"replica": rep.name}
+            for h in obs.histograms():
+                fs.add_histogram(h, lab)
+            snap = obs.ticks.snapshot()
+            for phase, d in snap.items():
+                pl = {"replica": rep.name, "phase": phase}
+                fs.sample("repro_serving_tick_phase_seconds_total", pl,
+                          d["total_s"])
+                fs.sample("repro_serving_tick_phase_count_total", pl,
+                          d["count"])
+                fs.sample("repro_serving_tick_phase_ema_seconds", pl,
+                          d["ema_s"])
+        return fs.render()
 
 
 def serve_frontend(router: Router, host: str = "127.0.0.1",
-                   port: int = 8000, verbose: bool = True) -> FrontendServer:
+                   port: int = 8000, verbose: bool = True,
+                   profile_dir: Optional[str] = None) -> FrontendServer:
     """Convenience: build + start a FrontendServer; caller owns
     shutdown()."""
-    srv = FrontendServer(router, host=host, port=port, verbose=verbose)
+    srv = FrontendServer(router, host=host, port=port, verbose=verbose,
+                         profile_dir=profile_dir)
     srv.start()
     return srv

@@ -84,6 +84,7 @@ from typing import Callable, Dict, Optional
 import jax
 import numpy as np
 
+from repro.serving import obs as obs_mod
 from repro.serving.engine import EnsembleEngine
 
 # on_token(rid, index, token_id) — fired per generated token, in order
@@ -118,6 +119,9 @@ class Completion:
     admit_t: float
     first_token_t: Optional[float]
     finish_t: float
+    # the request's span chain (obs.Trace.to_dict()) when the
+    # scheduler's observability layer is on; None under obs=False
+    trace: Optional[dict] = None
 
     @property
     def ttft(self) -> float:
@@ -137,6 +141,9 @@ class _SlotMeta:
     admit_t: float
     first_token_t: Optional[float] = None
     prefill_left: int = 0       # prompt tokens not yet prefilled
+    prefill_chunks: int = 0     # chunk programs run (trace span index)
+    n_seen: int = 0             # tokens observed by harvest so far
+    last_token_m: Optional[float] = None  # monotonic last-token stamp
 
 
 class Scheduler:
@@ -165,8 +172,26 @@ class Scheduler:
 
     def __init__(self, engine: EnsembleEngine,
                  prefill_budget: Optional[int] = None,
-                 retain_completions: bool = True):
+                 retain_completions: bool = True,
+                 obs=True, trace_keep: int = 512,
+                 trace_log: Optional[str] = None,
+                 profile_dir: Optional[str] = None):
         self.engine = engine
+        # observability is ON by default; obs=False is the kill-switch
+        # (serving_bench --obs gates its decode cost at <2%).  Pass a
+        # prebuilt ServingObs to share or customize one.
+        if obs is True:
+            self.obs: Optional[obs_mod.ServingObs] = obs_mod.ServingObs(
+                trace_keep=trace_keep, trace_log=trace_log)
+        elif obs:
+            self.obs = obs
+        else:
+            self.obs = None
+        self.profile_dir = profile_dir
+        # SpeculativeEngine's live host mirror of which slots draft —
+        # harvest stamps spec_step(accepted) spans off it
+        self._spec_draft = (getattr(engine, "_host_draft", None)
+                            if hasattr(engine, "spec_stats") else None)
         self.prefill_budget = (2 * engine.prefill_chunk
                                if prefill_budget is None else prefill_budget)
         self.retain_completions = retain_completions
@@ -231,6 +256,10 @@ class Scheduler:
         with self._lock:
             rid = self._next_rid
             self._next_rid += 1
+            if self.obs is not None:
+                # start the trace BEFORE the request is visible to the
+                # loop thread, so the admit path always finds it
+                self.obs.traces.start(rid).add("enqueued")
             self.pending.append(Request(
                 rid, t, int(max_new), time.time(),
                 on_token=on_token, on_done=on_done,
@@ -277,6 +306,9 @@ class Scheduler:
         survivors = [r for r in self.pending if r.rid not in wanted]
         if len(survivors) != len(self.pending):
             self.n_cancelled += len(self.pending) - len(survivors)
+            for r in self.pending:
+                if r.rid in wanted:
+                    self._trace_cancelled(r.rid)
             self.pending = deque(survivors)
         for b, meta in enumerate(self.slots):
             if meta is not None and meta.req.rid in wanted:
@@ -284,6 +316,15 @@ class Scheduler:
                 self._to_release.append(b)
                 self._streamed.pop(meta.req.rid, None)
                 self.n_cancelled += 1
+                self._trace_cancelled(meta.req.rid)
+
+    def _trace_cancelled(self, rid: int):
+        if self.obs is None:
+            return
+        tr = self.obs.traces.live(rid)
+        if tr is not None:
+            tr.add("cancelled")
+            self.obs.retire(tr)
 
     # -- scheduling loop ----------------------------------------------------
 
@@ -324,6 +365,15 @@ class Scheduler:
                 self.slots[b] = _SlotMeta(
                     req, now,
                     prefill_left=len(req.tokens) if chunked else 0)
+                if self.obs is not None:
+                    tr = self.obs.traces.live(req.rid)
+                    if tr is not None:
+                        if tr.has("preempted"):
+                            tr.add("resumed")
+                        else:
+                            tr.add("admitted")
+                            self.obs.queue_wait.observe(
+                                obs_mod.MONO() - tr.t0)
         if admits or self._to_release:
             hits = self.engine.update_slots(
                 release=self._to_release, admits=admits)
@@ -336,6 +386,11 @@ class Scheduler:
                     if self.slots[b] is not None and hit > 0:
                         self.slots[b].prefill_left = max(
                             self.slots[b].prefill_left - int(hit), 1)
+                        if self.obs is not None:
+                            tr = self.obs.traces.live(
+                                self.slots[b].req.rid)
+                            if tr is not None:
+                                tr.add("prefix_hit", int(hit))
         self.peak_in_flight = max(self.peak_in_flight, self.live_slots)
 
     def _ensure_decode_pages(self):
@@ -366,6 +421,10 @@ class Scheduler:
             # appendleft re-sorts the queue into submission order
             self.pending.appendleft(meta.req)
             self.preemptions += 1
+            if self.obs is not None:
+                tr = self.obs.traces.live(meta.req.rid)
+                if tr is not None:
+                    tr.add("preempted")
 
     def _run_prefill(self) -> int:
         """Spend the iteration's prefill budget in admission (FIFO)
@@ -387,6 +446,11 @@ class Scheduler:
             spent += take
             ran += 1
             meta.prefill_left -= take
+            if self.obs is not None:
+                tr = self.obs.traces.live(meta.req.rid)
+                if tr is not None:
+                    tr.add("prefill_chunk", meta.prefill_chunks)
+            meta.prefill_chunks += 1
         return ran
 
     def _decode_ready(self) -> bool:
@@ -412,13 +476,36 @@ class Scheduler:
         # along with the done/n_gen flags instead of a per-slot fetch
         done, n_gen, out = jax.device_get((st.done, st.n_gen, st.out))
         now = time.time()
+        obs = self.obs
+        now_m = obs_mod.MONO() if obs is not None else 0.0
         for b, meta in enumerate(self.slots):
             if meta is None:
                 continue
-            if meta.first_token_t is None and n_gen[b] > 0:
+            first = meta.first_token_t is None and n_gen[b] > 0
+            if first:
                 meta.first_token_t = now
             if meta.req.on_token is not None and n_gen[b] > 0:
                 self._stream(meta, n_gen[b], out[b])
+            if obs is not None:
+                n_new = int(n_gen[b]) - meta.n_seen
+                if n_new > 0:
+                    tr = obs.traces.live(meta.req.rid)
+                    if first:
+                        if tr is not None:
+                            tr.add("first_token")
+                            obs.ttft.observe(now_m - tr.t0)
+                    elif (tr is not None and self._spec_draft is not None
+                          and self._spec_draft[b]):
+                        # one speculative iteration emitted n_new
+                        # tokens: n_new-1 accepted drafts + the
+                        # verifier's own token
+                        tr.add("spec_step", n_new - 1)
+                    if meta.last_token_m is not None:
+                        dt = (now_m - meta.last_token_m) / n_new
+                        for _ in range(n_new):
+                            obs.inter_token.observe(dt)
+                    meta.last_token_m = now_m
+                    meta.n_seen = int(n_gen[b])
             if done[b]:
                 req = meta.req
                 comp = Completion(
@@ -427,6 +514,13 @@ class Scheduler:
                     prompt_len=len(req.tokens),
                     submit_t=req.submit_t, admit_t=meta.admit_t,
                     first_token_t=meta.first_token_t, finish_t=now)
+                if obs is not None:
+                    tr = obs.traces.live(req.rid)
+                    if tr is not None:
+                        tr.add("done")
+                        obs.latency.observe(now_m - tr.t0)
+                        comp.trace = tr.to_dict()
+                        obs.retire(tr)
                 if self.retain_completions:
                     self.completions[req.rid] = comp
                 self.n_completed += 1
@@ -452,8 +546,20 @@ class Scheduler:
         next admission to batch the dispatch — an idle or draining
         server must not sit on freed capacity."""
         if self._to_release:
+            t0 = obs_mod.MONO() if self.obs is not None else 0.0
             self.engine.update_slots(release=self._to_release)
             self._to_release = []
+            if self.obs is not None:
+                self.obs.ticks.add("release", obs_mod.MONO() - t0)
+
+    def profile_next_ticks(self, ticks: int,
+                           out_dir: Optional[str] = None):
+        """Arm a jax.profiler window over the next `ticks` tick()
+        calls (POST /admin/profile drives this).  out_dir defaults to
+        the profile_dir the scheduler was built with."""
+        if self.obs is None:
+            raise RuntimeError("observability disabled (obs=False)")
+        self.obs.ticks.arm_profile(ticks, out_dir or self.profile_dir)
 
     def tick(self) -> bool:
         """One admit -> decode -> prefill -> harvest iteration — the
@@ -461,17 +567,47 @@ class Scheduler:
         server loop can interleave it with submits from other threads.
         Returns whether any engine program was dispatched (False means
         the caller may idle).
+
+        With observability on, each phase's wall time lands in
+        obs.ticks (repro_serving_tick_phase_seconds_total on /metrics);
+        the obs=False path below is the untimed kill-switch baseline
+        the <2% overhead gate compares against.
         """
-        self._apply_cancels()  # a cancelled queued request never admits
+        if self.obs is None:
+            self._apply_cancels()  # cancelled queued request never admits
+            self._fill_slots()
+            stepped = False
+            if self._decode_ready():  # skip decode while all mid-prompt
+                self._ensure_decode_pages()  # paged: grow or preempt
+                if self._decode_ready():     # preemption may empty set
+                    self.engine.step()
+                    stepped = True
+            prefilled = self._run_prefill()
+            self._harvest()
+            return stepped or prefilled > 0
+        tp = self.obs.ticks
+        tp.tick_begin()              # opens an armed profiler window
+        t0 = obs_mod.MONO()
+        self._apply_cancels()
         self._fill_slots()
+        t1 = obs_mod.MONO()
+        tp.add("admit", t1 - t0)
         stepped = False
-        if self._decode_ready():  # skip decode while all mid-prompt
-            self._ensure_decode_pages()  # paged: grow or preempt
-            if self._decode_ready():     # preemption may empty the set
+        if self._decode_ready():
+            self._ensure_decode_pages()
+            if self._decode_ready():
                 self.engine.step()
                 stepped = True
+            t2 = obs_mod.MONO()
+            tp.add("decode", t2 - t1)
+            t1 = t2
         prefilled = self._run_prefill()
+        t2 = obs_mod.MONO()
+        tp.add("prefill", t2 - t1)
         self._harvest()
+        tp.add("harvest", obs_mod.MONO() - t2)
+        tp.ticks += 1
+        tp.tick_end()
         return stepped or prefilled > 0
 
     def run(self) -> Dict[int, Completion]:
